@@ -1,0 +1,42 @@
+"""Paper Fig. 5: which model variants and segment types JigsawServe picks
+per task across demand levels (the variant/segment histograms)."""
+from collections import Counter
+from typing import Dict
+
+from repro.core.apps import APPS, get_app
+from repro.core.milp import Planner
+from repro.core.profiler import Profiler
+
+S_AVAIL = 64
+DEMANDS = (5.0, 40.0, 250.0)
+
+
+def run(csv=print) -> Dict[str, Dict[str, Counter]]:
+    out: Dict[str, Dict[str, Counter]] = {}
+    for app in APPS:
+        g = get_app(app)
+        prof = Profiler(g)
+        planner = Planner(g, prof, s_avail=S_AVAIL,
+                          max_tuples_per_task=40, bb_nodes=4, bb_time_s=1.0)
+        variants: Dict[str, Counter] = {t: Counter() for t in g.tasks}
+        segments: Dict[str, Counter] = {t: Counter() for t in g.tasks}
+        for R in DEMANDS:
+            cfg = planner.plan(R)
+            if cfg is None:
+                continue
+            for tup, m in cfg.instances():
+                variants[tup.task][tup.variant] += m
+                segments[tup.task][tup.segment] += m
+        out[app] = {"variants": variants, "segments": segments}
+        for t in g.tasks:
+            vstr = " ".join(f"{v}:{c}" for v, c in
+                            variants[t].most_common())
+            sstr = " ".join(f"{s}:{c}" for s, c in
+                            segments[t].most_common())
+            csv(f"configs,{app},{t},variants,{vstr}")
+            csv(f"configs,{app},{t},segments,{sstr}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,75 @@
+"""Paper Fig. 4: empirical trace evaluation of the four best systems
+(S+T, A+T ≈ Loki, A+S ≈ Clover+MPS, JigsawServe) on all three
+applications — resource %, accuracy drop, SLO violation rate at low/high/
+average demand conditions."""
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.apps import APPS, get_app
+from repro.core.baselines import EMPIRICAL_BASELINES
+from repro.core.controller import Controller
+from repro.core.profiler import Profiler
+from repro.core.trace import diurnal_trace
+
+S_AVAIL = 64           # the empirical testbed (paper: 4 H100 = 28 slices)
+BINS = 5
+SIM_SECONDS = 5.0
+
+
+def run(csv=print) -> Dict[str, Dict[str, List[float]]]:
+    out: Dict[str, Dict[str, List[float]]] = {}
+    for app in APPS:
+        g = get_app(app)
+        prof = Profiler(g)
+        stale = 40.0 if app == "ar_assistant" else 20.0
+        # scale the trace to ~90% of what JigsawServe can serve (paper
+        # scales to the max JigsawServe demand)
+        ref = Controller(g, prof, S_AVAIL,
+                         features=EMPIRICAL_BASELINES["JigsawServe"],
+                         staleness_ms=stale,
+                         planner_kwargs=dict(max_tuples_per_task=36,
+                                             bb_nodes=3, bb_time_s=0.8))
+        peak = ref.max_serviceable_demand() * 0.9
+        trace = diurnal_trace(seed=7, bins=BINS).scaled_to_max(peak)
+        for sysname, fs in EMPIRICAL_BASELINES.items():
+            t0 = time.time()
+            ctl = Controller(g, prof, S_AVAIL, features=fs,
+                             staleness_ms=stale,
+                             planner_kwargs=dict(max_tuples_per_task=36,
+                                                 bb_nodes=3, bb_time_s=0.8))
+            res, acc, viol = [], [], []
+            for i, R in enumerate(trace.rps):
+                try:
+                    rep = ctl.step(i, float(R), sim_seconds=SIM_SECONDS,
+                                   seed=100 + i)
+                except RuntimeError:
+                    res.append(100.0)
+                    acc.append(0.0)
+                    viol.append(100.0)
+                    continue
+                res.append(100.0 * rep.slices_used / S_AVAIL)
+                acc.append(rep.accuracy_drop_pct)
+                viol.append(100.0 * rep.violation_rate)
+            out.setdefault(app, {})[sysname] = [float(np.mean(res)),
+                                                float(np.mean(acc)),
+                                                float(np.mean(viol))]
+            lo = np.argsort(trace.rps)[:3]
+            hi = np.argsort(trace.rps)[-3:]
+            csv(f"empirical,{app},{sysname},"
+                f"res%={np.mean(res):.1f},accdrop%={np.mean(acc):.2f},"
+                f"viol%={np.mean(viol):.2f},"
+                f"viol_lo%={np.mean(np.array(viol)[lo]):.2f},"
+                f"viol_hi%={np.mean(np.array(viol)[hi]):.2f},"
+                f"{time.time()-t0:.0f}s")
+    # headline: JigsawServe average resource use + violations
+    all_res = [v["JigsawServe"][0] for v in out.values()]
+    all_vio = [v["JigsawServe"][2] for v in out.values()]
+    csv(f"empirical_headline,JigsawServe,res%={np.mean(all_res):.1f},"
+        f"viol%={np.mean(all_vio):.2f},paper=43.3%/0.6%")
+    return out
+
+
+if __name__ == "__main__":
+    run()

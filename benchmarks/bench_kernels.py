@@ -1,0 +1,100 @@
+"""Kernel micro-benchmarks: Pallas (interpret mode — CPU container) vs
+the pure-jnp oracle, correctness deltas + derived TPU roofline estimates
+for the production shapes (the kernels TARGET TPU; wall-clock here is
+CPU-emulation and reported only as a sanity signal)."""
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hw
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.quant_matmul import quant_matmul_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+
+def _flash_case():
+    B, S, H, KV, hd = 1, 1024, 8, 2, 128
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
+    out = flash_attention_pallas(q, k, v, causal=True, block_q=256,
+                                 block_kv=256, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    err = float(np.max(np.abs(np.asarray(out) - np.asarray(want))))
+    flops = 2.0 * 2 * B * H * S * S * hd / 2   # causal halves
+    # v5e roofline latency for this tile workload
+    t_tpu = flops / hw.PEAK_FLOPS_BF16
+    return err, flops, t_tpu
+
+
+def _decode_case():
+    B, S, KV, G, hd = 8, 32768, 8, 8, 128
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (B, 1, KV * G, hd), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, S, KV, hd), jnp.bfloat16)
+    vc = jax.random.normal(ks[2], (B, S, KV, hd), jnp.bfloat16)
+    # interpret-mode at 32k is slow on CPU; validate at a 2k slice
+    s = 2048
+    out = decode_attention_pallas(q, kc[:, :s], vc[:, :s], jnp.int32(s - 1),
+                                  block_kv=256, interpret=True)
+    want = ref.decode_attention_ref(q, kc[:, :s], vc[:, :s],
+                                    jnp.int32(s - 1))
+    err = float(np.max(np.abs(np.asarray(out, np.float32)
+                              - np.asarray(want, np.float32))))
+    bytes_moved = 2 * B * S * KV * hd * 2       # k+v cache read, bf16
+    t_tpu = bytes_moved / hw.HBM_BW
+    return err, bytes_moved, t_tpu
+
+
+def _ssd_case():
+    B, S, nh, hd, ds = 1, 2048, 24, 64, 128     # mamba2-130m geometry
+    ks = jax.random.split(jax.random.key(2), 5)
+    x = jax.random.normal(ks[0], (B, S, nh, hd), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, nh)))
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, S, ds))
+    Cm = jax.random.normal(ks[4], (B, S, ds))
+    y, fin = ssd_scan_pallas(x, dt, A, Bm, Cm, chunk=128, interpret=True)
+    yr, _ = ref.ssd_ref(x, dt, A, Bm, Cm)
+    err = float(np.max(np.abs(np.asarray(y) - np.asarray(yr))))
+    q = 128
+    flops = B * nh * (S / q) * (2 * q * q * ds + 2 * q * q * hd
+                                + 4 * q * hd * ds)
+    return err, flops, flops / hw.PEAK_FLOPS_BF16
+
+
+def _quant_case():
+    M, K, N = 512, 2048, 512
+    ks = jax.random.split(jax.random.key(3), 2)
+    xq, xs = ref.quantize_int8(jax.random.normal(ks[0], (M, K)), axis=-1)
+    wq, ws = ref.quantize_int8(jax.random.normal(ks[1], (K, N)), axis=0)
+    out = quant_matmul_pallas(xq, wq, xs, ws, interpret=True)
+    want = ref.quant_matmul_ref(xq, wq, xs, ws)
+    err = float(np.max(np.abs(np.asarray(out) - np.asarray(want))))
+    flops = 2.0 * M * K * N
+    return err, flops, flops / hw.PEAK_FLOPS_INT8
+
+
+def run(csv=print) -> Dict[str, float]:
+    out = {}
+    for name, fn in (("flash_attention", _flash_case),
+                     ("decode_attention", _decode_case),
+                     ("ssd_scan", _ssd_case),
+                     ("quant_matmul", _quant_case)):
+        t0 = time.time()
+        err, work, t_tpu = fn()
+        out[name] = err
+        csv(f"kernel,{name},max_err={err:.2e},work={work:.3e},"
+            f"tpu_roofline={t_tpu*1e6:.1f}us,cpu_interpret="
+            f"{time.time()-t0:.1f}s")
+    return out
+
+
+if __name__ == "__main__":
+    run()

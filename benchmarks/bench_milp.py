@@ -1,0 +1,39 @@
+"""Paper §5.1: MILP/controller solve time across demand conditions and
+applications (paper envelope: 2-20 s on Gurobi; ours must stay inside)."""
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.apps import APPS, get_app
+from repro.core.milp import Planner
+from repro.core.profiler import Profiler
+
+S_AVAIL = 256
+DEMANDS = (10.0, 100.0, 800.0)
+
+
+def run(csv=print) -> Dict[str, List[float]]:
+    out: Dict[str, List[float]] = {}
+    for app in APPS:
+        g = get_app(app)
+        prof = Profiler(g)
+        planner = Planner(g, prof, s_avail=S_AVAIL,
+                          max_tuples_per_task=48, bb_nodes=8,
+                          bb_time_s=2.0)
+        times = []
+        for R in DEMANDS:
+            t0 = time.time()
+            cfg = planner.plan(R)
+            dt = time.time() - t0
+            times.append(dt)
+            csv(f"milp,{app},R={R:.0f},{dt*1e3:.0f},ms,"
+                f"{'ok' if cfg else 'infeasible'}")
+        out[app] = times
+        csv(f"milp_summary,{app},mean={np.mean(times)*1e3:.0f}ms,"
+            f"max={np.max(times)*1e3:.0f}ms,paper=2-20s")
+    return out
+
+
+if __name__ == "__main__":
+    run()

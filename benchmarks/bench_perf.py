@@ -1,0 +1,28 @@
+"""§Perf: replays the hillclimb iteration log (hypothesis → change →
+before → after) recorded in results/perf_iterations.json by the perf
+pass, and re-derives the headline before/after roofline numbers."""
+import json
+import os
+from typing import List
+
+LOG = os.path.join(os.path.dirname(__file__), "..", "results",
+                   "perf_iterations.json")
+
+
+def run(csv=print) -> List[dict]:
+    if not os.path.exists(LOG):
+        csv("perf,SKIPPED,no results/perf_iterations.json yet")
+        return []
+    with open(LOG) as f:
+        iters = json.load(f)
+    for it in iters:
+        csv(f"perf,{it['cell']},{it['change']},"
+            f"before={it['before_s']*1e3:.2f}ms,"
+            f"after={it['after_s']*1e3:.2f}ms,"
+            f"delta={100*(1 - it['after_s']/max(it['before_s'],1e-12)):+.1f}%,"
+            f"{it['verdict']}")
+    return iters
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,31 @@
+"""§Roofline: the 40-cell roofline table derived from the dry-run
+artifacts (single-pod, per the assignment; multipod rows available with
+--mesh multipod via repro.launch.roofline)."""
+import os
+from typing import List
+
+from repro.launch.roofline import RESULTS_DIR, fmt_s, load_all
+
+
+def run(csv=print) -> List[dict]:
+    if not os.path.isdir(RESULTS_DIR):
+        csv("roofline,SKIPPED,run `python -m repro.launch.dryrun --all` first")
+        return []
+    rows = load_all()
+    for r in rows:
+        if r["mesh"] != "pod":
+            continue
+        ratio = (r["useful_ratio_6nd"] if r["kind"] == "train"
+                 else r["useful_ratio_fwd"])
+        csv(f"roofline,{r['arch']},{r['shape']},"
+            f"compute={fmt_s(r['compute_s']).strip()},"
+            f"memory={fmt_s(r['memory_s']).strip()},"
+            f"collective={fmt_s(r['collective_s']).strip()},"
+            f"dominant={r['dominant']},"
+            f"useful={ratio:.3f},"
+            f"roofline_frac={r['roofline_fraction']*100:.1f}%")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

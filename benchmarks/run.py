@@ -1,0 +1,43 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Prints ``name,key,value,...`` CSV lines per benchmark.
+"""
+import argparse
+import time
+
+from benchmarks import (bench_capacity, bench_configs, bench_empirical,
+                        bench_kernels, bench_milp, bench_perf,
+                        bench_roofline)
+
+ALL = {
+    "kernels": bench_kernels,        # kernel vs oracle + TPU roofline
+    "milp": bench_milp,              # paper §5.1 solve times
+    "capacity": bench_capacity,      # paper Fig. 3
+    "configs": bench_configs,        # paper Fig. 5
+    "empirical": bench_empirical,    # paper Fig. 4
+    "roofline": bench_roofline,      # assignment §Roofline
+    "perf": bench_perf,              # assignment §Perf iterations
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=sorted(ALL), default=None)
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(ALL)
+    t_all = time.time()
+    for name in names:
+        print(f"### benchmark: {name}")
+        t0 = time.time()
+        try:
+            ALL[name].run()
+        except Exception as e:  # noqa: BLE001 — keep the harness going
+            print(f"{name},ERROR,{type(e).__name__}: {e}")
+        print(f"### {name} done in {time.time()-t0:.1f}s\n")
+    print(f"### all benchmarks done in {time.time()-t_all:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

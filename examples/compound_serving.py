@@ -1,0 +1,68 @@
+"""End-to-end compound serving with REAL model execution (the paper's
+kind of system, scaled to this container): a depth-2 task chain —
+classify → caption — where each task runs a reduced LM through the real
+Engine + Batcher datapath on CPU, with deadlines and drops.
+
+    PYTHONPATH=src python examples/compound_serving.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.models import Model
+from repro.serving.batcher import Batcher, ServeRequest
+from repro.serving.engine import Engine, EngineConfig
+from repro.sharding.policy import ShardingPolicy
+
+rng = np.random.default_rng(0)
+
+
+def build_engine(arch_name: str, max_batch: int) -> Engine:
+    arch = ARCHS[arch_name].reduced()
+    model = Model(arch, ShardingPolicy(mesh=None), param_dtype=jnp.float32)
+    params = model.init(jax.random.key(hash(arch_name) % 2**31))
+    return Engine(model, params, EngineConfig(max_batch=max_batch,
+                                              max_seq=96))
+
+
+# --- two tasks, each a model instance with its own batcher ---------------
+classify = Batcher(build_engine("granite-3-2b", max_batch=4),
+                   timeout_ms=30.0, max_new=4)
+caption = Batcher(build_engine("gemma-2b", max_batch=4),
+                  timeout_ms=30.0, max_new=8)
+
+# --- drive a small request stream through the chain -----------------------
+N = 12
+t0 = time.monotonic()
+for i in range(N):
+    vocab = classify.engine.model.arch.vocab_size
+    prompt = rng.integers(0, vocab, size=12).astype(np.int32)
+    classify.submit(ServeRequest(i, prompt, deadline_s=t0 + 30.0,
+                                 submitted_s=time.monotonic()))
+
+completed = 0
+chained = {}
+while completed < N:
+    for r in classify.pump():       # stage 1 done → feed stage 2
+        vocab2 = caption.engine.model.arch.vocab_size
+        follow = np.concatenate([r.result.astype(np.int32) % vocab2,
+                                 rng.integers(0, vocab2, 8,
+                                              dtype=np.int32)])
+        caption.submit(ServeRequest(r.req_id, follow,
+                                    deadline_s=r.deadline_s,
+                                    submitted_s=time.monotonic()))
+        chained[r.req_id] = r.result
+    for r in caption.pump():
+        completed += 1
+        print(f"req {r.req_id:2d}: classify={chained[r.req_id][:4]} "
+              f"caption={r.result[:8]}")
+    time.sleep(0.005)
+
+dt = time.monotonic() - t0
+print(f"\nserved {completed} compound requests in {dt:.1f}s "
+      f"({completed/dt:.1f} rps end-to-end), "
+      f"batches: classify={classify.served}, caption={caption.served}, "
+      f"drops={classify.dropped + caption.dropped}")

@@ -1,0 +1,19 @@
+"""The paper's contribution: JigsawServe for TPU pods.
+
+Compound-inference serving with joint optimization of (A) per-task model
+variants, (S) fine-grained TPU segment allocation, and (T) task-graph-
+informed latency/accuracy/resource budgeting — paper Eq. 1-14 plus the
+runtime (batching, early-drop, controller loop, placement).
+"""
+from repro.core.taskgraph import Task, TaskGraph, Variant
+from repro.core.milp import FeatureSet, PlanConfig, Planner
+from repro.core.profiler import Profiler
+from repro.core.registry import Registration, RegistrationError, register
+from repro.core.controller import Controller
+from repro.core.simulator import SimMetrics, Simulator
+
+__all__ = [
+    "Task", "TaskGraph", "Variant", "FeatureSet", "PlanConfig", "Planner",
+    "Profiler", "Registration", "RegistrationError", "register",
+    "Controller", "SimMetrics", "Simulator",
+]

@@ -1,0 +1,152 @@
+"""The controller (paper §3.1-3.2): demand prediction → MILP → placement →
+reconfiguration, driven per demand-timestamp bin.
+
+Also the fault-tolerance / elasticity brain: on capacity change (failed
+chips or added pods) it re-solves with the adjusted ``S_avail`` and the
+placer routes around dead hosts.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.milp import FeatureSet, PlanConfig, Planner
+from repro.core.placement import Placement, Placer
+from repro.core.profiler import Profiler
+from repro.core.simulator import SimMetrics, Simulator
+from repro.core.taskgraph import TaskGraph
+from repro.core.trace import DemandTrace, predict_demand
+
+
+@dataclass
+class BinReport:
+    bin_idx: int
+    demand_actual: float
+    demand_predicted: float
+    slices_used: int
+    replanned: bool
+    milp_ms: float
+    violation_rate: float
+    accuracy_drop_pct: float      # vs A_max, in percent
+    completions: int
+    p99_ms: float
+
+
+@dataclass
+class Controller:
+    graph: TaskGraph
+    profiler: Profiler
+    s_avail: int
+    features: FeatureSet = field(default_factory=FeatureSet)
+    slack: float = 0.05                   # paper §4.4
+    replan_threshold: float = 0.10        # re-plan when prediction moves 10%
+    violation_trigger: float = 0.05       # or the SLO violation rate spikes
+    staleness_ms: float = 20.0
+    num_pods: int = 2
+    planner_kwargs: dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        self.planner = Planner(self.graph, self.profiler, self.s_avail,
+                               features=self.features, **self.planner_kwargs)
+        self._config: Optional[PlanConfig] = None
+        self._planned_for: float = -1.0
+        self._history: List[float] = []
+        self._fbar: Dict[Tuple[str, str], float] = {}
+        self.milp_times_ms: List[float] = []
+
+    # ------------------------------------------------------------------
+    def step(self, bin_idx: int, demand_actual: float, *,
+             sim_seconds: float = 12.0, seed: int = 0,
+             dead_chips: int = 0) -> BinReport:
+        """One demand-timestamp bin: predict → (re)plan → simulate."""
+        predicted = predict_demand(self._history + [demand_actual],
+                                   self.slack) if self._history else \
+            demand_actual * (1 + self.slack)
+        self._history.append(demand_actual)
+
+        replanned = False
+        milp_ms = 0.0
+        need = (self._config is None
+                or abs(predicted - self._planned_for)
+                > self.replan_threshold * max(self._planned_for, 1e-9))
+        s_now = self.s_avail - dead_chips
+        if need:
+            t0 = time.monotonic()
+            self.planner.s_avail = s_now
+            cfg = self.planner.plan(predicted, self._fbar or None)
+            milp_ms = (time.monotonic() - t0) * 1e3
+            self.milp_times_ms.append(milp_ms)
+            if cfg is not None:
+                self._config = cfg
+                self._planned_for = predicted
+                replanned = True
+            elif self._config is None:
+                # fall back to the highest plannable demand (paper §5:
+                # "uses the configuration that can serve the highest demand")
+                cfg = self._plan_max(s_now)
+                if cfg is None:
+                    raise RuntimeError("no feasible config at any demand")
+                self._config = cfg
+                self._planned_for = predicted
+                replanned = True
+
+        sim = Simulator(self.graph, self._config, seed=seed,
+                        staleness_ms=self.staleness_ms)
+        metrics = sim.run(demand_actual, duration_s=sim_seconds,
+                          warmup_s=min(3.0, sim_seconds / 4))
+        # runtime profile refinement (paper §3.1): EWMA of realized latency
+        acc_drop = (1.0 - metrics.realized_a_obj(self.graph)) * 100.0
+        if metrics.violation_rate > self.violation_trigger:
+            self._planned_for = -1.0  # force a re-plan next bin
+        return BinReport(
+            bin_idx=bin_idx,
+            demand_actual=demand_actual,
+            demand_predicted=predicted,
+            slices_used=self._config.slices,
+            replanned=replanned,
+            milp_ms=milp_ms,
+            violation_rate=metrics.violation_rate,
+            accuracy_drop_pct=acc_drop,
+            completions=metrics.completions,
+            p99_ms=metrics.p99_ms,
+        )
+
+    # ------------------------------------------------------------------
+    def _plan_max(self, s_now: int) -> Optional[PlanConfig]:
+        lo, hi = 1.0, 1.0
+        best = None
+        while hi < 1e6:
+            cfg = self.planner.plan(hi)
+            if cfg is None:
+                break
+            best, lo = cfg, hi
+            hi *= 2
+        return best
+
+    # ------------------------------------------------------------------
+    def place(self) -> Optional[List[Placement]]:
+        """Bin-pack the current config's segments onto pods."""
+        if self._config is None:
+            return None
+        segs: List[str] = []
+        for tup, m in self._config.instances():
+            segs.extend([tup.segment] * m)
+        return Placer(self.num_pods).pack(segs)
+
+    def max_serviceable_demand(self, hi_cap: float = 1e6) -> float:
+        """Binary-search the largest plannable demand (Fig. 3 metric)."""
+        best, R = 0.0, 1.0
+        while R <= hi_cap and self.planner.plan(R) is not None:
+            best = R
+            R *= 2
+        lo, hi = best, R
+        for _ in range(6):
+            mid = (lo + hi) / 2
+            if self.planner.plan(mid) is not None:
+                lo = mid
+            else:
+                hi = mid
+        return lo

@@ -1,0 +1,80 @@
+"""Per-instance batching and early dropping (paper §3.3).
+
+Each model instance owns a queue.  A batch launches when it is full OR the
+oldest request has waited the task's batch-formation timeout L̂(t) (and the
+instance is idle).  Before executing, the instance early-drops requests
+that (a) cannot meet their deadline even if the *fastest* variants of all
+remaining tasks serve them instantly, or (b) have gone stale in the queue.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.milp import TupleVar
+
+
+@dataclass
+class QueuedRequest:
+    req_id: int
+    root_id: int
+    task: str
+    enqueue_t: float
+    deadline: float
+    path_done: Tuple[str, ...] = ()
+
+
+@dataclass
+class InstanceState:
+    """Runtime state of one deployed model instance."""
+    tup: TupleVar
+    idx: int
+    busy_until: float = 0.0
+    queue: List[QueuedRequest] = field(default_factory=list)
+    served: int = 0
+    dropped: int = 0
+
+    @property
+    def batch_size(self) -> int:
+        return self.tup.batch
+
+    @property
+    def service_ms(self) -> float:
+        return self.tup.latency_ms
+
+    def ready_batch(self, now: float, timeout_ms: float) -> bool:
+        """Launch condition: full batch, or oldest waited >= timeout."""
+        if not self.queue or self.busy_until > now:
+            return False
+        if len(self.queue) >= self.batch_size:
+            return True
+        oldest_wait = (now - self.queue[0].enqueue_t) * 1e3
+        return oldest_wait >= timeout_ms
+
+    def next_event_time(self, now: float, timeout_ms: float
+                        ) -> Optional[float]:
+        """When should the simulator re-examine this instance?"""
+        if not self.queue:
+            return None
+        t_timeout = self.queue[0].enqueue_t + timeout_ms / 1e3
+        return max(self.busy_until, min(now, t_timeout)
+                   if len(self.queue) >= self.batch_size else t_timeout)
+
+
+def early_drop(req: QueuedRequest, now: float,
+               fastest_remaining_ms: float, staleness_ms: float,
+               timeout_ms: float = 0.0) -> Optional[str]:
+    """Returns a drop reason or None (paper §3.3).
+
+    * stale: the request waited past one batch-formation window PLUS one
+      in-flight batch (the 2·L̂ the latency model budgets per task,
+      Eq. 3) by more than the staleness allowance — i.e. every instance
+      kept its batches full and never picked the request up;
+    * deadline_unreachable: even the fastest variants of all remaining
+      tasks with zero batch-formation delay would miss the deadline."""
+    wait_ms = (now - req.enqueue_t) * 1e3
+    if wait_ms > 2.0 * timeout_ms + staleness_ms:
+        return "stale"
+    if now + fastest_remaining_ms / 1e3 > req.deadline:
+        return "deadline_unreachable"
+    return None

@@ -1,0 +1,74 @@
+"""Frontend (paper §3.1): request intake, deadline stamping, demand
+tracking, and controller triggering.
+
+In the simulated cluster the Simulator plays the datapath role; the
+Frontend is the control-plane face: it bins arrivals into demand
+timestamps, exposes the observed-demand history the predictor consumes,
+and raises the re-plan trigger when demand shifts or violations spike.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.taskgraph import TaskGraph
+
+
+@dataclass
+class RequestMeta:
+    req_id: int
+    arrival_s: float
+    deadline_s: float
+
+
+@dataclass
+class Frontend:
+    graph: TaskGraph
+    bin_seconds: float = 300.0
+    comm_hop_ms: float = 10.0     # paper §4.4: per-hop communication latency
+
+    def __post_init__(self):
+        self._ids = itertools.count()
+        self._bin_counts: List[int] = [0]
+        self._bin_idx = 0
+        self.violations_this_bin = 0
+        self.requests_this_bin = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def effective_slo_ms(self) -> float:
+        """End-to-end SLO plus per-hop communication allowance
+        (paper §4.4: +~10 ms per hop by application depth)."""
+        return (self.graph.slo_latency_ms
+                + self.comm_hop_ms * self.graph.depth)
+
+    def submit(self, now_s: float) -> RequestMeta:
+        """Stamp metadata (request id + deadline) and count demand."""
+        b = int(now_s // self.bin_seconds)
+        while b >= len(self._bin_counts):
+            self._bin_counts.append(0)
+        self._bin_counts[b] += 1
+        self.requests_this_bin += 1
+        return RequestMeta(next(self._ids), now_s,
+                           now_s + self.effective_slo_ms / 1e3)
+
+    def record_violation(self):
+        self.violations_this_bin += 1
+
+    # ------------------------------------------------------------------
+    def observed_demand(self) -> List[float]:
+        """Demand (rps) per completed bin — the predictor's history."""
+        return [c / self.bin_seconds for c in self._bin_counts]
+
+    def should_replan(self, planned_for_rps: float,
+                      threshold: float = 0.10,
+                      violation_trigger: float = 0.05) -> bool:
+        hist = self.observed_demand()
+        if not hist:
+            return False
+        drift = abs(hist[-1] - planned_for_rps) > threshold * max(
+            planned_for_rps, 1e-9)
+        vrate = (self.violations_this_bin
+                 / max(self.requests_this_bin, 1))
+        return drift or vrate > violation_trigger

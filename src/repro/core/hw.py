@@ -1,0 +1,27 @@
+"""TPU v5e hardware constants (assignment-specified roofs).
+
+Used by BOTH the serving profiler (closed-form latency/throughput model)
+and the dry-run roofline analysis, so the two are consistent by
+construction.
+"""
+PEAK_FLOPS_BF16 = 197e12      # per chip
+PEAK_FLOPS_INT8 = 394e12      # int8 MXU rate = 2x bf16 on v5e
+HBM_BW = 819e9                # B/s per chip
+ICI_BW_PER_LINK = 50e9        # B/s per link (assignment formula: chips*link)
+HBM_BYTES = 16 * 2 ** 30      # 16 GiB per chip
+HBM_USABLE_FRACTION = 0.9
+
+# Calibration of the closed-form serving profile (roofline fractions a
+# well-tuned serving stack achieves; folded into L/H identically so the
+# MILP's *relative* choices are calibration-invariant).
+FLOPS_EFFICIENCY = 0.55
+HBM_EFFICIENCY = 0.80
+ICI_EFFICIENCY = 0.75
+
+
+def peak_flops(quant: str) -> float:
+    return PEAK_FLOPS_INT8 if quant == "int8" else PEAK_FLOPS_BF16
+
+
+def param_bytes(quant: str) -> int:
+    return 1 if quant == "int8" else 2

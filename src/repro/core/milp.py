@@ -1,0 +1,665 @@
+"""The controller's MILP (paper §3.2, Eq. 1-14) + feature-ablated variants.
+
+Decision variable M(t,v,s,b) — instances of variant v of task t on segment
+type s with max batch b.  The formulation follows the paper exactly where
+it is linear (latency Eq. 2-3, throughput Eq. 4-6 with F̂ as a runtime
+input, resources Eq. 7-8, objective Eq. 14) and uses a documented
+*conservative* linearization for the accuracy constraint Eq. 9-13
+(accuracy-grid floors + Weierstrass path bound — see DESIGN.md §5); every
+solution is re-validated against the exact evaluator in
+``repro.core.accuracy``.
+
+Feature flags (paper Table 1 / §4.3):
+
+* ``accuracy_scaling``    (A) — off: only the most accurate variant.
+* ``spatial``             (S) — off: whole-accelerator segments only.
+* ``task_graph_informed`` (T) — off: static per-task latency & resource
+  budgets per the paper's Appendix B, solved as independent per-task MILPs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import accuracy as acc_mod
+from repro.core.profiler import ProfileEntry, Profiler
+from repro.core.solver.branch_bound import MILPResult, solve_milp
+from repro.core.taskgraph import TaskGraph
+from repro.sharding.segments import SegmentType, catalogue
+
+Key = Tuple[str, str, str, int]
+
+
+@dataclass(frozen=True)
+class FeatureSet:
+    accuracy_scaling: bool = True     # A
+    spatial: bool = True              # S
+    task_graph_informed: bool = True  # T
+
+    @property
+    def label(self) -> str:
+        if self.accuracy_scaling and self.spatial and self.task_graph_informed:
+            return "A+S+T (JigsawServe)"
+        parts = [f for f, on in (("A", self.accuracy_scaling),
+                                 ("S", self.spatial),
+                                 ("T", self.task_graph_informed)) if on]
+        return "+".join(parts) if parts else "Unopt"
+
+
+@dataclass(frozen=True)
+class TupleVar:
+    """One admissible (t, v, s, b) with its profiled constants."""
+    task: str
+    variant: str
+    segment: str
+    batch: int
+    latency_ms: float
+    throughput: float
+    cost: int
+    accuracy: float
+
+    @property
+    def key(self) -> Key:
+        return (self.task, self.variant, self.segment, self.batch)
+
+
+@dataclass
+class PlanConfig:
+    """A concrete deployment: M(t,v,s,b) counts + derived metrics."""
+    graph: TaskGraph
+    counts: Dict[Key, int]
+    tuples: Dict[Key, TupleVar]
+    demand: Dict[str, float]
+
+    # ------------------------------------------------------------------
+    @property
+    def slices(self) -> int:
+        return sum(self.tuples[k].cost * m for k, m in self.counts.items()
+                   if m > 0)
+
+    def lhat(self, task: str) -> float:
+        """L̂(t): latency of the slowest ACTIVE instance (Eq. 2)."""
+        ls = [self.tuples[k].latency_ms for k, m in self.counts.items()
+              if m > 0 and k[0] == task]
+        return max(ls) if ls else 0.0
+
+    def path_latency(self, path: Tuple[str, ...]) -> float:
+        """Σ 2·L̂ along the path (Eq. 3's LHS — 2x for queuing delay)."""
+        return sum(2.0 * self.lhat(t) for t in path)
+
+    def worst_path_latency(self) -> float:
+        return max(self.path_latency(p) for p in self.graph.paths)
+
+    def task_throughput(self, task: str) -> float:
+        return sum(self.tuples[k].throughput * m
+                   for k, m in self.counts.items()
+                   if m > 0 and k[0] == task)
+
+    def throughput_map(self) -> Dict[Key, float]:
+        return {k: self.tuples[k].throughput for k in self.counts}
+
+    def exact_a_obj(self) -> float:
+        return acc_mod.a_obj(self.graph, self.counts, self.throughput_map())
+
+    def task_effective_accuracy(self, task: str) -> float:
+        return acc_mod.effective_task_accuracy(
+            self.graph, task, self.counts, self.throughput_map())
+
+    def feasible(self, slo_l: float, slo_a: float, s_avail: int,
+                 tol: float = 1e-6) -> bool:
+        if self.slices > s_avail:
+            return False
+        for t, r in self.demand.items():
+            if self.task_throughput(t) < r - tol:
+                return False
+        if self.worst_path_latency() > slo_l + tol:
+            return False
+        return self.exact_a_obj() >= slo_a - tol
+
+    def instances(self) -> List[Tuple[TupleVar, int]]:
+        return [(self.tuples[k], m) for k, m in sorted(self.counts.items())
+                if m > 0]
+
+
+# ---------------------------------------------------------------------------
+@dataclass
+class Planner:
+    graph: TaskGraph
+    profiler: Profiler
+    s_avail: int
+    features: FeatureSet = field(default_factory=FeatureSet)
+    alpha: float = 1.0
+    beta: Optional[float] = None          # None → alpha / s_avail (paper §4.4)
+    unopt_chips: int = 8                  # the 'whole accelerator' unit
+    max_tuples_per_task: int = 120
+    bb_nodes: int = 60
+    bb_time_s: float = 10.0
+    # plan at <= headroom utilization so steady-state queueing stays inside
+    # the paper's 2x latency allowance (Eq. 3)
+    headroom: float = 0.8
+
+    def __post_init__(self):
+        if self.beta is None:
+            self.beta = self.alpha / max(self.s_avail, 1)
+
+    # ------------------------------------------------------------------
+    # admissible tuples
+    # ------------------------------------------------------------------
+    def _admissible(self, task: str) -> List[TupleVar]:
+        t = self.graph.tasks[task]
+        variants = (t.variants if self.features.accuracy_scaling
+                    else (t.most_accurate,))
+        out = []
+        for (tn, vn, sn, b), e in self.profiler.entries_for_task(task).items():
+            if all(v.name != vn for v in variants):
+                continue
+            if not self.features.spatial:
+                if e.chips != self.unopt_chips or e.streams != 1:
+                    continue
+            if 2.0 * e.latency_ms > self.graph.slo_latency_ms:
+                continue  # can never satisfy Eq. 3 even alone
+            v = t.variant(vn)
+            out.append(TupleVar(task, vn, sn, b, e.latency_ms,
+                                e.throughput_rps, e.chips, v.accuracy))
+        out = _pareto_prune(out)
+        if len(out) > self.max_tuples_per_task:
+            # round-robin across (variant, segment-size) groups so pruning
+            # never wipes out a whole size class (small segments must stay
+            # available when S_avail is tight)
+            groups: Dict[Tuple[str, int], List[TupleVar]] = {}
+            for j in out:
+                groups.setdefault((j.variant, j.cost), []).append(j)
+            for grp in groups.values():
+                grp.sort(key=lambda j: -j.throughput / j.cost)
+            picked: List[TupleVar] = []
+            while len(picked) < self.max_tuples_per_task and groups:
+                for key in list(groups):
+                    if groups[key]:
+                        picked.append(groups[key].pop(0))
+                        if len(picked) >= self.max_tuples_per_task:
+                            break
+                    else:
+                        del groups[key]
+            out = picked
+        return out
+
+    # ------------------------------------------------------------------
+    # public entry
+    # ------------------------------------------------------------------
+    def plan(self, demand_rps: float,
+             fbar: Optional[Mapping[Tuple[str, str], float]] = None
+             ) -> Optional[PlanConfig]:
+        """Solve for configuration at entry-task demand R (Eq. 14)."""
+        if self.features.task_graph_informed:
+            cfg = self._plan_joint(demand_rps, fbar)
+            # The T search space is a strict superset of the static split —
+            # if the joint heuristics miss, the static solution is still a
+            # member of the space, so fall back (and keep the cheaper one).
+            static = self._plan_static_budgets(demand_rps, fbar)
+            if cfg is None:
+                return static
+            if static is not None and static.slices < cfg.slices:
+                return static
+            return cfg
+        return self._plan_static_budgets(demand_rps, fbar)
+
+    # ------------------------------------------------------------------
+    def _plan_joint(self, R: float, fbar) -> Optional[PlanConfig]:
+        g = self.graph
+        demand = {t: r / self.headroom
+                  for t, r in g.demand_at_tasks(R, fbar).items()}
+        tasks = list(g.tasks)
+        tuples: List[TupleVar] = []
+        task_tuples: Dict[str, List[int]] = {t: [] for t in tasks}
+        for t in tasks:
+            adm = self._admissible(t)
+            if not adm:
+                return None
+            for j in adm:
+                task_tuples[t].append(len(tuples))
+                tuples.append(j)
+        return self._solve(tuples, task_tuples, demand,
+                           slo_l=g.slo_latency_ms, slo_a=g.slo_accuracy,
+                           s_avail=self.s_avail)
+
+    # ------------------------------------------------------------------
+    def _plan_static_budgets(self, R: float, fbar) -> Optional[PlanConfig]:
+        """Appendix B: static per-task latency & resource budgets, then
+        independent per-task solves."""
+        g = self.graph
+        demand = {t: r / self.headroom
+                  for t, r in g.demand_at_tasks(R, fbar).items()}
+        # expected resources per task (most accurate variant, best tuple)
+        exp_res: Dict[str, float] = {}
+        lmax: Dict[str, float] = {}
+        for t in g.tasks:
+            v_acc = g.tasks[t].most_accurate
+            entries = [(k, e) for k, e in
+                       self.profiler.entries_for_task(t).items()
+                       if k[1] == v_acc.name
+                       and (self.features.spatial
+                            or (e.chips == self.unopt_chips
+                                and e.streams == 1))]
+            if not entries:
+                return None
+            best = max(entries, key=lambda ke: ke[1].throughput_rps
+                       / ke[1].chips)
+            exp_res[t] = demand[t] / best[1].throughput_rps * best[1].chips
+            lmax[t] = max(e.latency_ms for _, e in entries
+                          if 2 * e.latency_ms <= g.slo_latency_ms)
+        total_res = sum(exp_res.values())
+        res_budget = {t: self.s_avail * exp_res[t] / total_res
+                      for t in g.tasks}
+        # per-path latency split in ratio of lmax; task gets min across paths
+        lat_budget = {t: math.inf for t in g.tasks}
+        for p in g.paths:
+            denom = sum(lmax[t] for t in p)
+            for t in p:
+                lat_budget[t] = min(lat_budget[t],
+                                    g.slo_latency_ms * lmax[t] / denom)
+        # uninformed accuracy split: geometric floor over the longest path
+        acc_floor = {}
+        for t in g.tasks:
+            plen = max(len(p) for p in g.paths if t in p)
+            acc_floor[t] = g.slo_accuracy ** (1.0 / plen)
+
+        counts: Dict[Key, int] = {}
+        tuples: Dict[Key, TupleVar] = {}
+        for t in g.tasks:
+            adm = [j for j in self._admissible(t)
+                   if 2.0 * j.latency_ms <= lat_budget[t]]
+            if not adm:
+                return None
+            sub = self._solve(
+                adm, {t: list(range(len(adm)))}, {t: demand[t]},
+                slo_l=2.0 * lat_budget[t], slo_a=acc_floor[t],
+                s_avail=int(res_budget[t]), single_task=t)
+            if sub is None:
+                return None
+            counts.update(sub.counts)
+            tuples.update(sub.tuples)
+        cfg = PlanConfig(g, counts, tuples, demand)
+        if not cfg.feasible(g.slo_latency_ms, g.slo_accuracy, self.s_avail):
+            return None
+        return cfg
+
+    # ------------------------------------------------------------------
+    # MILP assembly
+    # ------------------------------------------------------------------
+    def _solve(self, tuples: List[TupleVar],
+               task_tuples: Dict[str, List[int]],
+               demand: Dict[str, float], *, slo_l: float, slo_a: float,
+               s_avail: int, single_task: Optional[str] = None
+               ) -> Optional[PlanConfig]:
+        g = self.graph
+        tasks = list(task_tuples)
+        nj = len(tuples)
+        # accuracy grid per task: distinct variant accuracies (floors)
+        grid = {t: sorted({j.accuracy for i in task_tuples[t]
+                           for j in [tuples[i]]}) for t in tasks}
+        nz = {t: len(grid[t]) for t in tasks}
+
+        # variable layout: [x (nj) | y (nj) | Lhat (T) | z (Σ nz)]
+        ix_x = np.arange(nj)
+        ix_y = nj + np.arange(nj)
+        ix_L = {t: 2 * nj + i for i, t in enumerate(tasks)}
+        z_off = 2 * nj + len(tasks)
+        ix_z: Dict[Tuple[str, int], int] = {}
+        for t in tasks:
+            for k in range(nz[t]):
+                ix_z[(t, k)] = z_off
+                z_off += 1
+        nvar = z_off
+
+        caps = np.array([max(1.0, math.ceil(demand[j.task]
+                                            / max(j.throughput, 1e-9))) + 1
+                         for j in tuples])
+
+        # path weights w_t = Σ_{p∋t} f_p (for the linearized Eq. 12)
+        if single_task is None:
+            w = {t: sum(f for p, f in g.path_fractions.items() if t in p)
+                 for t in tasks}
+            paths = g.paths
+        else:
+            w = {single_task: 1.0}
+            paths = [(single_task,)]
+        amax = acc_mod.a_max(g) if single_task is None else \
+            g.tasks[single_task].max_accuracy
+
+        rows, rhs = [], []
+
+        def add(row: Dict[int, float], b: float):
+            rows.append(row)
+            rhs.append(b)
+
+        # Eq.1 linking: x - cap*y <= 0 ; y - x <= 0
+        for i in range(nj):
+            add({ix_x[i]: 1.0, ix_y[i]: -caps[i]}, 0.0)
+            add({ix_y[i]: 1.0, ix_x[i]: -1.0}, 0.0)
+        # Eq.2: L_j*y_j - Lhat_t <= 0
+        for t in tasks:
+            for i in task_tuples[t]:
+                add({ix_y[i]: tuples[i].latency_ms, ix_L[t]: -1.0}, 0.0)
+        # Eq.3 per path: Σ 2*Lhat <= SLO_l
+        for p in paths:
+            add({ix_L[t]: 2.0 for t in p if t in ix_L}, slo_l)
+        # Eq.6 throughput: -Σ x*H <= -R̂(t)
+        for t in tasks:
+            add({ix_x[i]: -tuples[i].throughput for i in task_tuples[t]},
+                -demand[t])
+        # Eq.8 resources
+        add({ix_x[i]: float(tuples[i].cost) for i in range(nj)},
+            float(s_avail))
+        # accuracy grid: z selects a floor g_k ⇒ Σ x H (A_j - g_k) >= -M(1-z)
+        bigM_a = {t: sum(caps[i] * tuples[i].throughput
+                         for i in task_tuples[t]) for t in tasks}
+        for t in tasks:
+            for k, gk in enumerate(grid[t]):
+                row = {ix_x[i]: -(tuples[i].accuracy - gk)
+                       * tuples[i].throughput for i in task_tuples[t]}
+                row[ix_z[(t, k)]] = bigM_a[t]
+                add(row, bigM_a[t])
+        # Weierstrass path bound (Eq.12-13 linearized):
+        # Σ_t w_t Σ_k g_tk z_tk >= slo_a*amax - 1 + Σ w_t
+        row = {ix_z[(t, k)]: -w[t] * grid[t][k]
+               for t in tasks for k in range(nz[t])}
+        add(row, 1.0 - sum(w.values()) - slo_a * amax)
+
+        # equalities: Σ_k z_tk = 1
+        eq_rows, eq_rhs = [], []
+        for t in tasks:
+            eq_rows.append({ix_z[(t, k)]: 1.0 for k in range(nz[t])})
+            eq_rhs.append(1.0)
+
+        # objective (min): β Σ cost x − (α/amax) Σ w_t g_tk z_tk
+        c = np.zeros(nvar)
+        for i in range(nj):
+            c[ix_x[i]] = self.beta * tuples[i].cost
+        for t in tasks:
+            for k in range(nz[t]):
+                c[ix_z[(t, k)]] = -self.alpha * w[t] * grid[t][k] / amax
+
+        ub = np.full(nvar, np.inf)
+        ub[ix_x] = caps
+        ub[ix_y] = 1.0
+        for t in tasks:
+            ub[ix_L[t]] = slo_l / 2.0
+            for k in range(nz[t]):
+                ub[ix_z[(t, k)]] = 1.0
+
+        int_mask = np.zeros(nvar, bool)
+        int_mask[ix_x] = True
+        int_mask[ix_y] = True
+        for key, col in ix_z.items():
+            int_mask[col] = True
+
+        A_ub = _densify(rows, nvar)
+        b_ub = np.array(rhs)
+        A_eq = _densify(eq_rows, nvar)
+        b_eq = np.array(eq_rhs)
+
+        def make_cfg(counts: Dict[Key, int]) -> PlanConfig:
+            return PlanConfig(g, counts,
+                              {j.key: j for j in tuples},
+                              dict(demand))
+
+        def repair(xfrac: np.ndarray) -> Optional[np.ndarray]:
+            counts = self._repair(xfrac[ix_x], tuples, task_tuples, demand,
+                                  slo_l, slo_a, s_avail, grid, w, amax,
+                                  single_task)
+            if counts is None:
+                return None
+            return self._lift(counts, tuples, task_tuples, grid, nvar,
+                              ix_x, ix_y, ix_L, ix_z, tasks)
+
+        res = solve_milp(c, A_ub, b_ub, A_eq, b_eq, ub, int_mask,
+                         repair=repair, max_nodes=self.bb_nodes,
+                         time_limit_s=self.bb_time_s)
+        if res.x is None:
+            return None
+        counts = {tuples[i].key: int(round(res.x[ix_x[i]]))
+                  for i in range(nj) if res.x[ix_x[i]] > 0.5}
+        cfg = make_cfg(counts)
+        # exact re-validation (one-sided bound ⇒ should always pass)
+        if single_task is None and not cfg.feasible(slo_l, slo_a,
+                                                    self.s_avail):
+            return None
+        return cfg
+
+    # ------------------------------------------------------------------
+    def _repair(self, x: np.ndarray, tuples, task_tuples, demand,
+                slo_l, slo_a, s_avail, grid, w, amax, single_task
+                ) -> Optional[Dict[Key, int]]:
+        """LP point → integer-feasible counts (exact-semantics greedy).
+
+        Strategy: seed with the floored LP point, fill throughput deficits
+        latency-budget-aware (each task only uses tuples that fit the slack
+        the OTHER tasks leave on its tightest path), then fix the accuracy
+        floor, then trim.  If LP-guided fill fails, rebuild from scratch
+        with a delete-worst latency loop."""
+        tasks = list(task_tuples)
+        paths = ([(single_task,)] if single_task is not None
+                 else self.graph.paths)
+
+        def attempt(seed: Dict[int, int]) -> Optional[Dict[int, int]]:
+            counts = dict(seed)
+
+            def slices():
+                return sum(tuples[i].cost * m for i, m in counts.items())
+
+            def tput(t):
+                return sum(tuples[i].throughput * m
+                           for i, m in counts.items()
+                           if tuples[i].task == t)
+
+            def lhat(t):
+                ls = [tuples[i].latency_ms for i, m in counts.items()
+                      if m > 0 and tuples[i].task == t]
+                return max(ls) if ls else 0.0
+
+            def path_ok():
+                return all(sum(2.0 * lhat(t) for t in p) <= slo_l + 1e-9
+                           for p in paths)
+
+            def budget(t):
+                """Max 2·L a new tuple of task t may have, given others."""
+                b = math.inf
+                for p in paths:
+                    if t not in p:
+                        continue
+                    used = sum(2.0 * lhat(t2) for t2 in p if t2 != t)
+                    b = min(b, slo_l - used)
+                return max(b, 2.0 * lhat(t))  # existing lhat already charged
+
+            def floor_acc(t):
+                num = sum(tuples[i].throughput * m * tuples[i].accuracy
+                          for i, m in counts.items() if tuples[i].task == t)
+                den = sum(tuples[i].throughput * m
+                          for i, m in counts.items() if tuples[i].task == t)
+                if den <= 0:
+                    return 0.0
+                a = num / den
+                lv = [gk for gk in grid[t] if gk <= a + 1e-9]
+                return lv[-1] if lv else 0.0
+
+            def acc_lb_ok():
+                tot = sum(w[t] * floor_acc(t) for t in w)
+                return tot >= slo_a * amax - 1.0 + sum(w.values()) - 1e-9
+
+            if not path_ok():
+                return None
+
+            # 1. fill throughput deficits, cheapest-per-rps within budget
+            for t in tasks:
+                guard = 0
+                while tput(t) < demand[t] - 1e-9 and guard < 100000:
+                    guard += 1
+                    bud = budget(t)
+                    room = s_avail - slices()
+                    cand = [i for i in task_tuples[t]
+                            if 2.0 * tuples[i].latency_ms <= bud + 1e-9
+                            and tuples[i].cost <= room]
+                    if not cand:
+                        return None
+                    # close the whole deficit with the single best type
+                    deficit = demand[t] - tput(t)
+                    best = min(cand, key=lambda i: (
+                        tuples[i].cost * math.ceil(
+                            deficit / tuples[i].throughput),
+                        tuples[i].cost))
+                    n_add = max(1, int(deficit // tuples[best].throughput))
+                    n_add = min(n_add, max(1, room // tuples[best].cost))
+                    counts[best] = counts.get(best, 0) + n_add
+                if tput(t) < demand[t] - 1e-9:
+                    return None
+
+            # 2. fix the accuracy lower bound
+            guard = 0
+            while not acc_lb_ok() and guard < 500:
+                guard += 1
+                worst, gain = None, 0.0
+                for t in w:
+                    gp = (grid[t][-1] - floor_acc(t)) * w[t]
+                    if gp > gain:
+                        worst, gain = t, gp
+                if worst is None:
+                    return None
+                bud = budget(worst)
+                # room may transiently borrow the cost of the low-accuracy
+                # instance we are about to drop (final slices check guards)
+                droppable = [tuples[i].cost for i, mm in counts.items()
+                             if mm > 0 and tuples[i].task == worst
+                             and tuples[i].accuracy
+                             < grid[worst][-1] - 1e-12]
+                room = s_avail - slices() + (max(droppable) if droppable
+                                             else 0)
+                cand = [i for i in task_tuples[worst]
+                        if tuples[i].accuracy >= grid[worst][-1] - 1e-12
+                        and 2.0 * tuples[i].latency_ms <= bud + 1e-9
+                        and tuples[i].cost <= room]
+                if not cand:
+                    return None
+                best = min(cand, key=lambda i: (tuples[i].cost
+                           / max(tuples[i].throughput, 1e-9),
+                           tuples[i].cost))
+                counts[best] = counts.get(best, 0) + 1
+                # drop low-accuracy instances while throughput allows
+                low = sorted([i for i, m in counts.items() if m > 0
+                              and tuples[i].task == worst
+                              and tuples[i].accuracy
+                              < grid[worst][-1] - 1e-12],
+                             key=lambda i: tuples[i].accuracy)
+                for i in low:
+                    counts[i] -= 1
+                    if tput(worst) >= demand[worst] - 1e-9:
+                        if counts[i] == 0:
+                            del counts[i]
+                        break
+                    counts[i] += 1
+            if not acc_lb_ok():
+                return None
+
+            # 3. trim expensive instances while feasible
+            order = sorted([i for i in counts],
+                           key=lambda i: -tuples[i].cost)
+            for i in order:
+                while counts.get(i, 0) > 0:
+                    counts[i] -= 1
+                    t = tuples[i].task
+                    if (tput(t) >= demand[t] - 1e-9 and path_ok()
+                            and acc_lb_ok()):
+                        if counts[i] == 0:
+                            del counts[i]
+                            break
+                        continue
+                    counts[i] += 1
+                    break
+
+            if sum(tuples[i].cost * m for i, m in counts.items()) > s_avail:
+                return None
+            return counts
+
+        # try LP-guided seed first
+        seed = {i: int(math.floor(x[i] + 1e-6)) for i in range(len(tuples))
+                if x[i] > 1e-6}
+        counts = attempt(seed)
+        if counts is None and seed:
+            counts = attempt({})
+        if counts is None:
+            # delete-worst: start empty, but pre-restrict each task to its
+            # fastest half of tuples and retry (handles tight joint SLOs)
+            restricted = {}
+            for t in tasks:
+                idxs = sorted(task_tuples[t],
+                              key=lambda i: tuples[i].latency_ms)
+                restricted[t] = idxs[: max(1, len(idxs) // 2)]
+            saved = dict(task_tuples)
+            try:
+                for t in tasks:
+                    task_tuples[t] = restricted[t]
+                counts = attempt({})
+            finally:
+                for t in tasks:
+                    task_tuples[t] = saved[t]
+        if counts is None:
+            return None
+        return {tuples[i].key: m for i, m in counts.items() if m > 0}
+
+    # ------------------------------------------------------------------
+    def _lift(self, counts: Dict[Key, int], tuples, task_tuples, grid,
+              nvar, ix_x, ix_y, ix_L, ix_z, tasks) -> np.ndarray:
+        """Counts → full MILP variable vector (for the B&B incumbent)."""
+        xv = np.zeros(nvar)
+        by_key = {tuples[i].key: i for i in range(len(tuples))}
+        for key, m in counts.items():
+            i = by_key[key]
+            xv[ix_x[i]] = m
+            xv[ix_y[i]] = 1.0
+        for t in tasks:
+            ls = [tuples[i].latency_ms for i in task_tuples[t]
+                  if xv[ix_y[i]] > 0.5]
+            xv[ix_L[t]] = max(ls) if ls else 0.0
+            # pick the grid floor below the exact weighted accuracy
+            num = sum(tuples[i].throughput * xv[ix_x[i]] * tuples[i].accuracy
+                      for i in task_tuples[t])
+            den = sum(tuples[i].throughput * xv[ix_x[i]]
+                      for i in task_tuples[t])
+            a = num / den if den > 0 else 0.0
+            ks = [k for k, gk in enumerate(grid[t]) if gk <= a + 1e-9]
+            xv[ix_z[(t, ks[-1] if ks else 0)]] = 1.0
+        return xv
+
+
+# ---------------------------------------------------------------------------
+def _pareto_prune(tuples: List[TupleVar]) -> List[TupleVar]:
+    """Drop (t,v,s,b) tuples dominated on (latency, throughput, cost)."""
+    out = []
+    for j in tuples:
+        dominated = False
+        for i in tuples:
+            if i is j:
+                continue
+            if (i.accuracy >= j.accuracy
+                    and i.latency_ms <= j.latency_ms
+                    and i.throughput >= j.throughput
+                    and i.cost <= j.cost
+                    and (i.latency_ms < j.latency_ms
+                         or i.throughput > j.throughput
+                         or i.cost < j.cost or i.accuracy > j.accuracy)):
+                dominated = True
+                break
+        if not dominated:
+            out.append(j)
+    return out
+
+
+def _densify(rows: List[Dict[int, float]], nvar: int) -> np.ndarray:
+    A = np.zeros((len(rows), nvar))
+    for r, row in enumerate(rows):
+        for col, val in row.items():
+            A[r, col] = val
+    return A

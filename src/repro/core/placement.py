@@ -1,0 +1,114 @@
+"""Greedy rectangle bin-packing of segments onto pods (paper §3.1).
+
+The paper packs MIG instances onto GPUs with a greedy rule-based
+bin-packer (Turkkan et al.).  Our segments are contiguous rectangles on a
+16×16 pod torus, so the packer is 2-D: sort segments by area descending,
+first-fit scan over aligned anchor positions on each pod's occupancy grid,
+open a new pod when nothing fits.  Alignment to the segment's own shape
+keeps the packing fragmentation-free for the power-of-two catalogue.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.sharding.segments import SEGMENT_SHAPES, SegmentType, by_name
+
+POD_SHAPE = (16, 16)
+
+
+@dataclass(frozen=True)
+class Placement:
+    instance_id: int
+    segment: str              # segment type name
+    pod: int
+    row: int
+    col: int
+    rows: int
+    cols: int
+
+
+@dataclass
+class PodState:
+    grid: np.ndarray          # bool occupancy [16,16]
+
+    @classmethod
+    def empty(cls) -> "PodState":
+        return cls(np.zeros(POD_SHAPE, dtype=bool))
+
+    def fits(self, r: int, c: int, h: int, w: int) -> bool:
+        if r + h > POD_SHAPE[0] or c + w > POD_SHAPE[1]:
+            return False
+        return not self.grid[r:r + h, c:c + w].any()
+
+    def place(self, r: int, c: int, h: int, w: int):
+        self.grid[r:r + h, c:c + w] = True
+
+    def free(self, r: int, c: int, h: int, w: int):
+        self.grid[r:r + h, c:c + w] = False
+
+    @property
+    def used(self) -> int:
+        return int(self.grid.sum())
+
+
+class Placer:
+    """Packs a list of segment instances onto the minimum number of pods."""
+
+    def __init__(self, num_pods: int = 2,
+                 dead_hosts: Optional[List[Tuple[int, int, int]]] = None):
+        self.num_pods = num_pods
+        self.pods = [PodState.empty() for _ in range(num_pods)]
+        # fault tolerance: mark failed chips (pod, row, col) as occupied so
+        # the placer routes around them (controller re-solves with the
+        # shrunken S_avail).
+        for (p, r, c) in (dead_hosts or []):
+            self.pods[p].grid[r, c] = True
+
+    # ------------------------------------------------------------------
+    def pack(self, segments: List[str]) -> Optional[List[Placement]]:
+        """segments: segment-type names (one per instance).  Returns
+        placements or None if capacity is insufficient."""
+        order = sorted(range(len(segments)),
+                       key=lambda i: -by_name(segments[i]).chips)
+        out: List[Optional[Placement]] = [None] * len(segments)
+        for i in order:
+            seg = by_name(segments[i])
+            h, w = seg.shape
+            placed = False
+            for p, pod in enumerate(self.pods):
+                # anchor positions aligned to the shape (power-of-two grid)
+                for r in range(0, POD_SHAPE[0] - h + 1, h):
+                    for c in range(0, POD_SHAPE[1] - w + 1, w):
+                        if pod.fits(r, c, h, w):
+                            pod.place(r, c, h, w)
+                            out[i] = Placement(i, segments[i], p, r, c, h, w)
+                            placed = True
+                            break
+                    if placed:
+                        break
+                if placed:
+                    break
+            if not placed:
+                return None
+        return [pl for pl in out if pl is not None]
+
+    # ------------------------------------------------------------------
+    @property
+    def chips_used(self) -> int:
+        return sum(p.used for p in self.pods)
+
+    @property
+    def pods_used(self) -> int:
+        return sum(1 for p in self.pods if p.used > 0)
+
+    def utilization(self) -> float:
+        total = self.num_pods * POD_SHAPE[0] * POD_SHAPE[1]
+        return self.chips_used / total
+
+
+def pack_config(instance_segments: List[str], num_pods: int = 2,
+                dead_hosts=None) -> Optional[List[Placement]]:
+    return Placer(num_pods, dead_hosts).pack(instance_segments)

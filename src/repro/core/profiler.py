@@ -1,0 +1,166 @@
+"""Offline profiler: L(t,v,s,b) and H(t,v,s,b)  (paper §3.1).
+
+The paper profiles every (variant × GPU-segment × batch) combination on
+real hardware for 7-12 hours.  This container has no TPU, so the profiler
+derives the same table from a *closed-form roofline model* over the arch
+configs — the identical FLOP/byte accounting the dry-run roofline uses
+(``core/hw.py``), validated against compiled ``cost_analysis()`` numbers in
+``tests/test_profiler.py``.
+
+Stream multiplicity model (the MPS analogue, DESIGN.md §2): a single
+stream leaves the MXU idle for ``1-u`` of the time (u = compute-time /
+batch-time).  k streams interleave: aggregate demand ``k·u``; below 1 they
+don't contend (k× throughput, same latency), above 1 the segment
+saturates (throughput caps at 1/u, latency stretches by k·u).  This gives
+the paper's qualitative profile — memory-bound small models love high
+concurrency on small segments, compute-bound giants don't.
+
+Runtime refinement (paper §3.1): ``observe()`` folds measured latencies
+back with an EWMA.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.configs import ARCHS
+from repro.configs.base import ArchConfig
+from repro.core import hw
+from repro.core.taskgraph import TaskGraph, Variant
+from repro.sharding.segments import SegmentType, catalogue
+
+BATCH_SIZES = (1, 2, 4, 8, 16, 32, 64, 128)   # paper Table 2
+P95_FACTOR = 1.10                             # p95 over mean
+
+Key = Tuple[str, str, str, int]               # (task, variant, segment, batch)
+
+
+@dataclass(frozen=True)
+class ProfileEntry:
+    latency_ms: float          # p95 per-batch latency
+    throughput_rps: float      # requests/s of ONE instance
+    chips: int
+    streams: int
+    utilization: float         # single-stream MXU busy fraction
+    hbm_per_chip: float        # bytes
+
+    @property
+    def throughput_per_chip(self) -> float:
+        return self.throughput_rps / self.chips
+
+
+# ---------------------------------------------------------------------------
+# closed-form request cost model
+# ---------------------------------------------------------------------------
+def request_flops(arch: ArchConfig, quant: str, batch: int, seq: int,
+                  gen: int) -> Tuple[float, float]:
+    """(prefill_flops, per-decode-step flops) for a batch of requests."""
+    _, n_active = arch.param_count()
+    fl_prefill = 2.0 * n_active * batch * seq
+    # attention score/value FLOPs (full attention archs): 2 * 2 * B*S^2*H*hd
+    if arch.num_heads:
+        n_attn = arch.num_layers if arch.family != "hybrid" else \
+            -(-arch.num_layers // arch.hybrid.attn_every)
+        fl_prefill += (2.0 * n_attn * batch * seq * seq
+                       * arch.num_heads * arch.head_dim)  # QK^T + PV, /2 causal *2 ops
+    fl_decode = 2.0 * n_active * batch
+    if arch.num_heads:
+        n_attn = arch.num_layers if arch.family != "hybrid" else \
+            -(-arch.num_layers // arch.hybrid.attn_every)
+        fl_decode += 4.0 * n_attn * batch * seq * arch.num_heads * arch.head_dim
+    return fl_prefill, fl_decode
+
+
+def request_bytes(arch: ArchConfig, quant: str, batch: int, seq: int
+                  ) -> Tuple[float, float, float]:
+    """(weight_bytes, kv_bytes(batch, seq), act_bytes(batch, seq))."""
+    n_total, _ = arch.param_count()
+    wb = float(n_total) * hw.param_bytes(quant)
+    from repro.models.kvcache import cache_bytes
+    kv = float(cache_bytes(arch, batch, seq))
+    act = 2.0 * batch * seq * arch.d_model * 12  # rough live-activation set
+    return wb, kv, act
+
+
+# ---------------------------------------------------------------------------
+@dataclass
+class Profiler:
+    """Builds and refines the (t,v,s,b) profile table for one task graph."""
+    graph: TaskGraph
+    segments: List[SegmentType] = field(default_factory=catalogue)
+    batches: Tuple[int, ...] = BATCH_SIZES
+    ewma: float = 0.3
+    table: Dict[Key, ProfileEntry] = field(default_factory=dict)
+
+    def __post_init__(self):
+        if not self.table:
+            self.profile_all()
+
+    # ------------------------------------------------------------------
+    def profile_all(self):
+        for tname, task in self.graph.tasks.items():
+            for v in task.variants:
+                for seg in self.segments:
+                    for b in self.batches:
+                        e = self.profile_one(v, seg, b)
+                        if e is not None:
+                            self.table[(tname, v.name, seg.name, b)] = e
+
+    def profile_one(self, v: Variant, seg: SegmentType, batch: int
+                    ) -> Optional[ProfileEntry]:
+        """Roofline latency/throughput of one instance, or None if it
+        doesn't fit the segment's HBM (the paper's OOM-excluded configs)."""
+        arch = ARCHS[v.arch]
+        c = seg.chips
+        wb, kv, act = request_bytes(arch, v.quant, batch, v.seq_len + v.gen_len)
+        # all k streams co-resident: weights shared, kv/activations per stream
+        hbm_per_chip = (wb + (kv + act) * seg.streams) / c
+        if hbm_per_chip > hw.HBM_BYTES * hw.HBM_USABLE_FRACTION:
+            return None
+
+        fl_p, fl_d = request_flops(arch, v.quant, batch, v.seq_len, v.gen_len)
+        peak = hw.peak_flops(v.quant) * hw.FLOPS_EFFICIENCY
+        bw = hw.HBM_BW * hw.HBM_EFFICIENCY
+
+        t_pre = max(fl_p / (c * peak), (wb + kv) / (c * bw))
+        # each decode step re-reads weights + the growing cache (avg ~ full)
+        t_dec = max(fl_d / (c * peak), (wb + kv) / (c * bw))
+        t_comp = fl_p / (c * peak) + v.gen_len * fl_d / (c * peak)
+        t1 = t_pre + v.gen_len * t_dec
+
+        # tensor-parallel ICI: 2 collectives/layer over activations
+        if c > 1:
+            toks = batch * (v.seq_len + v.gen_len)
+            ici_bytes = 4.0 * arch.num_layers * toks * arch.d_model * 2 \
+                * (c - 1) / c
+            t1 += ici_bytes / (c * hw.ICI_BW_PER_LINK * hw.ICI_EFFICIENCY)
+
+        u = min(1.0, t_comp / t1)
+        k = seg.streams
+        latency = t1 * max(1.0, k * u)
+        mult = min(float(k), 1.0 / max(u, 1e-6))
+        throughput = batch * mult / t1
+        return ProfileEntry(
+            latency_ms=latency * 1e3 * P95_FACTOR,
+            throughput_rps=throughput,
+            chips=c, streams=k, utilization=u,
+            hbm_per_chip=hbm_per_chip)
+
+    # ------------------------------------------------------------------
+    def get(self, task: str, variant: str, segment: str, batch: int
+            ) -> Optional[ProfileEntry]:
+        return self.table.get((task, variant, segment, batch))
+
+    def entries_for_task(self, task: str) -> Dict[Key, ProfileEntry]:
+        return {k: e for k, e in self.table.items() if k[0] == task}
+
+    def observe(self, key: Key, measured_latency_ms: float):
+        """Runtime refinement: EWMA-blend a measured latency (paper §3.1)."""
+        e = self.table.get(key)
+        if e is None:
+            return
+        lat = (1 - self.ewma) * e.latency_ms + self.ewma * measured_latency_ms
+        scale = e.latency_ms / max(lat, 1e-9)
+        self.table[key] = dataclasses.replace(
+            e, latency_ms=lat, throughput_rps=e.throughput_rps * scale)

@@ -1,0 +1,147 @@
+"""Best-first branch & bound over the LP relaxation (numpy simplex).
+
+Branches on the most-fractional integer variable; node bounds come from
+the LP; incumbents from caller-supplied rounding ``repair`` (the MILP
+layer passes its exact-semantics greedy repair).  Node/time caps keep the
+controller's solve inside the paper's 2-20 s envelope.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import time
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.solver.simplex import solve_lp
+
+INT_TOL = 1e-6
+
+
+@dataclass
+class MILPResult:
+    status: str                 # "optimal" | "feasible" | "infeasible" | "cap"
+    x: Optional[np.ndarray]
+    objective: float
+    nodes: int
+    gap: float                  # |best_bound - incumbent| / (|incumbent|+1)
+
+
+def solve_milp(
+    c: np.ndarray,
+    A_ub: Optional[np.ndarray],
+    b_ub: Optional[np.ndarray],
+    A_eq: Optional[np.ndarray],
+    b_eq: Optional[np.ndarray],
+    ub: np.ndarray,
+    int_mask: np.ndarray,
+    *,
+    repair: Optional[Callable[[np.ndarray], Optional[np.ndarray]]] = None,
+    max_nodes: int = 400,
+    time_limit_s: float = 20.0,
+    gap_tol: float = 1e-3,
+) -> MILPResult:
+    """min c@x, integer on int_mask. `repair` maps a fractional LP point to
+    an integer-feasible point (or None); its result seeds/updates the
+    incumbent."""
+    n = c.size
+    t0 = time.monotonic()
+
+    def lp(lo: np.ndarray, hi: np.ndarray):
+        # lower bounds via shifted vars would complicate; encode lo as rows
+        rows, rhs = [], []
+        nz = lo > INT_TOL
+        if nz.any():
+            R = np.zeros((int(nz.sum()), n))
+            R[np.arange(int(nz.sum())), np.where(nz)[0]] = -1.0
+            rows.append(R)
+            rhs.append(-lo[nz])
+        A2 = A_ub if A_ub is not None else np.zeros((0, n))
+        b2 = b_ub if b_ub is not None else np.zeros((0,))
+        if rows:
+            A2 = np.vstack([A2] + rows)
+            b2 = np.concatenate([b2] + rhs)
+        return solve_lp(c, A2, b2, A_eq, b_eq, ub=hi)
+
+    lo0 = np.zeros(n)
+    hi0 = ub.astype(float).copy()
+    root = lp(lo0, hi0)
+    if root.status == "infeasible":
+        return MILPResult("infeasible", None, np.inf, 1, np.inf)
+    if root.status != "optimal":
+        return MILPResult("cap", None, np.nan, 1, np.inf)
+
+    best_x: Optional[np.ndarray] = None
+    best_obj = np.inf
+
+    def try_incumbent(x):
+        nonlocal best_x, best_obj
+        if x is None:
+            return
+        val = float(c @ x)
+        if val < best_obj - 1e-12:
+            feas = _is_feasible(x, A_ub, b_ub, A_eq, b_eq, ub, int_mask)
+            if feas:
+                best_obj = val
+                best_x = x.copy()
+
+    if repair is not None:
+        try_incumbent(repair(root.x))
+
+    counter = itertools.count()
+    heap: List[Tuple[float, int, np.ndarray, np.ndarray]] = []
+    heapq.heappush(heap, (root.objective, next(counter), lo0, hi0))
+    nodes = 0
+    best_bound = root.objective
+
+    while heap and nodes < max_nodes:
+        if time.monotonic() - t0 > time_limit_s:
+            break
+        bound, _, lo, hi = heapq.heappop(heap)
+        best_bound = bound
+        if bound >= best_obj - 1e-9:
+            break  # best-first: nothing better remains
+        res = lp(lo, hi)
+        nodes += 1
+        if res.status != "optimal" or res.objective >= best_obj - 1e-9:
+            continue
+        x = res.x
+        frac = np.where(int_mask,
+                        np.abs(x - np.round(x)), 0.0)
+        j = int(np.argmax(frac))
+        if frac[j] <= INT_TOL:
+            try_incumbent(np.where(int_mask, np.round(x), x))
+            continue
+        if repair is not None:
+            try_incumbent(repair(x))
+        lo_hi = lo.copy(), hi.copy()
+        # down branch
+        hi_d = hi.copy()
+        hi_d[j] = np.floor(x[j])
+        heapq.heappush(heap, (res.objective, next(counter), lo.copy(), hi_d))
+        # up branch
+        lo_u = lo.copy()
+        lo_u[j] = np.ceil(x[j])
+        heapq.heappush(heap, (res.objective, next(counter), lo_u, hi.copy()))
+
+    gap = abs(best_bound - best_obj) / (abs(best_obj) + 1.0) \
+        if best_x is not None else np.inf
+    if best_x is None:
+        return MILPResult("infeasible" if not heap else "cap",
+                          None, np.inf, nodes, np.inf)
+    status = "optimal" if (not heap or gap <= gap_tol) else "feasible"
+    return MILPResult(status, best_x, best_obj, nodes, gap)
+
+
+def _is_feasible(x, A_ub, b_ub, A_eq, b_eq, ub, int_mask, tol=1e-6) -> bool:
+    if (x < -tol).any() or (x > ub + tol).any():
+        return False
+    if int_mask.any() and np.abs(x[int_mask] - np.round(x[int_mask])).max() > tol:
+        return False
+    if A_ub is not None and len(A_ub) and (A_ub @ x > b_ub + 1e-6).any():
+        return False
+    if A_eq is not None and len(A_eq) and np.abs(A_eq @ x - b_eq).max() > 1e-6:
+        return False
+    return True

@@ -1,0 +1,184 @@
+"""Dense two-phase tableau simplex (numpy). No external solver deps.
+
+Solves::
+
+    min  c @ x
+    s.t. A_ub @ x <= b_ub
+         A_eq @ x == b_eq
+         0 <= x <= ub   (ub may be +inf)
+
+Dantzig pricing with a Bland's-rule fallback after a stall (anti-cycling).
+Upper bounds are handled as explicit rows (problem sizes here are a few
+thousand rows — fine for the dense tableau).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+EPS = 1e-9
+
+
+@dataclass
+class LPResult:
+    status: str            # "optimal" | "infeasible" | "unbounded" | "maxiter"
+    x: Optional[np.ndarray]
+    objective: float
+
+
+def solve_lp(c, A_ub=None, b_ub=None, A_eq=None, b_eq=None, ub=None,
+             max_iter: int = 20000) -> LPResult:
+    c = np.asarray(c, float)
+    n = c.size
+    rows = []
+    rhs = []
+    eq_flags = []
+
+    if A_ub is not None and len(A_ub):
+        A_ub = np.asarray(A_ub, float)
+        b_ub = np.asarray(b_ub, float)
+        rows.append(A_ub)
+        rhs.append(b_ub)
+        eq_flags += [False] * A_ub.shape[0]
+    if A_eq is not None and len(A_eq):
+        A_eq = np.asarray(A_eq, float)
+        b_eq = np.asarray(b_eq, float)
+        rows.append(A_eq)
+        rhs.append(b_eq)
+        eq_flags += [True] * A_eq.shape[0]
+    if ub is not None:
+        ub = np.asarray(ub, float)
+        fin = np.isfinite(ub)
+        if fin.any():
+            U = np.zeros((int(fin.sum()), n))
+            U[np.arange(int(fin.sum())), np.where(fin)[0]] = 1.0
+            rows.append(U)
+            rhs.append(ub[fin])
+            eq_flags += [False] * int(fin.sum())
+
+    if not rows:
+        # unconstrained min over x>=0: bounded iff c >= 0
+        if (c >= -EPS).all():
+            return LPResult("optimal", np.zeros(n), 0.0)
+        return LPResult("unbounded", None, -np.inf)
+
+    A = np.vstack(rows)
+    b = np.concatenate(rhs)
+    eq = np.asarray(eq_flags)
+
+    # normalize to b >= 0
+    neg = b < 0
+    A[neg] *= -1.0
+    b[neg] *= -1.0
+    # after flipping, "<=" rows that were flipped became ">=" rows
+    ge = neg & ~eq
+
+    m = A.shape[0]
+    # columns: x (n) | slack/surplus | artificial
+    slack_cols = []
+    art_rows = []
+    for i in range(m):
+        if eq[i]:
+            art_rows.append(i)
+        elif ge[i]:
+            slack_cols.append((i, -1.0))
+            art_rows.append(i)
+        else:
+            slack_cols.append((i, +1.0))
+
+    n_slack = len(slack_cols)
+    n_art = len(art_rows)
+    T = np.zeros((m, n + n_slack + n_art))
+    T[:, :n] = A
+    for j, (i, sgn) in enumerate(slack_cols):
+        T[i, n + j] = sgn
+    basis = np.full(m, -1, dtype=int)
+    for j, (i, sgn) in enumerate(slack_cols):
+        if sgn > 0:
+            basis[i] = n + j
+    for j, i in enumerate(art_rows):
+        T[i, n + n_slack + j] = 1.0
+        basis[i] = n + n_slack + j
+
+    def run(tab, basis, cost, max_iter):
+        """Tableau iterations on [A | b] with reduced costs derived from
+        `cost` over all columns. Returns status."""
+        m_, tot = tab.shape[0], tab.shape[1] - 1
+        stall = 0
+        for it in range(max_iter):
+            cb = cost[basis]
+            # reduced costs: c_j - cb @ B^-1 A_j  (tab already holds B^-1 A)
+            red = cost[:tot] - cb @ tab[:, :tot]
+            use_bland = stall > 50
+            if use_bland:
+                cand = np.where(red < -EPS)[0]
+                if cand.size == 0:
+                    return "optimal"
+                enter = int(cand[0])
+            else:
+                enter = int(np.argmin(red))
+                if red[enter] >= -EPS:
+                    return "optimal"
+            col = tab[:, enter]
+            pos = col > EPS
+            if not pos.any():
+                return "unbounded"
+            ratios = np.where(pos, tab[:, -1] / np.where(pos, col, 1.0), np.inf)
+            leave = int(np.argmin(ratios))
+            if ratios[leave] < EPS:
+                stall += 1
+            else:
+                stall = 0
+            piv = tab[leave, enter]
+            tab[leave] /= piv
+            factor = tab[:, enter].copy()
+            factor[leave] = 0.0
+            tab -= np.outer(factor, tab[leave])
+            basis[leave] = enter
+        return "maxiter"
+
+    tab = np.hstack([T, b[:, None]])
+
+    if n_art:
+        # phase 1
+        cost1 = np.zeros(tab.shape[1] - 1)
+        cost1[n + n_slack:] = 1.0
+        status = run(tab, basis, cost1, max_iter)
+        if status == "maxiter":
+            return LPResult("maxiter", None, np.nan)
+        val = cost1[basis] @ tab[:, -1]
+        if val > 1e-6:
+            return LPResult("infeasible", None, np.inf)
+        # pivot out any artificial still in basis
+        for i in range(m):
+            if basis[i] >= n + n_slack:
+                row = tab[i, : n + n_slack]
+                j = np.where(np.abs(row) > EPS)[0]
+                if j.size:
+                    enter = int(j[0])
+                    piv = tab[i, enter]
+                    tab[i] /= piv
+                    factor = tab[:, enter].copy()
+                    factor[i] = 0.0
+                    tab -= np.outer(factor, tab[i])
+                    basis[i] = enter
+        # drop artificial columns
+        keep = list(range(n + n_slack)) + [tab.shape[1] - 1]
+        tab = tab[:, keep]
+
+    cost2 = np.zeros(tab.shape[1] - 1)
+    cost2[:n] = c
+    status = run(tab, basis, cost2, max_iter)
+    if status in ("unbounded", "maxiter"):
+        return LPResult(status, None,
+                        -np.inf if status == "unbounded" else np.nan)
+
+    x = np.zeros(tab.shape[1] - 1)
+    for i in range(m):
+        if basis[i] < x.size:
+            x[basis[i]] = tab[i, -1]
+    xx = x[:n]
+    return LPResult("optimal", xx, float(c @ xx))

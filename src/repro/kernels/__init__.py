@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the serving hot-spots.
+
+Layout per kernel: ``<name>.py`` (pl.pallas_call + BlockSpec tiling),
+oracle in ``ref.py``, jit'd dispatch in ``ops.py``.  Validated with
+``interpret=True`` shape/dtype sweeps in ``tests/test_kernels.py``.
+"""

@@ -1,0 +1,101 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the ground truth for the kernel sweeps in
+``tests/test_kernels.py`` — deliberately naive, O(S²)-materializing
+implementations with fp32 math throughout.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        *, causal: bool = True,
+                        scale: Optional[float] = None) -> jax.Array:
+    """q: [B,Sq,H,hd]; k,v: [B,Skv,KV,hd] (KV divides H). Naive softmax."""
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    scale = scale if scale is not None else hd ** -0.5
+    qf = q.astype(jnp.float32).reshape(B, Sq, KV, g, hd) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, kf)
+    if causal:
+        mask = (jnp.arange(Sq)[:, None] + (Skv - Sq)) >= jnp.arange(Skv)[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, vf)
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                         cache_len: jax.Array, *,
+                         scale: Optional[float] = None) -> jax.Array:
+    """q: [B,1,H,hd]; caches [B,S,KV,hd]; masked softmax over cache."""
+    B, S, KV, hd = k_cache.shape
+    H = q.shape[2]
+    g = H // KV
+    scale = scale if scale is not None else hd ** -0.5
+    qf = q.astype(jnp.float32)[:, 0].reshape(B, KV, g, hd) * scale
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, k_cache.astype(jnp.float32))
+    valid = jnp.arange(S)[None, :] < cache_len
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+            Cm: jax.Array,
+            init_state: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Exact sequential SSD recurrence (the definition, not the dual form).
+
+    x: [B,S,nh,hd]; dt: [B,S,nh]; A: [nh]; Bm,Cm: [B,S,ds].
+    state_t = state_{t-1} * exp(dt_t A) + dt_t * x_t ⊗ B_t ;  y_t = state_t · C_t
+    """
+    B_, S, nh, hd = x.shape
+    ds = Bm.shape[-1]
+    s0 = (init_state if init_state is not None
+          else jnp.zeros((B_, nh, hd, ds), jnp.float32))
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp
+        decay = jnp.exp(dtt * A)                        # [B,nh]
+        upd = jnp.einsum("bhp,bn->bhpn", xt * dtt[..., None], bt)
+        state = state * decay[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, y
+
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(Bm.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(Cm.astype(jnp.float32), 1, 0))
+    final, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1), final
+
+
+def quant_matmul_ref(x_q: jax.Array, w_q: jax.Array, x_scale: jax.Array,
+                     w_scale: jax.Array, out_dtype=jnp.float32) -> jax.Array:
+    """int8 × int8 → int32 → scaled float.
+
+    x_q: [M,K] int8; w_q: [K,N] int8; x_scale: [M] fp32 (per-row);
+    w_scale: [N] fp32 (per-channel)."""
+    acc = jnp.einsum("mk,kn->mn", x_q.astype(jnp.int32), w_q.astype(jnp.int32))
+    out = acc.astype(jnp.float32) * x_scale[:, None] * w_scale[None, :]
+    return out.astype(out_dtype)
+
+
+def quantize_int8(x: jax.Array, axis: int = -1) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-row int8 quantization. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32)
+                           / jnp.expand_dims(scale, axis)), -127, 127)
+    return q.astype(jnp.int8), scale

@@ -1,0 +1,456 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_DRYRUN_XLA_FLAGS")
+                           or "--xla_force_host_platform_device_count=512")
+# The two lines above MUST run before any other import (jax locks the
+# device count on first init).  Everything below is ordinary.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces:
+  * the pass/fail compile gate on the production meshes (16×16 and
+    2×16×16),
+  * ``memory_analysis()`` (fits-per-device proof),
+  * ``cost_analysis()`` FLOPs/bytes,
+  * collective bytes parsed from the partitioned HLO,
+  * a depth-extrapolation pair (L1, L2 layers) because XLA's cost
+    analysis counts a ``lax.scan`` body ONCE — per-layer deltas × depth
+    reconstruct full-model terms exactly for homogeneous stacks
+    (EXPERIMENTS.md §Dry-run documents the method).
+
+Usage::
+
+    python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k --mesh pod
+    python -m repro.launch.dryrun --all          # subprocess per cell
+"""
+import argparse
+import dataclasses
+import json
+import re
+import subprocess
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+_COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                     "all-to-all", "collective-permute")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.+)$")
+_OPND_RE = re.compile(r"%[\w.\-]+")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string (sums tuple components)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum operand bytes of every collective op in partitioned HLO.
+
+    HLO prints operands as bare names (``all-reduce(%dot)``), so a first
+    pass builds a symbol table of every instruction's result bytes and the
+    second pass sums the collectives' operand sizes from it.  Falls back
+    to the result size when an operand is unresolvable (equal for
+    all-reduce/permute; result size for all-gather ≥ operand — a
+    conservative overcount)."""
+    sizes: Dict[str, int] = {}
+    lines = hlo_text.splitlines()
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if m is None:
+            continue
+        rhs = m.group(2)
+        # type is everything up to the opcode token; take the leading
+        # type expression (possibly a tuple) before the first space+word(
+        paren = rhs.find("(") if rhs.startswith("(") else -1
+        if paren == 0:
+            # tuple type: match balanced closing paren
+            depth, i = 0, 0
+            for i, ch in enumerate(rhs):
+                depth += ch == "("
+                depth -= ch == ")"
+                if depth == 0:
+                    break
+            type_str = rhs[: i + 1]
+        else:
+            type_str = rhs.split(" ", 1)[0]
+        sizes[m.group(1)] = _shape_bytes(type_str)
+
+    out: Dict[str, float] = {}
+    for line in lines:
+        for kind in _COLLECTIVE_KINDS:
+            for tok in (f" {kind}(", f" {kind}-start("):
+                if tok in line:
+                    break
+            else:
+                continue
+            args = line.split(tok, 1)[1]
+            args = args[: args.find(")")]
+            total = 0
+            for name in _OPND_RE.findall(args):
+                total += sizes.get(name, 0)
+            # operands may also carry inline type annotations
+            total = max(total, _shape_bytes(args))
+            m = _DEF_RE.match(line)
+            result = sizes.get(m.group(1), 0) if m is not None else 0
+            if total == 0:
+                total = result
+            # physical per-device traffic, not the literal operand size:
+            #   ring all-gather RECEIVES the result (operand understates
+            #   by the group size); ring all-reduce moves ~2x its operand
+            #   (reduce-scatter + all-gather phases).
+            if kind == "all-gather":
+                total = max(total, result)
+            elif kind == "all-reduce":
+                total = 2 * total
+            out[kind] = out.get(kind, 0.0) + float(total)
+            break
+    return out
+
+
+def memory_analysis_dict(compiled) -> Dict[str, Any]:
+    ma = compiled.memory_analysis()
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes", "peak_memory_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if not out:
+        out["repr"] = str(ma)
+    return out
+
+
+# ---------------------------------------------------------------------------
+def build_step(arch, shape, mesh, *, num_layers: Optional[int] = None,
+               unroll: bool = False):
+    """Returns (lower_fn) that produces the lowered computation."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs.base import ArchConfig
+    from repro.launch.specs import input_specs
+    from repro.models import kvcache
+    from repro.models.model import Model
+    from repro.sharding.policy import make_policy
+    from repro.training import optimizer as opt
+    from repro.training.train_step import (make_train_step,
+                                           train_state_shapes,
+                                           train_state_specs)
+
+    if num_layers is not None:
+        arch = dataclasses.replace(arch, num_layers=num_layers)
+
+    training = shape.kind == "train"
+    policy = make_policy(arch, shape, mesh, training=training)
+    # perf iteration 7: remat='full' + 8 microbatches cut the worst train
+    # cell's temp memory 14.6x (571 -> 39 GiB/device at deepseek train_4k).
+    # The roofline extrapolation path (unroll=True) keeps microbatches=1 —
+    # XLA cost analysis counts the microbatch scan body once, and the
+    # per-step FLOPs are identical either way.
+    model = Model(arch, policy, remat="full" if training else "none",
+                  unroll=unroll)
+    ns = lambda spec: NamedSharding(mesh, spec)
+
+    if training:
+        cfg = opt.AdamWConfig()
+        mb = 1 if unroll else (8 if shape.global_batch % 8 == 0 else 1)
+        step = make_train_step(model, cfg, microbatches=mb)
+        state_shapes = train_state_shapes(model, cfg)
+        state_specs = jax.tree.map(ns, train_state_specs(model))
+        batch = input_specs(arch, shape)
+        bspec = {"tokens": ns(policy.spec("batch", None)),
+                 "labels": ns(policy.spec("batch", None))}
+        if "frontend_embeds" in batch:
+            bspec["frontend_embeds"] = ns(policy.spec("batch", None, None))
+        fn = jax.jit(step,
+                     in_shardings=(state_specs, bspec),
+                     out_shardings=(state_specs, None),
+                     donate_argnums=(0,))
+        return fn, (state_shapes, batch), policy
+
+    params_shapes = model.param_shapes()
+    pspecs = jax.tree.map(ns, model.param_specs())
+    ins = input_specs(arch, shape)
+
+    if shape.kind == "prefill":
+        def prefill(params, tokens, frontend_embeds=None):
+            return model.prefill(params, tokens, frontend_embeds)
+        args = [params_shapes, ins["tokens"]]
+        shardings = [pspecs, ns(policy.spec("batch", None))]
+        if "frontend_embeds" in ins:
+            args.append(ins["frontend_embeds"])
+            shardings.append(ns(policy.spec("batch", None, None)))
+        fn = jax.jit(prefill, in_shardings=tuple(shardings))
+        return fn, tuple(args), policy
+
+    # decode
+    cache_shapes = kvcache.cache_shapes(arch, shape.global_batch,
+                                        shape.seq_len)
+    cache_specs = jax.tree.map(ns, model.cache_specs())
+
+    def serve_step(params, cache, cache_len, tokens):
+        return model.decode_step(params, cache, cache_len, tokens)
+
+    fn = jax.jit(serve_step,
+                 in_shardings=(pspecs, cache_specs, ns(P()),
+                               ns(policy.spec("batch", None))),
+                 out_shardings=(None, cache_specs),
+                 donate_argnums=(1,))
+    args = (params_shapes, cache_shapes, ins["cache_len"], ins["tokens"])
+    return fn, args, policy
+
+
+def depth_pair(arch) -> Tuple[int, int]:
+    """(L1, L2) for the scan-extrapolation, honoring family granularity."""
+    if arch.family == "moe":
+        g = arch.moe.moe_every
+    elif arch.family == "hybrid":
+        g = arch.hybrid.attn_every
+    else:
+        g = 1
+    return g, 2 * g
+
+
+def run_cell(arch_name: str, shape_name: str, mesh_name: str,
+             out_path: Optional[str] = None, skip_extrapolation: bool = False
+             ) -> Dict[str, Any]:
+    import jax
+
+    from repro.configs import get_arch, get_shape, applicable, skip_reason
+    from repro.launch.mesh import make_production_mesh
+
+    arch = get_arch(arch_name)
+    shape = get_shape(shape_name)
+    rec: Dict[str, Any] = {
+        "arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind, "ok": False,
+    }
+    if not applicable(arch, shape):
+        rec.update(ok=True, skipped=True, reason=skip_reason(arch, shape))
+        return _finish(rec, out_path)
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+    chips = mesh.devices.size
+    rec["chips"] = int(chips)
+
+    try:
+        t0 = time.time()
+        fn, args, policy = build_step(arch, shape, mesh)
+        if isinstance(args, tuple):
+            lowered = fn.lower(*args)
+        else:
+            lowered = fn.lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t0 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0, 2)
+        rec["memory"] = memory_analysis_dict(compiled)
+        ca = compiled.cost_analysis()
+        rec["cost"] = {"flops": float(ca.get("flops", 0.0)),
+                       "bytes": float(ca.get("bytes accessed", 0.0))}
+        rec["policy_notes"] = list(policy.notes)
+        rec["attn_mode"] = policy.attn_mode
+        rec["ok"] = True
+
+        if not skip_extrapolation:
+            rec["extrapolation"] = _extrapolate(arch, shape, mesh)
+    except Exception as e:  # noqa: BLE001 — record and report
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    return _finish(rec, out_path)
+
+
+def _extrapolate(arch, shape, mesh) -> Dict[str, Any]:
+    """Lower L1- and L2-layer versions; per-layer deltas × true depth."""
+    L1, L2 = depth_pair(arch)
+    out: Dict[str, Any] = {"L1": L1, "L2": L2, "true_layers": arch.num_layers}
+    rows = {}
+    for L in (L1, L2):
+        fn, args, _ = build_step(arch, shape, mesh, num_layers=L,
+                                 unroll=True)
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+        ca = compiled.cost_analysis()
+        text = compiled.as_text()
+        rows[L] = {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "collectives": parse_collective_bytes(text),
+        }
+        del compiled, lowered, text
+    out["at_L1"] = rows[L1]
+    out["at_L2"] = rows[L2]
+    L = arch.num_layers
+    span = L2 - L1
+
+    def total(key):
+        per = (rows[L2][key] - rows[L1][key]) / span
+        return rows[L1][key] + per * (L - L1)
+
+    out["est_flops"] = total("flops")
+    out["est_bytes"] = total("bytes")
+    coll = {}
+    kinds = set(rows[L1]["collectives"]) | set(rows[L2]["collectives"])
+    for k in kinds:
+        c1 = rows[L1]["collectives"].get(k, 0.0)
+        c2 = rows[L2]["collectives"].get(k, 0.0)
+        coll[k] = max(c1 + (c2 - c1) / span * (L - L1), 0.0)
+    out["est_collective_bytes"] = coll
+    out["est_collective_total"] = sum(coll.values())
+    return out
+
+
+def _finish(rec: Dict[str, Any], out_path: Optional[str]) -> Dict[str, Any]:
+    if out_path:
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=1)
+    status = ("SKIP" if rec.get("skipped")
+              else "OK" if rec["ok"] else "FAIL")
+    print(f"[{status}] {rec['arch']} × {rec['shape']} × {rec['mesh']}"
+          + (f"  ({rec.get('error', '')})" if not rec["ok"] else ""))
+    return rec
+
+
+# ---------------------------------------------------------------------------
+def run_all(meshes, archs=None, shapes=None, jobs: int = 2):
+    """Spawn one subprocess per cell (isolates compiles; bounded memory)."""
+    from repro.configs import ARCHS, SHAPES
+    archs = archs or list(ARCHS)
+    shapes = shapes or list(SHAPES)
+    cells = [(a, s, m) for m in meshes for a in archs for s in shapes]
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    procs: Dict[Any, Tuple[str, str, str]] = {}
+    pending = list(cells)
+    failures = []
+    while pending or procs:
+        while pending and len(procs) < jobs:
+            a, s, m = pending.pop(0)
+            out = os.path.join(RESULTS_DIR, f"{a}__{s}__{m}.json")
+            if os.path.exists(out):
+                with open(out) as f:
+                    if json.load(f).get("ok"):
+                        print(f"[cached] {a} × {s} × {m}")
+                        continue
+            p = subprocess.Popen(
+                [sys.executable, "-m", "repro.launch.dryrun",
+                 "--arch", a, "--shape", s, "--mesh", m, "--out", out],
+                env={**os.environ, "PYTHONPATH": _pythonpath()})
+            procs[p] = (a, s, m)
+        done = [p for p in procs if p.poll() is not None]
+        for p in done:
+            a, s, m = procs.pop(p)
+            out = os.path.join(RESULTS_DIR, f"{a}__{s}__{m}.json")
+            ok = False
+            if os.path.exists(out):
+                with open(out) as f:
+                    ok = json.load(f).get("ok", False)
+            if not ok:
+                failures.append((a, s, m))
+        if procs:
+            time.sleep(2.0)
+    print(f"\n{len(cells) - len(failures)}/{len(cells)} cells OK")
+    for f3 in failures:
+        print("  FAIL:", *f3)
+    return failures
+
+
+def _pythonpath() -> str:
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+    cur = os.environ.get("PYTHONPATH", "")
+    return f"{src}:{cur}" if cur else src
+
+
+def redo_extrapolation(arch_name: str, shape_name: str, mesh_name: str,
+                       out_path: str):
+    """Refresh only the extrapolation block of an existing record."""
+    from repro.configs import get_arch, get_shape, applicable
+    from repro.launch.mesh import make_production_mesh
+    with open(out_path) as f:
+        rec = json.load(f)
+    arch, shape = get_arch(arch_name), get_shape(shape_name)
+    if not applicable(arch, shape):
+        return
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+    rec["extrapolation"] = _extrapolate(arch, shape, mesh)
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[EXT] {arch_name} × {shape_name} × {mesh_name}")
+
+
+def run_all_ext(jobs: int = 3):
+    """Re-run extrapolation for every cached OK record."""
+    import glob as _glob
+    paths = sorted(_glob.glob(os.path.join(RESULTS_DIR, "*.json")))
+    procs = {}
+    pending = []
+    for p in paths:
+        with open(p) as f:
+            rec = json.load(f)
+        if rec.get("ok") and not rec.get("skipped"):
+            pending.append((rec["arch"], rec["shape"], rec["mesh"], p))
+    while pending or procs:
+        while pending and len(procs) < jobs:
+            a, s, m, out = pending.pop(0)
+            pr = subprocess.Popen(
+                [sys.executable, "-m", "repro.launch.dryrun", "--arch", a,
+                 "--shape", s, "--mesh", m, "--out", out, "--redo-ext"],
+                env={**os.environ, "PYTHONPATH": _pythonpath()})
+            procs[pr] = (a, s, m)
+        for pr in [p for p in procs if p.poll() is not None]:
+            procs.pop(pr)
+        if procs:
+            time.sleep(2.0)
+    print("extrapolation refresh complete")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--out")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--all-ext", action="store_true")
+    ap.add_argument("--redo-ext", action="store_true")
+    ap.add_argument("--meshes", default="pod,multipod")
+    ap.add_argument("--jobs", type=int, default=2)
+    ap.add_argument("--no-extrapolation", action="store_true")
+    args = ap.parse_args()
+    if args.all:
+        fails = run_all(args.meshes.split(","), jobs=args.jobs)
+        sys.exit(1 if fails else 0)
+    if args.all_ext:
+        run_all_ext(jobs=args.jobs)
+        sys.exit(0)
+    if args.redo_ext:
+        redo_extrapolation(args.arch, args.shape, args.mesh, args.out)
+        sys.exit(0)
+    rec = run_cell(args.arch, args.shape, args.mesh, args.out,
+                   skip_extrapolation=args.no_extrapolation)
+    sys.exit(0 if rec["ok"] else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state.  The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; everything else sees the real (single-CPU) device.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """The assignment's production mesh: 16x16 chips per pod ('data','model'),
+    or 2 pods = 512 chips ('pod','data','model')."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_segment_mesh(chips: int, *, max_model: int = 16) -> Mesh:
+    """Mesh for one TPU *segment* (the MIG-instance analogue): a contiguous
+    sub-slice of `chips` chips arranged (data, model).
+
+    The model axis gets as many chips as possible (<= max_model) so a large
+    variant fits; leftover chips form the data axis.
+    """
+    if chips & (chips - 1):
+        raise ValueError(f"segment chips must be a power of two, got {chips}")
+    model = 1
+    while model * 2 <= min(chips, max_model):
+        model *= 2
+    data = chips // model
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_host_mesh(axes: Sequence[Tuple[str, int]]) -> Mesh:
+    """Arbitrary mesh over however many devices exist (tests/smoke)."""
+    shape = tuple(s for _, s in axes)
+    names = tuple(n for n, _ in axes)
+    return jax.make_mesh(shape, names)
+
+
+def device_count() -> int:
+    return jax.device_count()

@@ -1,0 +1,119 @@
+"""Generates the data-driven sections of EXPERIMENTS.md from
+results/dryrun/*.json (+ the baseline snapshot).
+
+    PYTHONPATH=src python -m repro.launch.report > /tmp/report.md
+"""
+import glob
+import json
+import os
+
+from repro.core import hw
+from repro.launch.roofline import fmt_s, load_all
+
+RES = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results")
+
+
+def dryrun_table(mesh: str) -> str:
+    rows = []
+    for p in sorted(glob.glob(os.path.join(RES, "dryrun", "*.json"))):
+        r = json.load(open(p))
+        if r["mesh"] != mesh:
+            continue
+        if r.get("skipped"):
+            rows.append(f"| {r['arch']} | {r['shape']} | SKIP (long_500k "
+                        "needs sub-quadratic attention) | — | — | — |")
+            continue
+        m = r["memory"]
+        gib = 2 ** 30
+        args, temp = m["argument_size_in_bytes"], m["temp_size_in_bytes"]
+        out = m["output_size_in_bytes"]
+        alias = m.get("alias_size_in_bytes", 0)
+        net = (args + temp + out - alias) / gib
+        fits = "yes" if net <= 16.0 else "NO"
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {'OK' if r['ok'] else 'FAIL'} "
+            f"| {args/gib:.2f} + {temp/gib:.2f} | {net:.2f} | {fits} |")
+    head = ("| arch | shape | compile | args+temp GiB/dev | net GiB/dev | "
+            "fits 16 GiB |\n|---|---|---|---|---|---|")
+    return head + "\n" + "\n".join(rows)
+
+
+def roofline_table(mesh: str = "pod") -> str:
+    rows = load_all(os.path.join(RES, "dryrun"))
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "MODEL/HLO | what would move the dominant term |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    hints = {
+        ("memory", "train"): "less remat recompute / fused flash attn "
+                             "(bytes-accessed is an upper bound pre-fusion)",
+        ("memory", "decode"): "KV-cache int8 + paged layout (weights+cache "
+                              "stream once/step)",
+        ("memory", "prefill"): "flash-fusion of attention intermediates",
+        ("compute", "train"): "MXU-aligned tiles; fewer remat dots",
+        ("compute", "prefill"): "causal block skipping (Pallas kernel)",
+        ("compute", "decode"): "speculative/multi-token decode",
+        ("collective", "train"): "overlap DP reduce with backward; int8 "
+                                 "gradient compression",
+        ("collective", "prefill"): "context-parallel KV gathers (done); "
+                                   "shard_map a2a island for MoE",
+        ("collective", "decode"): "shape-aware pins (done)",
+    }
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        ratio = (r["useful_ratio_6nd"] if r["kind"] == "train"
+                 else r["useful_ratio_fwd"])
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s']).strip()} "
+            f"| {fmt_s(r['memory_s']).strip()} | "
+            f"{fmt_s(r['collective_s']).strip()} | {r['dominant']} | "
+            f"{ratio:.2f} | {hints.get((r['dominant'], r['kind']), '—')} |")
+    return "\n".join(lines)
+
+
+def before_after() -> str:
+    """Collective-term comparison baseline vs final for every cell."""
+    base = {}
+    for p in sorted(glob.glob(os.path.join(RES, "dryrun_baseline",
+                                           "*.json"))):
+        r = json.load(open(p))
+        if r.get("ok") and not r.get("skipped") and "extrapolation" in r:
+            base[(r["arch"], r["shape"], r["mesh"])] = \
+                r["extrapolation"]["est_collective_total"]
+    lines = ["| cell | collective B/dev before* | after | Δ |",
+             "|---|---|---|---|"]
+    for p in sorted(glob.glob(os.path.join(RES, "dryrun", "*.json"))):
+        r = json.load(open(p))
+        if not (r.get("ok") and not r.get("skipped")
+                and "extrapolation" in r):
+            continue
+        key = (r["arch"], r["shape"], r["mesh"])
+        if key not in base or r["mesh"] != "pod":
+            continue
+        b = base[key]
+        a = r["extrapolation"]["est_collective_total"]
+        if b <= 0:
+            continue
+        lines.append(f"| {key[0]} × {key[1]} | {b:.2e} | {a:.2e} | "
+                     f"{a/b:.2f}x |")
+    lines.append("")
+    lines.append("*baseline used operand-size accounting; the final sweep "
+                 "counts physical ring traffic (all-gather at result size, "
+                 "all-reduce at 2× operand), which OVERSTATES 'after' "
+                 "relative to 'before' — the true improvements are larger "
+                 "than these ratios show (per-cell HLO evidence in §Perf).")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("### dry-run pod\n" + dryrun_table("pod"))
+        print("\n### dry-run multipod\n" + dryrun_table("multipod"))
+    if which in ("all", "roofline"):
+        print("\n### roofline\n" + roofline_table("pod"))
+    if which in ("all", "perf"):
+        print("\n### before/after\n" + before_after())

@@ -1,0 +1,45 @@
+"""``input_specs()``: ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, no device allocation — the dry-run lowers
+against these.  For training that is {tokens, labels}; for prefill the
+token batch (+ stub frontend embeddings for vlm/audio); for decode the
+one-token batch + the KV/SSM cache structs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeConfig
+from repro.models import kvcache
+from repro.models.model import NUM_FRONTEND_POSITIONS
+
+SDS = jax.ShapeDtypeStruct
+
+
+def input_specs(arch: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Inputs for the step the (arch, shape) cell lowers."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        out = {"tokens": SDS((B, S), jnp.int32),
+               "labels": SDS((B, S), jnp.int32)}
+        if arch.frontend != "none":
+            out["frontend_embeds"] = SDS(
+                (B, NUM_FRONTEND_POSITIONS, arch.d_model), jnp.bfloat16)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": SDS((B, S), jnp.int32)}
+        if arch.frontend != "none":
+            out["frontend_embeds"] = SDS(
+                (B, NUM_FRONTEND_POSITIONS, arch.d_model), jnp.bfloat16)
+        return out
+    if shape.kind == "decode":
+        return {
+            "tokens": SDS((B, 1), jnp.int32),
+            "cache": kvcache.cache_shapes(arch, B, S),
+            "cache_len": SDS((), jnp.int32),
+        }
+    raise ValueError(shape.kind)

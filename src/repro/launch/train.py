@@ -1,0 +1,97 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``
+
+Runs a real training loop (reduced configs on CPU; full configs on a TPU
+backend) with checkpoint/restart, deterministic data, and the remat /
+microbatch / grad-compression knobs from the training substrate.
+"""
+import argparse
+import os
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-test reduction of the arch")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compression", choices=["none", "int8"],
+                    default="none")
+    ap.add_argument("--remat", choices=["none", "full", "dots"],
+                    default="none")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_arch
+    from repro.models.model import Model
+    from repro.sharding.policy import ShardingPolicy, make_policy
+    from repro.training import checkpoint as ckpt
+    from repro.training import data as data_mod
+    from repro.training import optimizer as opt
+    from repro.training.elastic import make_elastic_mesh
+    from repro.training.train_step import init_train_state, make_train_step
+
+    arch = get_arch(args.arch)
+    if args.reduced:
+        arch = arch.reduced()
+
+    if args.model_parallel > 1 or jax.device_count() > 1:
+        mesh = make_elastic_mesh(args.model_parallel)
+        from repro.configs.shapes import ShapeConfig
+        shp = ShapeConfig("cli", args.seq_len, args.global_batch, "train")
+        policy = make_policy(arch, shp, mesh, training=True)
+    else:
+        policy = ShardingPolicy(mesh=None)
+
+    model = Model(arch, policy, remat=args.remat,
+                  param_dtype=jnp.float32 if args.reduced else jnp.bfloat16)
+    ocfg = opt.AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5),
+                           total_steps=args.steps)
+    state = init_train_state(model, jax.random.key(0), ocfg)
+    start = 0
+    if args.resume and args.ckpt_dir:
+        try:
+            state, start = ckpt.restore(args.ckpt_dir,
+                                        jax.eval_shape(lambda: state))
+            print(f"resumed from step {start}")
+        except FileNotFoundError:
+            pass
+
+    step_fn = jax.jit(make_train_step(
+        model, ocfg, microbatches=args.microbatches,
+        grad_compression=None if args.grad_compression == "none"
+        else args.grad_compression))
+    dcfg = data_mod.for_arch(arch, args.seq_len, args.global_batch)
+
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v)
+                 for k, v in data_mod.batch_at_step(dcfg, step).items()}
+        state, metrics = step_fn(state, batch)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            print(f"step {step:5d}  loss {loss:7.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):8.3f}  "
+                  f"lr {float(metrics['lr']):.2e}  {dt:6.1f}s")
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(args.ckpt_dir, step + 1, state)
+            ckpt.prune(args.ckpt_dir, keep=3)
+    if args.ckpt_dir:
+        ckpt.save(args.ckpt_dir, args.steps, state)
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

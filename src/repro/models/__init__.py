@@ -1,0 +1,3 @@
+from repro.models.model import (LOSS_IGNORE, NUM_FRONTEND_POSITIONS, Model)
+
+__all__ = ["Model", "LOSS_IGNORE", "NUM_FRONTEND_POSITIONS"]

@@ -1,0 +1,82 @@
+"""Decode caches for all model families.
+
+A cache is a plain dict pytree so pjit shardings / donation work uniformly:
+
+* dense / moe / vlm / audio : ``{"k": [L,B,S,KV,hd], "v": ...}``
+* ssm                        : ``{"ssm": SSMLayerState stacked [L,...]}``
+* hybrid                     : ``{"k": [G,B,S,KV,hd], "v": ..., "ssm": [L,...]}``
+  (G = number of shared-attention applications; each application keeps its
+  own KV cache, per Zamba2.)
+
+``cache_len`` travels separately as a replicated scalar.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import ssm as ssm_mod
+from repro.sharding.policy import ShardingPolicy
+
+Cache = Dict[str, Any]
+
+
+def num_attn_applications(arch: ArchConfig) -> int:
+    """How many attention layers need a KV cache."""
+    if arch.family == "ssm":
+        return 0
+    if arch.family == "hybrid":
+        ae = arch.hybrid.attn_every
+        return -(-arch.num_layers // ae)  # ceil
+    return arch.num_layers
+
+
+def init_cache(arch: ArchConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> Cache:
+    cache: Cache = {}
+    n_attn = num_attn_applications(arch)
+    if n_attn:
+        kv, hd = arch.num_kv_heads, arch.head_dim
+        cache["k"] = jnp.zeros((n_attn, batch, max_seq, kv, hd), dtype)
+        cache["v"] = jnp.zeros((n_attn, batch, max_seq, kv, hd), dtype)
+    if arch.ssm is not None:
+        cache["ssm"] = ssm_mod.init_layer_state(
+            arch, batch, arch.num_layers, dtype)
+    return cache
+
+
+def cache_shapes(arch: ArchConfig, batch: int, max_seq: int,
+                 dtype=jnp.bfloat16):
+    """ShapeDtypeStructs for the cache (dry-run: no allocation)."""
+    import jax
+    return jax.eval_shape(lambda: init_cache(arch, batch, max_seq, dtype))
+
+
+def cache_specs(arch: ArchConfig, policy: ShardingPolicy) -> Cache:
+    sp = policy.spec
+    specs: Cache = {}
+    if num_attn_applications(arch):
+        specs["k"] = sp("layers", "batch", "cache_seq", "kvheads", None)
+        specs["v"] = sp("layers", "batch", "cache_seq", "kvheads", None)
+    if arch.ssm is not None:
+        specs["ssm"] = ssm_mod.state_specs(policy, stacked=True)
+    return specs
+
+
+def cache_bytes(arch: ArchConfig, batch: int, max_seq: int,
+                dtype_bytes: int = 2) -> int:
+    """Closed-form cache footprint (used by the serving profiler)."""
+    total = 0
+    n_attn = num_attn_applications(arch)
+    if n_attn:
+        total += (2 * n_attn * batch * max_seq * arch.num_kv_heads
+                  * arch.head_dim * dtype_bytes)
+    if arch.ssm is not None:
+        s = arch.ssm
+        nh, hd = s.num_heads(arch.d_model), s.head_dim
+        total += arch.num_layers * batch * nh * hd * s.d_state * 4  # fp32
+        total += arch.num_layers * batch * (s.conv_width - 1) * (
+            nh * hd + 2 * s.d_state) * dtype_bytes
+    return total

@@ -1,0 +1,203 @@
+"""Core layers shared by all architectures.
+
+Conventions
+-----------
+* Weights are stored UNFLATTENED — attention projections are ``[d, H, hd]``,
+  not ``[d, H*hd]`` — so tensor-parallel shardings never cross a reshape
+  (reshapes across sharded dims force GSPMD reshards).
+* Norm/softmax statistics are computed in fp32 regardless of param dtype.
+* Attention is a pure-JAX flash implementation: ``lax.scan`` over KV blocks
+  with an online-softmax carry, so a 32k-token prefill never materializes an
+  ``S × S`` score matrix in the HLO.  A Pallas TPU kernel with the same
+  contract lives in ``repro.kernels``; ``attn_impl='pallas'`` dispatches to
+  it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Normalization
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """[head_dim // 2] inverse frequencies (fp32)."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, hd]; positions: [B, S] (int32). Rotates pairs (split-half
+    convention, llama-style)."""
+    hd = x.shape[-1]
+    inv_freq = rope_frequencies(hd, theta)  # [hd/2]
+    angles = positions.astype(jnp.float32)[..., None] * inv_freq  # [B, S, hd/2]
+    cos = jnp.cos(angles)[:, :, None, :]  # [B, S, 1, hd/2]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (pure JAX, block-scanned online softmax)
+# ---------------------------------------------------------------------------
+def _pick_block(seq: int, target: int) -> int:
+    """Largest divisor of `seq` that is <= target (>=1)."""
+    b = min(target, seq)
+    while seq % b:
+        b -= 1
+    return b
+
+
+def flash_attention(
+    q: jax.Array,            # [B, Sq, H, hd]
+    k: jax.Array,            # [B, Skv, H, hd]   (kv already repeated to H)
+    v: jax.Array,            # [B, Skv, H, hd]
+    q_positions: jax.Array,  # [B, Sq] global positions of the queries
+    kv_positions: jax.Array, # [B, Skv] global positions of the keys
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    block_kv: int = 1024,
+) -> jax.Array:
+    """Causal attention with online softmax over KV blocks.
+
+    Memory high-water mark per block is O(B·H·Sq·block_kv) instead of
+    O(B·H·Sq·Skv).  Masking uses global positions, so the same routine
+    serves training, prefill, and context-parallel shards (where q rows live
+    at arbitrary global offsets).
+    """
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    scale = scale if scale is not None else hd ** -0.5
+    blk = _pick_block(Skv, block_kv)
+    n_blocks = Skv // blk
+
+    qf = (q.astype(jnp.float32) * scale).transpose(0, 2, 1, 3)  # [B,H,Sq,hd]
+    # k/v stay in their storage dtype until inside the block body — any
+    # cross-device gather of the KV (context-parallel mode) then moves
+    # bf16, not a convert-hoisted fp32 copy (2x bytes).
+    kf = k.transpose(0, 2, 1, 3)                                # [B,H,Skv,hd]
+    vf = v.transpose(0, 2, 1, 3)
+
+    kf = kf.reshape(B, H, n_blocks, blk, hd)
+    vf = vf.reshape(B, H, n_blocks, blk, hd)
+    kv_pos = kv_positions.reshape(B, n_blocks, blk)
+
+    def body(carry, inputs):
+        m, l, acc = carry          # [B,H,Sq], [B,H,Sq], [B,H,Sq,hd]
+        kb, vb, pb = inputs        # [B,H,blk,hd], [B,H,blk,hd], [B,blk]
+        kb = kb.astype(jnp.float32)
+        vb = vb.astype(jnp.float32)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kb)  # [B,H,Sq,blk]
+        if causal:
+            mask = q_positions[:, None, :, None] >= pb[:, None, None, :]
+            s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        correction = jnp.exp(m - m_new)
+        l_new = l * correction + jnp.sum(p, axis=-1)
+        acc_new = acc * correction[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p, vb)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Sq), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), dtype=jnp.float32)
+    acc0 = jnp.zeros((B, H, Sq, hd), dtype=jnp.float32)
+    # scan over kv blocks: inputs indexed on block axis
+    (m, l, acc), _ = lax.scan(
+        body,
+        (m0, l0, acc0),
+        (kf.transpose(2, 0, 1, 3, 4), vf.transpose(2, 0, 1, 3, 4),
+         kv_pos.transpose(1, 0, 2)),
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # [B,Sq,H,hd]
+
+
+def decode_attention(
+    q: jax.Array,          # [B, 1, H, hd]
+    k_cache: jax.Array,    # [B, S, KV, hd]
+    v_cache: jax.Array,    # [B, S, KV, hd]
+    cache_len: jax.Array,  # scalar int32: number of valid cache positions
+    *,
+    q_per_kv: int,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Single-token attention against a (possibly seq-sharded) KV cache.
+
+    The softmax reduction runs over the full cache S dim; when the cache is
+    sharded over the model axis GSPMD lowers the max/sum to all-reduces —
+    exactly the flash-decode partial-softmax pattern.
+    """
+    B, S, KV, hd = k_cache.shape
+    H = q.shape[2]
+    scale = scale if scale is not None else hd ** -0.5
+    qf = q.astype(jnp.float32)[:, 0] * scale           # [B, H, hd]
+    qf = qf.reshape(B, KV, q_per_kv, hd)
+    kf = k_cache.astype(jnp.float32)                   # [B, S, KV, hd]
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, kf)          # [B, KV, G, S]
+    valid = jnp.arange(S, dtype=jnp.int32)[None, :] < cache_len  # [1, S]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def repeat_kv(x: jax.Array, q_per_kv: int) -> jax.Array:
+    """[B, S, KV, hd] -> [B, S, KV*q_per_kv, hd] by repeating each kv head."""
+    if q_per_kv == 1:
+        return x
+    B, S, KV, hd = x.shape
+    x = jnp.broadcast_to(x[:, :, :, None, :], (B, S, KV, q_per_kv, hd))
+    return x.reshape(B, S, KV * q_per_kv, hd)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+def gated_mlp(x: jax.Array, wg: jax.Array, wu: jax.Array, wd: jax.Array,
+              activation: str) -> jax.Array:
+    """SwiGLU / GeGLU: (act(x@wg) * (x@wu)) @ wd."""
+    g = jnp.einsum("bsd,df->bsf", x, wg)
+    u = jnp.einsum("bsd,df->bsf", x, wu)
+    if activation == "silu":
+        g = jax.nn.silu(g)
+    elif activation == "gelu":
+        g = jax.nn.gelu(g, approximate=True)
+    else:
+        raise ValueError(f"unknown activation {activation!r}")
+    return jnp.einsum("bsf,fd->bsd", g * u, wd)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits
+# ---------------------------------------------------------------------------
+def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def logits(x: jax.Array, head: jax.Array) -> jax.Array:
+    """[B,S,d] @ [d,V] -> fp32 logits."""
+    return jnp.einsum("bsd,dv->bsv", x, head,
+                      preferred_element_type=jnp.float32)

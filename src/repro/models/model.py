@@ -1,0 +1,421 @@
+"""The unified model: one code path for all 10 assigned architectures.
+
+``Model`` wires the family blocks (dense / moe / ssm / hybrid) into
+scan-over-layers forward passes with three entry points:
+
+* ``loss(params, batch)``        — training objective (next-token CE)
+* ``prefill(params, tokens, …)`` — full-sequence forward + cache build
+* ``decode_step(params, cache, cache_len, tokens)`` — one token vs cache
+
+Modality frontends (vlm/audio) are STUBS per the assignment: the first
+``NUM_FRONTEND_POSITIONS`` sequence slots take precomputed patch/frame
+embeddings straight from ``input_specs()``; those positions are masked out
+of the loss.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import kvcache, layers
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import transformer as tfm
+from repro.sharding.policy import ShardingPolicy
+
+Params = Dict[str, Any]
+
+NUM_FRONTEND_POSITIONS = 64
+LOSS_IGNORE = -1
+
+
+def _stack_tree(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+@dataclasses.dataclass
+class Model:
+    arch: ArchConfig
+    policy: ShardingPolicy
+    attn_impl: str = "jax"      # "jax" | "pallas"
+    ssd_impl: str = "jax"       # "jax" | "pallas"
+    param_dtype: Any = jnp.bfloat16
+    remat: str = "none"         # "none" | "full" | "dots"
+    cache_update: str = "onehot"   # "onehot" (collective-free) | "dus"
+    moe_dispatch: str = "auto"     # "auto" | "grouped" | "global"
+    # unroll the layer scan into explicit per-layer ops.  Production keeps
+    # the scan (O(1) HLO in depth); the roofline depth-extrapolation
+    # lowers 1- and 2-layer UNROLLED variants because XLA cost analysis
+    # counts a scan body once regardless of trip count.
+    unroll: bool = False
+
+    # ------------------------------------------------------------------
+    # layer grouping
+    # ------------------------------------------------------------------
+    @property
+    def moe_group(self) -> Tuple[int, int]:
+        """(n_groups, dense_per_group) for moe archs."""
+        m = self.arch.moe
+        n_groups = self.arch.num_layers // m.moe_every
+        return n_groups, m.moe_every - 1
+
+    @property
+    def hybrid_groups(self):
+        """List of (start, stop) ssm-layer ranges, one per shared-attn
+        application."""
+        ae = self.arch.hybrid.attn_every
+        L = self.arch.num_layers
+        return [(g * ae, min((g + 1) * ae, L)) for g in range(-(-L // ae))]
+
+    # ------------------------------------------------------------------
+    # init / specs
+    # ------------------------------------------------------------------
+    def init(self, rng) -> Params:
+        arch, dt = self.arch, self.param_dtype
+        k_emb, k_body, k_head, k_attn = jax.random.split(rng, 4)
+        params: Params = {
+            "embed": (jax.random.normal(k_emb, (arch.vocab_size, arch.d_model),
+                                        jnp.float32) * 0.02).astype(dt),
+            "final_norm": jnp.zeros((arch.d_model,), dt),
+        }
+        if not arch.tie_embeddings:
+            params["lm_head"] = (jax.random.normal(
+                k_head, (arch.d_model, arch.vocab_size), jnp.float32)
+                * arch.d_model ** -0.5).astype(dt)
+
+        fam = arch.family
+        if fam in ("dense", "vlm", "audio"):
+            params["blocks"] = tfm.init_dense_blocks(
+                k_body, arch, arch.num_layers, dt)
+        elif fam == "moe":
+            n_groups, dense_per = self.moe_group
+            body: Params = {"moe": {
+                **tfm.init_attn(jax.random.fold_in(k_body, 0), arch, n_groups, dt),
+                **moe_mod.init_moe(jax.random.fold_in(k_body, 1), arch,
+                                   n_groups, dt)}}
+            if dense_per:
+                dense = tfm.init_dense_blocks(
+                    jax.random.fold_in(k_body, 2), arch,
+                    n_groups * dense_per, dt)
+                body["dense"] = jax.tree.map(
+                    lambda x: x.reshape((n_groups, dense_per) + x.shape[1:]),
+                    dense)
+            params["blocks"] = body
+        elif fam == "ssm":
+            params["blocks"] = ssm_mod.init_ssm(k_body, arch,
+                                                arch.num_layers, dt)
+        elif fam == "hybrid":
+            params["blocks"] = ssm_mod.init_ssm(k_body, arch,
+                                                arch.num_layers, dt)
+            params["shared_attn"] = tfm.init_dense_blocks(k_attn, arch, 1, dt)
+        else:
+            raise ValueError(f"unknown family {fam}")
+        return params
+
+    def param_specs(self) -> Params:
+        arch, pol = self.arch, self.policy
+        sp = pol.spec
+        specs: Params = {
+            "embed": sp("vocab", "embed"),
+            "final_norm": sp(None),
+        }
+        if not arch.tie_embeddings:
+            specs["lm_head"] = sp("embed", "vocab")
+        fam = arch.family
+        if fam in ("dense", "vlm", "audio"):
+            specs["blocks"] = tfm.dense_block_specs(arch, pol)
+        elif fam == "moe":
+            n_groups, dense_per = self.moe_group
+            body = {"moe": {**tfm.attn_specs(arch, pol),
+                            **moe_mod.moe_specs(arch, pol)}}
+            if dense_per:
+                dense = tfm.dense_block_specs(arch, pol)
+                # extra leading group dim
+                body["dense"] = jax.tree.map(
+                    lambda s: jax.sharding.PartitionSpec(None, *s), dense)
+            specs["blocks"] = body
+        elif fam == "ssm":
+            specs["blocks"] = ssm_mod.ssm_specs(arch, pol)
+        elif fam == "hybrid":
+            specs["blocks"] = ssm_mod.ssm_specs(arch, pol)
+            specs["shared_attn"] = tfm.dense_block_specs(arch, pol)
+        return specs
+
+    def param_shapes(self) -> Params:
+        """ShapeDtypeStructs without allocating (dry-run path)."""
+        return jax.eval_shape(lambda: self.init(jax.random.key(0)))
+
+    # ------------------------------------------------------------------
+    # embedding / head
+    # ------------------------------------------------------------------
+    def embed_inputs(self, params: Params, tokens: jax.Array,
+                     frontend_embeds: Optional[jax.Array]) -> jax.Array:
+        h = layers.embed(tokens, params["embed"]).astype(self.param_dtype)
+        if frontend_embeds is not None:
+            P = frontend_embeds.shape[1]
+            h = jnp.concatenate(
+                [frontend_embeds.astype(h.dtype), h[:, P:]], axis=1)
+        return self.policy.pin(h, "batch", "seq", None)
+
+    def head(self, params: Params, h: jax.Array) -> jax.Array:
+        h = layers.rms_norm(h, params["final_norm"], self.arch.norm_eps)
+        table = (params["embed"].T if self.arch.tie_embeddings
+                 else params["lm_head"])
+        lg = layers.logits(h, table)
+        return self.policy.pin(lg, "batch", "seq", "vocab")
+
+    # ------------------------------------------------------------------
+    # body: full-sequence
+    # ------------------------------------------------------------------
+    def _maybe_remat(self, fn):
+        if self.remat == "full":
+            return jax.checkpoint(fn)
+        if self.remat == "dots":
+            return jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        return fn
+
+    def _scan(self, step, carry, xs):
+        """lax.scan, or an explicit unrolled loop (see ``unroll``)."""
+        if not self.unroll:
+            return lax.scan(step, carry, xs)
+        L = jax.tree.leaves(xs)[0].shape[0]
+        ys = []
+        for i in range(L):
+            x_i = jax.tree.map(lambda a: a[i], xs)
+            carry, y = step(carry, x_i)
+            ys.append(y)
+        stacked = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+        return carry, stacked
+
+    def _body_full(self, params: Params, h: jax.Array,
+                   positions: jax.Array, want_cache: bool = True):
+        """Runs all blocks; returns (h, cache or None).
+
+        ``want_cache=False`` (training) emits no per-layer KV/SSM outputs —
+        otherwise the scan materializes a full stacked cache that the loss
+        never reads (hundreds of GiB/device at deepseek-67b train_4k)."""
+        arch, pol = self.arch, self.policy
+        fam = arch.family
+
+        if fam in ("dense", "vlm", "audio"):
+            def step(carry, p_l):
+                out, kv = tfm.dense_block_full(carry, p_l, arch, pol,
+                                               positions, self.attn_impl)
+                return out, kv if want_cache else None
+            h, kvs = self._scan(self._maybe_remat(step), h, params["blocks"])
+            if not want_cache:
+                return h, None
+            return h, {"k": kvs[0], "v": kvs[1]}
+
+        if fam == "moe":
+            n_groups, dense_per = self.moe_group
+
+            def step(carry, p_g):
+                ks, vs = [], []
+                out = carry
+                for i in range(dense_per):
+                    p_d = jax.tree.map(lambda x: x[i], p_g["dense"])
+                    out, kv = tfm.dense_block_full(out, p_d, arch, pol,
+                                                   positions, self.attn_impl)
+                    ks.append(kv[0]); vs.append(kv[1])
+                out, kv = moe_mod.moe_block_full(
+                    out, p_g["moe"], arch, pol, positions, self.attn_impl,
+                    dispatch=self.moe_dispatch)
+                ks.append(kv[0]); vs.append(kv[1])
+                if not want_cache:
+                    return out, None
+                return out, (jnp.stack(ks), jnp.stack(vs))
+
+            h, kvs = self._scan(self._maybe_remat(step), h,
+                                params["blocks"])
+            if not want_cache:
+                return h, None
+            ks, vs = kvs
+            # [n_groups, per_group, ...] -> [L, ...]
+            merge = lambda x: x.reshape((-1,) + x.shape[2:])
+            return h, {"k": merge(ks), "v": merge(vs)}
+
+        if fam == "ssm":
+            def step(carry, p_l):
+                out, st = ssm_mod.ssm_block_full(carry, p_l, arch, pol,
+                                                 ssd_impl=self.ssd_impl)
+                return out, st if want_cache else None
+            h, states = self._scan(self._maybe_remat(step), h, params["blocks"])
+            if not want_cache:
+                return h, None
+            return h, {"ssm": states}
+
+        if fam == "hybrid":
+            p_attn = jax.tree.map(lambda x: x[0], params["shared_attn"])
+            ks, vs, states = [], [], []
+
+            def ssm_step(carry, p_l):
+                out, st = ssm_mod.ssm_block_full(carry, p_l, arch, pol,
+                                                 ssd_impl=self.ssd_impl)
+                return out, st if want_cache else None
+
+            for (lo, hi) in self.hybrid_groups:
+                h, kv = tfm.dense_block_full(h, p_attn, arch, pol,
+                                             positions, self.attn_impl)
+                if want_cache:
+                    ks.append(kv[0]); vs.append(kv[1])
+                p_grp = jax.tree.map(lambda x: x[lo:hi], params["blocks"])
+                h, st = self._scan(self._maybe_remat(ssm_step), h, p_grp)
+                if want_cache:
+                    states.append(st)
+            if not want_cache:
+                return h, None
+            cache = {
+                "k": jnp.stack(ks), "v": jnp.stack(vs),
+                "ssm": jax.tree.map(
+                    lambda *xs: jnp.concatenate(xs, axis=0), *states),
+            }
+            return h, cache
+
+        raise ValueError(fam)
+
+    # ------------------------------------------------------------------
+    # body: decode
+    # ------------------------------------------------------------------
+    def _body_decode(self, params: Params, h: jax.Array, cache: Dict,
+                     cache_len: jax.Array):
+        arch, pol = self.arch, self.policy
+        fam = arch.family
+
+        if fam in ("dense", "vlm", "audio"):
+            def step(carry, xs):
+                p_l, k_l, v_l = xs
+                out, (k_l, v_l) = tfm.dense_block_decode(
+                    carry, p_l, arch, pol, k_l, v_l, cache_len,
+                    cache_update=self.cache_update)
+                return out, (k_l, v_l)
+            h, (k, v) = self._scan(step, h,
+                                   (params["blocks"], cache["k"], cache["v"]))
+            return h, {"k": k, "v": v}
+
+        if fam == "moe":
+            n_groups, dense_per = self.moe_group
+            per = dense_per + 1
+            resh = lambda x: x.reshape((n_groups, per) + x.shape[1:])
+            kg, vg = resh(cache["k"]), resh(cache["v"])
+
+            def step(carry, xs):
+                p_g, k_g, v_g = xs
+                out = carry
+                ks, vs = [], []
+                for i in range(dense_per):
+                    p_d = jax.tree.map(lambda x: x[i], p_g["dense"])
+                    out, (k_i, v_i) = tfm.dense_block_decode(
+                        out, p_d, arch, pol, k_g[i], v_g[i], cache_len,
+                        cache_update=self.cache_update)
+                    ks.append(k_i); vs.append(v_i)
+                out, (k_m, v_m) = moe_mod.moe_block_decode(
+                    out, p_g["moe"], arch, pol, k_g[dense_per],
+                    v_g[dense_per], cache_len,
+                    cache_update=self.cache_update,
+                    dispatch=self.moe_dispatch)
+                ks.append(k_m); vs.append(v_m)
+                return out, (jnp.stack(ks), jnp.stack(vs))
+
+            h, (k, v) = self._scan(step, h, (params["blocks"], kg, vg))
+            merge = lambda x: x.reshape((-1,) + x.shape[2:])
+            return h, {"k": merge(k), "v": merge(v)}
+
+        if fam == "ssm":
+            def step(carry, xs):
+                p_l, st = xs
+                out, st = ssm_mod.ssm_block_decode(carry, p_l, arch, pol, st)
+                return out, st
+            h, states = self._scan(step, h, (params["blocks"], cache["ssm"]))
+            return h, {"ssm": states}
+
+        if fam == "hybrid":
+            p_attn = jax.tree.map(lambda x: x[0], params["shared_attn"])
+            ks, vs, states = [], [], []
+
+            def ssm_step(carry, xs):
+                p_l, st = xs
+                out, st = ssm_mod.ssm_block_decode(carry, p_l, arch, pol, st)
+                return out, st
+
+            for g, (lo, hi) in enumerate(self.hybrid_groups):
+                h, (k_g, v_g) = tfm.dense_block_decode(
+                    h, p_attn, arch, pol, cache["k"][g], cache["v"][g],
+                    cache_len, cache_update=self.cache_update)
+                ks.append(k_g); vs.append(v_g)
+                p_grp = jax.tree.map(lambda x: x[lo:hi], params["blocks"])
+                st_grp = jax.tree.map(lambda x: x[lo:hi], cache["ssm"])
+                h, st = self._scan(ssm_step, h, (p_grp, st_grp))
+                states.append(st)
+            return h, {
+                "k": jnp.stack(ks), "v": jnp.stack(vs),
+                "ssm": jax.tree.map(
+                    lambda *xs: jnp.concatenate(xs, axis=0), *states),
+            }
+
+        raise ValueError(fam)
+
+    # ------------------------------------------------------------------
+    # public entry points
+    # ------------------------------------------------------------------
+    def forward(self, params: Params, tokens: jax.Array,
+                frontend_embeds: Optional[jax.Array] = None) -> jax.Array:
+        """Full-sequence forward → fp32 logits [B, S, V]."""
+        B, S = tokens.shape
+        h = self.embed_inputs(params, tokens, frontend_embeds)
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        h, _ = self._body_full(params, h, positions, want_cache=False)
+        return self.head(params, h)
+
+    def loss(self, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+        """Mean next-token cross-entropy (labels == LOSS_IGNORE masked)."""
+        logits = self.forward(params, batch["tokens"],
+                              batch.get("frontend_embeds"))
+        labels = batch["labels"]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+        mask = (labels != LOSS_IGNORE).astype(jnp.float32)
+        nll = (lse - ll) * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    def prefill(self, params: Params, tokens: jax.Array,
+                frontend_embeds: Optional[jax.Array] = None,
+                max_seq: Optional[int] = None):
+        """Forward + cache build. Returns (last-token logits, cache).
+
+        The attention caches come back sized [*, B, S, KV, hd]; callers that
+        decode further should allocate `max_seq` and copy in (the serving
+        engine does this)."""
+        B, S = tokens.shape
+        h = self.embed_inputs(params, tokens, frontend_embeds)
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        h, cache = self._body_full(params, h, positions)
+        logits = self.head(params, h[:, -1:])
+        if max_seq is not None and max_seq > S and "k" in cache:
+            pad = ((0, 0), (0, 0), (0, max_seq - S), (0, 0), (0, 0))
+            cache["k"] = jnp.pad(cache["k"], pad)
+            cache["v"] = jnp.pad(cache["v"], pad)
+        return logits, cache
+
+    def decode_step(self, params: Params, cache: Dict,
+                    cache_len: jax.Array, tokens: jax.Array):
+        """One decode step. tokens: [B, 1]. Returns (logits [B,1,V], cache)."""
+        h = layers.embed(tokens, params["embed"]).astype(self.param_dtype)
+        h = self.policy.pin(h, "batch", None, None)
+        h, cache = self._body_decode(params, h, cache, cache_len)
+        return self.head(params, h), cache
+
+    # ------------------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int) -> Dict:
+        return kvcache.init_cache(self.arch, batch, max_seq)
+
+    def cache_specs(self) -> Dict:
+        return kvcache.cache_specs(self.arch, self.policy)

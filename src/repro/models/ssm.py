@@ -1,0 +1,325 @@
+"""Mamba2 (SSD — state-space duality) blocks. [arXiv:2405.21060]
+
+TPU adaptation notes
+--------------------
+* The SSD *chunked dual form* is used for full-sequence mode: intra-chunk
+  work is dense matmuls over ``[chunk, chunk]`` blocks (MXU-friendly), the
+  inter-chunk recurrence is a short ``lax.scan`` over chunk states.  A
+  Pallas kernel with the same contract lives in ``repro.kernels.ssd_scan``.
+* The depthwise causal conv (width 4) is expressed as a sum of shifted
+  scaled copies — no conv op, no channel reshapes, shards trivially.
+* Projections are stored unflattened ``[d, nh, hd]`` so head-parallel
+  sharding (logical axis ``ssm_heads``) never crosses a reshape.
+* Decode keeps a recurrent cache: SSD state ``[B, nh, hd, ds]`` + conv tail
+  ``[B, cw-1, ...]`` — O(1) per token, which is why SSM/hybrid archs are the
+  only ones allowed the 500k-context shape.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import layers
+from repro.sharding.policy import ShardingPolicy
+
+Params = Dict[str, Any]
+
+
+class SSMLayerState(NamedTuple):
+    """Recurrent per-layer decode state (leading L dim when stacked)."""
+    ssd: jax.Array        # [B, nh, hd, ds] fp32
+    conv_x: jax.Array     # [B, cw-1, nh, hd]
+    conv_B: jax.Array     # [B, cw-1, ds]
+    conv_C: jax.Array     # [B, cw-1, ds]
+
+
+# ---------------------------------------------------------------------------
+# Init / specs
+# ---------------------------------------------------------------------------
+def init_ssm(key, arch: ArchConfig, n_layers: int, dtype) -> Params:
+    s = arch.ssm
+    d = arch.d_model
+    nh, hd, ds, cw = s.num_heads(d), s.head_dim, s.d_state, s.conv_width
+    ks = jax.random.split(key, 8)
+    sc = d ** -0.5
+
+    def w(k, shape, scale=sc):
+        return (jax.random.normal(k, shape, jnp.float32) * scale).astype(dtype)
+
+    return {
+        "ssm_norm": jnp.zeros((n_layers, d), dtype),
+        "wz": w(ks[0], (n_layers, d, nh, hd)),
+        "wx": w(ks[1], (n_layers, d, nh, hd)),
+        "wB": w(ks[2], (n_layers, d, ds)),
+        "wC": w(ks[3], (n_layers, d, ds)),
+        "wdt": w(ks[4], (n_layers, d, nh)),
+        "conv_x": w(ks[5], (n_layers, cw, nh, hd), cw ** -0.5),
+        "conv_B": w(ks[6], (n_layers, cw, ds), cw ** -0.5),
+        "conv_C": w(ks[7], (n_layers, cw, ds), cw ** -0.5),
+        # A in [-16, -1]: log-uniform init per mamba2 reference
+        "A_log": jnp.broadcast_to(
+            jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+            (n_layers, nh)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((n_layers, nh), jnp.float32),
+        "D": jnp.ones((n_layers, nh), dtype),
+        "gate_norm": jnp.zeros((n_layers, nh, hd), dtype),
+        "wo": w(jax.random.fold_in(key, 99), (n_layers, nh, hd, d),
+                (nh * hd) ** -0.5),
+    }
+
+
+def ssm_specs(arch: ArchConfig, policy: ShardingPolicy) -> Dict[str, Any]:
+    sp = policy.spec
+    return {
+        "ssm_norm": sp("layers", None),
+        "wz": sp("layers", "embed", "ssm_heads", "ssm_pdim"),
+        "wx": sp("layers", "embed", "ssm_heads", "ssm_pdim"),
+        "wB": sp("layers", "embed", None),
+        "wC": sp("layers", "embed", None),
+        "wdt": sp("layers", "embed", None),
+        "conv_x": sp("layers", None, "ssm_heads", "ssm_pdim"),
+        "conv_B": sp("layers", None, None),
+        "conv_C": sp("layers", None, None),
+        "A_log": sp("layers", None),
+        "dt_bias": sp("layers", None),
+        "D": sp("layers", None),
+        "gate_norm": sp("layers", "ssm_heads", "ssm_pdim"),
+        "wo": sp("layers", "ssm_heads", "ssm_pdim", "embed"),
+    }
+
+
+def init_layer_state(arch: ArchConfig, batch: int, n_layers: int,
+                     dtype=jnp.float32) -> SSMLayerState:
+    s = arch.ssm
+    d = arch.d_model
+    nh, hd, ds, cw = s.num_heads(d), s.head_dim, s.d_state, s.conv_width
+    L = (n_layers,) if n_layers else ()
+    return SSMLayerState(
+        ssd=jnp.zeros(L + (batch, nh, hd, ds), jnp.float32),
+        conv_x=jnp.zeros(L + (batch, cw - 1, nh, hd), dtype),
+        conv_B=jnp.zeros(L + (batch, cw - 1, ds), dtype),
+        conv_C=jnp.zeros(L + (batch, cw - 1, ds), dtype),
+    )
+
+
+def state_specs(policy: ShardingPolicy, stacked: bool):
+    sp = policy.spec
+    lead = ("layers",) if stacked else ()
+    return SSMLayerState(
+        ssd=sp(*lead, "batch", "ssm_heads", "ssm_pdim", None),
+        conv_x=sp(*lead, "batch", None, "ssm_heads", "ssm_pdim"),
+        conv_B=sp(*lead, "batch", None, None),
+        conv_C=sp(*lead, "batch", None, None),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Primitives
+# ---------------------------------------------------------------------------
+def causal_shift_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv as a sum of shifted copies.
+
+    x: [B, S, *ch]; w: [cw, *ch] → [B, S, *ch] (SiLU applied by caller)."""
+    cw = w.shape[0]
+    out = x * w[cw - 1]
+    for i in range(cw - 1):
+        shift = cw - 1 - i
+        shifted = jnp.pad(x, ((0, 0), (shift, 0)) + ((0, 0),) * (x.ndim - 2)
+                          )[:, : x.shape[1]]
+        out = out + shifted * w[i]
+    return out
+
+
+def _segsum_exp(dA: jax.Array) -> jax.Array:
+    """dA: [..., q] per-step log-decay → L[..., i, j] = exp(Σ_{k=j+1..i} dA_k)
+    for i >= j else 0 (the 1-semiseparable causal decay matrix).
+
+    The mask is applied to the EXPONENT (not the output): masked entries
+    have diff > 0, whose exp can overflow and poison the backward pass
+    through the where (inf · 0 = NaN cotangents)."""
+    q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]        # [..., i, j]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.exp(jnp.where(mask, diff, -1e30))
+
+
+def ssd_chunked(
+    x: jax.Array,      # [B, S, nh, hd] (post-conv, fp32)
+    dt: jax.Array,     # [B, S, nh] softplus'd step sizes (fp32)
+    A: jax.Array,      # [nh] negative decay rates (fp32)
+    Bm: jax.Array,     # [B, S, ds]
+    Cm: jax.Array,     # [B, S, ds]
+    chunk: int,
+    init_state: Optional[jax.Array] = None,  # [B, nh, hd, ds]
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD dual form. Returns (y [B,S,nh,hd], final_state)."""
+    B_, S, nh, hd = x.shape
+    ds = Bm.shape[-1]
+    q = min(chunk, S)
+    while S % q:
+        q -= 1
+    c = S // q
+
+    xc = x.reshape(B_, c, q, nh, hd)
+    dtc = dt.reshape(B_, c, q, nh)
+    Bc = Bm.reshape(B_, c, q, ds)
+    Cc = Cm.reshape(B_, c, q, ds)
+
+    dA = dtc * A                                     # [B,c,q,nh] (<= 0)
+    dA_cs = jnp.cumsum(dA, axis=2)                   # [B,c,q,nh]
+    xdt = xc * dtc[..., None]                        # [B,c,q,nh,hd]
+
+    # 1. intra-chunk (block-diagonal) output — dense matmuls
+    Lmat = _segsum_exp(jnp.moveaxis(dA, -1, -2))     # [B,c,nh,q,q]
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)   # [B,c,q,q]
+    y_diag = jnp.einsum("bchij,bcij,bcjhp->bcihp",
+                        Lmat, scores, xdt)
+
+    # 2. per-chunk final states
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)   # [B,c,q,nh]
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn",
+                        Bc, decay_states * dtc, xc)        # [B,c,nh,hd,ds]
+
+    # 3. inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])              # [B,c,nh]
+    s0 = (init_state if init_state is not None
+          else jnp.zeros((B_, nh, hd, ds), x.dtype))
+
+    def scan_fn(prev, inp):
+        st, dec = inp                                       # [B,nh,hd,ds], [B,nh]
+        new = prev * dec[..., None, None] + st
+        return new, prev                                    # emit state ENTERING the chunk
+
+    final, prev_states = lax.scan(
+        scan_fn, s0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)           # [B,c,nh,hd,ds]
+
+    # 4. contribution of the state entering each chunk
+    state_decay = jnp.exp(dA_cs)                            # [B,c,q,nh]
+    y_off = jnp.einsum("bcin,bchpn,bcih->bcihp",
+                       Cc, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(B_, S, nh, hd)
+    return y, final
+
+
+def ssd_step(
+    x: jax.Array,      # [B, nh, hd]
+    dt: jax.Array,     # [B, nh]
+    A: jax.Array,      # [nh]
+    Bm: jax.Array,     # [B, ds]
+    Cm: jax.Array,     # [B, ds]
+    state: jax.Array,  # [B, nh, hd, ds]
+) -> Tuple[jax.Array, jax.Array]:
+    """Single recurrent SSD step (decode)."""
+    dA = jnp.exp(dt * A)                                    # [B,nh]
+    upd = jnp.einsum("bhp,bn->bhpn", x * dt[..., None], Bm)
+    state = state * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm)
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# Block forward
+# ---------------------------------------------------------------------------
+def _gated_out(y, z, p, arch, policy):
+    """Mamba2 gated RMSNorm + output projection. y,z: [B,S,nh,hd]."""
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * lax.rsqrt(var + arch.norm_eps)
+    y = y * (1.0 + p["gate_norm"].astype(jnp.float32))
+    y = policy.pin(y.astype(z.dtype), "batch", "seq", "ssm_heads", "ssm_pdim")
+    return jnp.einsum("bshp,hpd->bsd", y, p["wo"])
+
+
+def ssm_block_full(
+    h: jax.Array, p: Params, arch: ArchConfig, policy: ShardingPolicy,
+    init_state: Optional[SSMLayerState] = None, ssd_impl: str = "jax",
+) -> Tuple[jax.Array, SSMLayerState]:
+    """Full-sequence Mamba2 block. Returns (out, final recurrent state)."""
+    s = arch.ssm
+    B, S, d = h.shape
+    hn = layers.rms_norm(h, p["ssm_norm"], arch.norm_eps)
+
+    z = jnp.einsum("bsd,dhp->bshp", hn, p["wz"])
+    x_pre = jnp.einsum("bsd,dhp->bshp", hn, p["wx"])
+    B_pre = jnp.einsum("bsd,dn->bsn", hn, p["wB"])
+    C_pre = jnp.einsum("bsd,dn->bsn", hn, p["wC"])
+    dt = jnp.einsum("bsd,dh->bsh", hn.astype(jnp.float32),
+                    p["wdt"].astype(jnp.float32))
+    x_pre = policy.pin(x_pre, "batch", "seq", "ssm_heads", "ssm_pdim")
+    z = policy.pin(z, "batch", "seq", "ssm_heads", "ssm_pdim")
+
+    x = jax.nn.silu(causal_shift_conv(x_pre, p["conv_x"]))
+    Bm = jax.nn.silu(causal_shift_conv(B_pre, p["conv_B"]))
+    Cm = jax.nn.silu(causal_shift_conv(C_pre, p["conv_C"]))
+
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    s0 = init_state.ssd if init_state is not None else None
+    if ssd_impl == "pallas":
+        from repro.kernels import ops as kops
+        y, final = kops.ssd_scan(x.astype(jnp.float32), dt, A,
+                                 Bm.astype(jnp.float32),
+                                 Cm.astype(jnp.float32),
+                                 chunk=s.chunk_size, init_state=s0)
+    else:
+        y, final = ssd_chunked(x.astype(jnp.float32), dt, A,
+                               Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                               chunk=s.chunk_size, init_state=s0)
+    y = y + x.astype(jnp.float32) * p["D"].astype(jnp.float32)[:, None]
+    out = _gated_out(y, z, p, arch, policy)
+
+    cw = s.conv_width
+    # conv tails for decode handoff (inputs BEFORE activation)
+    def tail(v):
+        return v[:, S - (cw - 1):] if S >= cw - 1 else jnp.pad(
+            v, ((0, 0), (cw - 1 - S, 0)) + ((0, 0),) * (v.ndim - 2))
+
+    state = SSMLayerState(ssd=final, conv_x=tail(x_pre),
+                          conv_B=tail(B_pre), conv_C=tail(C_pre))
+    return h + out, state
+
+
+def ssm_block_decode(
+    h: jax.Array, p: Params, arch: ArchConfig, policy: ShardingPolicy,
+    state: SSMLayerState,
+) -> Tuple[jax.Array, SSMLayerState]:
+    """One-token Mamba2 step against the recurrent cache. h: [B, 1, d]."""
+    s = arch.ssm
+    cw = s.conv_width
+    hn = layers.rms_norm(h, p["ssm_norm"], arch.norm_eps)[:, 0]  # [B, d]
+
+    z = jnp.einsum("bd,dhp->bhp", hn, p["wz"])
+    x_new = jnp.einsum("bd,dhp->bhp", hn, p["wx"])
+    B_new = jnp.einsum("bd,dn->bn", hn, p["wB"])
+    C_new = jnp.einsum("bd,dn->bn", hn, p["wC"])
+    dt = jnp.einsum("bd,dh->bh", hn.astype(jnp.float32),
+                    p["wdt"].astype(jnp.float32))
+
+    def conv_step(tail, new, w):
+        # tail: [B, cw-1, ...]; new: [B, ...] → (out [B, ...], new tail)
+        full = jnp.concatenate([tail, new[:, None]], axis=1)   # [B, cw, ...]
+        out = jnp.einsum("bc...,c...->b...", full, w)
+        return jax.nn.silu(out), full[:, 1:]
+
+    x, conv_x = conv_step(state.conv_x, x_new, p["conv_x"])
+    Bm, conv_B = conv_step(state.conv_B, B_new, p["conv_B"])
+    Cm, conv_C = conv_step(state.conv_C, C_new, p["conv_C"])
+
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, ssd = ssd_step(x.astype(jnp.float32), dt, A, Bm.astype(jnp.float32),
+                      Cm.astype(jnp.float32), state.ssd)
+    y = y + x.astype(jnp.float32) * p["D"].astype(jnp.float32)[:, None]
+
+    out = _gated_out(y[:, None], z[:, None], p, arch, policy)
+    new_state = SSMLayerState(ssd=ssd, conv_x=conv_x, conv_B=conv_B,
+                              conv_C=conv_C)
+    return h + out, new_state

@@ -1,0 +1,229 @@
+"""Dense transformer blocks (GQA/MQA/MHA + gated MLP), scan-over-layers.
+
+Parameters are *stacked* with a leading layer dim ``L`` so the body runs
+under ``lax.scan`` — this keeps the HLO size O(1) in depth (95-layer
+deepseek compiles as fast as 18-layer gemma) and is the layout remat and
+pipeline policies expect.
+
+All functions are pure; sharding enters only through ``policy.pin`` calls
+(logical-axis constraints — see ``repro.sharding.policy``).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import layers
+from repro.sharding.policy import ShardingPolicy
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _normal(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_attn(key, arch: ArchConfig, n_layers: int, dtype) -> Params:
+    d, H, KV, hd = arch.d_model, arch.num_heads, arch.num_kv_heads, arch.head_dim
+    ks = jax.random.split(key, 4)
+    scale = d ** -0.5
+    p = {
+        "attn_norm": jnp.zeros((n_layers, d), dtype),
+        "wq": _normal(ks[0], (n_layers, d, H, hd), scale, dtype),
+        "wk": _normal(ks[1], (n_layers, d, KV, hd), scale, dtype),
+        "wv": _normal(ks[2], (n_layers, d, KV, hd), scale, dtype),
+        "wo": _normal(ks[3], (n_layers, H, hd, d), (H * hd) ** -0.5, dtype),
+    }
+    if arch.qkv_bias:
+        p["bq"] = jnp.zeros((n_layers, H, hd), dtype)
+        p["bk"] = jnp.zeros((n_layers, KV, hd), dtype)
+        p["bv"] = jnp.zeros((n_layers, KV, hd), dtype)
+    return p
+
+
+def init_mlp(key, arch: ArchConfig, n_layers: int, dtype) -> Params:
+    d, f = arch.d_model, arch.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mlp_norm": jnp.zeros((n_layers, d), dtype),
+        "wg": _normal(ks[0], (n_layers, d, f), d ** -0.5, dtype),
+        "wu": _normal(ks[1], (n_layers, d, f), d ** -0.5, dtype),
+        "wd": _normal(ks[2], (n_layers, f, d), f ** -0.5, dtype),
+    }
+
+
+def init_dense_blocks(key, arch: ArchConfig, n_layers: int, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {**init_attn(k1, arch, n_layers, dtype),
+            **init_mlp(k2, arch, n_layers, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Sharding specs (mirror the init structure)
+# ---------------------------------------------------------------------------
+def attn_specs(arch: ArchConfig, policy: ShardingPolicy) -> Dict[str, Any]:
+    sp = policy.spec
+    p = {
+        "attn_norm": sp("layers", None),
+        "wq": sp("layers", "embed", "qheads", "head_dim"),
+        "wk": sp("layers", "embed", "kvheads", "head_dim"),
+        "wv": sp("layers", "embed", "kvheads", "head_dim"),
+        "wo": sp("layers", "qheads", "head_dim", "embed"),
+    }
+    if arch.qkv_bias:
+        p["bq"] = sp("layers", "qheads", "head_dim")
+        p["bk"] = sp("layers", "kvheads", "head_dim")
+        p["bv"] = sp("layers", "kvheads", "head_dim")
+    return p
+
+
+def mlp_specs(arch: ArchConfig, policy: ShardingPolicy) -> Dict[str, Any]:
+    sp = policy.spec
+    return {
+        "mlp_norm": sp("layers", None),
+        "wg": sp("layers", "embed", "ff"),
+        "wu": sp("layers", "embed", "ff"),
+        "wd": sp("layers", "ff", "embed"),
+    }
+
+
+def dense_block_specs(arch: ArchConfig, policy: ShardingPolicy) -> Dict[str, Any]:
+    return {**attn_specs(arch, policy), **mlp_specs(arch, policy)}
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+def _project_qkv(h, p, arch: ArchConfig, policy: ShardingPolicy):
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"])
+    if arch.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = policy.pin(q, "batch", "seq", "qheads", None)
+    k = policy.pin(k, "batch", "seq", "kvheads", None)
+    v = policy.pin(v, "batch", "seq", "kvheads", None)
+    return q, k, v
+
+
+def attention_full(
+    h: jax.Array,                 # [B, S, d]
+    p: Params,                    # one layer (no leading L)
+    arch: ArchConfig,
+    policy: ShardingPolicy,
+    positions: jax.Array,         # [B, S]
+    attn_impl: str = "jax",
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Self-attention over the full (training / prefill) sequence.
+
+    Returns (output [B,S,d], (k, v) for the cache)."""
+    hn = layers.rms_norm(h, p["attn_norm"], arch.norm_eps)
+    q, k, v = _project_qkv(hn, p, arch, policy)
+    q = layers.apply_rope(q, positions, arch.rope_theta)
+    k = layers.apply_rope(k, positions, arch.rope_theta)
+    if policy.attn_mode == "context" and arch.q_per_kv > 1:
+        # context parallelism gathers K/V across the sequence shards —
+        # gather the NARROW kv heads, then repeat locally (the repeated
+        # copy is q_per_kv x bigger; gathering it instead cost deepseek
+        # prefill 8x the bytes — EXPERIMENTS.md §Perf iteration 5)
+        k = policy.pin(k, "batch", None, "kvheads", None)
+        v = policy.pin(v, "batch", None, "kvheads", None)
+    kr = layers.repeat_kv(k, arch.q_per_kv)
+    vr = layers.repeat_kv(v, arch.q_per_kv)
+    if attn_impl == "pallas":
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, kr, vr, causal=True)
+    else:
+        out = layers.flash_attention(q, kr, vr, positions, positions,
+                                     causal=True)
+    out = policy.pin(out, "batch", "seq", "qheads", None)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, (k, v)
+
+
+def attention_decode(
+    h: jax.Array,                 # [B, 1, d]
+    p: Params,
+    arch: ArchConfig,
+    policy: ShardingPolicy,
+    k_cache: jax.Array,           # [B, Smax, KV, hd]
+    v_cache: jax.Array,
+    cache_len: jax.Array,         # scalar int32
+    cache_update: str = "onehot",
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """One-token attention against the KV cache; returns updated cache.
+
+    ``cache_update='onehot'`` writes the new token with a masked select
+    (``where(iota == cache_len, new, cache)``) — elementwise, so a
+    seq-sharded cache updates with ZERO collectives.  The naive
+    ``dynamic_update_slice`` at a traced index on the sharded dim made
+    GSPMD all-gather + re-slice the entire cache every step (≈1.9× the
+    cache size per step — see EXPERIMENTS.md §Perf, qwen2 decode cell).
+    """
+    B = h.shape[0]
+    hn = layers.rms_norm(h, p["attn_norm"], arch.norm_eps)
+    pos = jnp.broadcast_to(cache_len[None, None], (B, 1)).astype(jnp.int32)
+    q = jnp.einsum("bsd,dhk->bshk", hn, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", hn, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", hn, p["wv"])
+    if arch.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = layers.apply_rope(q, pos, arch.rope_theta)
+    k = layers.apply_rope(k, pos, arch.rope_theta)
+    if cache_update == "onehot":
+        sel = (jnp.arange(k_cache.shape[1], dtype=jnp.int32)
+               == cache_len)[None, :, None, None]
+        k_cache = jnp.where(sel, k.astype(k_cache.dtype), k_cache)
+        v_cache = jnp.where(sel, v.astype(v_cache.dtype), v_cache)
+    else:
+        k_cache = lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype),
+                                           (0, cache_len, 0, 0))
+        v_cache = lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
+                                           (0, cache_len, 0, 0))
+    k_cache = policy.pin(k_cache, "batch", "cache_seq", "kvheads", None)
+    v_cache = policy.pin(v_cache, "batch", "cache_seq", "kvheads", None)
+    out = layers.decode_attention(q, k_cache, v_cache, cache_len + 1,
+                                  q_per_kv=arch.q_per_kv)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, (k_cache, v_cache)
+
+
+def mlp(h: jax.Array, p: Params, arch: ArchConfig,
+        policy: ShardingPolicy) -> jax.Array:
+    hn = layers.rms_norm(h, p["mlp_norm"], arch.norm_eps)
+    g = jnp.einsum("bsd,df->bsf", hn, p["wg"])
+    u = jnp.einsum("bsd,df->bsf", hn, p["wu"])
+    g = policy.pin(g, "batch", "seq", "ff")
+    if arch.mlp_activation == "silu":
+        a = jax.nn.silu(g)
+    else:
+        a = jax.nn.gelu(g, approximate=True)
+    return jnp.einsum("bsf,fd->bsd", a * u, p["wd"])
+
+
+def dense_block_full(h, p, arch, policy, positions, attn_impl="jax"):
+    """Pre-norm residual block, full-sequence mode."""
+    a, kv = attention_full(h, p, arch, policy, positions, attn_impl)
+    h = h + a
+    h = h + mlp(h, p, arch, policy)
+    h = policy.pin(h, "batch", "seq", None)
+    return h, kv
+
+
+def dense_block_decode(h, p, arch, policy, k_cache, v_cache, cache_len,
+                       cache_update: str = "onehot"):
+    a, (k_cache, v_cache) = attention_decode(
+        h, p, arch, policy, k_cache, v_cache, cache_len,
+        cache_update=cache_update)
+    h = h + a
+    h = h + mlp(h, p, arch, policy)
+    return h, (k_cache, v_cache)

@@ -1,0 +1,60 @@
+"""Elastic scaling: rebuild the mesh from the live device set and reshard.
+
+On a real cluster the coordinator detects a changed device set (failed
+host, added pod), rebuilds the mesh with the same axis names but a new DP
+extent, and restores the latest checkpoint resharded to the new mesh —
+``training/checkpoint.restore(shardings=...)`` does the placement.  The
+model axis extent is kept fixed (TP degree is a property of the compiled
+executable); only data axes stretch/shrink.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def viable_mesh_shape(n_devices: int, model_parallel: int,
+                      prefer_pods: Optional[int] = None
+                      ) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """Largest (pod, data, model) grid that fits the live device count.
+
+    Drops stragglers below the nearest multiple (standard elastic policy:
+    a 511-device set runs as 31×16 + model=16... i.e. uses 496)."""
+    if n_devices < model_parallel:
+        raise ValueError(
+            f"{n_devices} devices cannot host model_parallel="
+            f"{model_parallel}")
+    data = n_devices // model_parallel
+    if prefer_pods and data % prefer_pods == 0 and prefer_pods > 1:
+        return ((prefer_pods, data // prefer_pods, model_parallel),
+                ("pod", "data", "model"))
+    return ((data, model_parallel), ("data", "model"))
+
+
+def make_elastic_mesh(model_parallel: int,
+                      devices: Optional[Sequence] = None,
+                      prefer_pods: Optional[int] = None) -> Mesh:
+    devices = list(devices if devices is not None else jax.devices())
+    shape, names = viable_mesh_shape(len(devices), model_parallel,
+                                     prefer_pods)
+    used = int(np.prod(shape))
+    grid = np.array(devices[:used]).reshape(shape)
+    return Mesh(grid, names)
+
+
+def reshard_plan(old_mesh: Mesh, new_mesh: Mesh) -> dict:
+    """Describes the DP-extent change for logging/validation."""
+    def dp(mesh):
+        return int(np.prod([mesh.shape[a] for a in mesh.axis_names
+                            if a != "model"]))
+    return {
+        "old_devices": old_mesh.devices.size,
+        "new_devices": new_mesh.devices.size,
+        "old_dp": dp(old_mesh),
+        "new_dp": dp(new_mesh),
+        "model_parallel_unchanged":
+            old_mesh.shape.get("model") == new_mesh.shape.get("model"),
+    }

@@ -1,0 +1,100 @@
+"""The jit'able training step: loss → grad → AdamW, with microbatched
+gradient accumulation, remat policies, and optional int8 error-feedback
+gradient compression.
+
+This is what the multi-pod dry-run lowers for every ``train_4k`` cell:
+``make_train_step`` returns a pure function
+``(state, batch) -> (state, metrics)`` whose in/out shardings come from
+the same logical policy the model uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.training import compression as comp
+from repro.training import optimizer as opt
+
+TrainState = Dict[str, Any]
+
+
+def init_train_state(model: Model, rng, cfg: opt.AdamWConfig) -> TrainState:
+    params = model.init(rng)
+    state = {"params": params, "opt": opt.init_state(params)}
+    return state
+
+
+def train_state_specs(model: Model):
+    pspecs = model.param_specs()
+    return {"params": pspecs, "opt": opt.state_specs(pspecs)}
+
+
+def train_state_shapes(model: Model, cfg: opt.AdamWConfig):
+    return jax.eval_shape(
+        lambda: init_train_state(model, jax.random.key(0), cfg))
+
+
+def make_train_step(model: Model, cfg: opt.AdamWConfig, *,
+                    microbatches: int = 1,
+                    grad_compression: Optional[str] = None):
+    """Returns step(state, batch) -> (state, metrics).
+
+    ``microbatches`` > 1 slices the global batch and accumulates grads
+    with a ``lax.scan`` (activation memory / DP-comm overlap knob).
+    ``grad_compression='int8'`` quantizes the accumulated gradient with
+    error feedback before the optimizer (the state grows an ``err``
+    buffer); on a multi-host mesh the all-reduce itself happens inside
+    GSPMD — the quantization bounds the bytes the reduce moves.
+    """
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def grads_of(params, batch):
+        if microbatches <= 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        B = batch["tokens"].shape[0]
+        assert B % microbatches == 0, (B, microbatches)
+        mb = B // microbatches
+
+        def slice_mb(x, i):
+            return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+        def body(carry, i):
+            loss_acc, g_acc = carry
+            mb_batch = {k: slice_mb(v, i) for k, v in batch.items()}
+            loss, g = jax.value_and_grad(loss_fn)(params, mb_batch)
+            g_acc = jax.tree.map(lambda a, b: a + b, g_acc, g)
+            return (loss_acc + loss, g_acc), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        (loss, g), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), zeros),
+            jnp.arange(microbatches))
+        inv = 1.0 / microbatches
+        return loss * inv, jax.tree.map(lambda x: x * inv, g)
+
+    def step(state: TrainState, batch) -> Tuple[TrainState, Dict[str, Any]]:
+        loss, grads = grads_of(state["params"], batch)
+        if grad_compression == "int8":
+            err = state.get("err")
+            if err is None:
+                err = comp.init_error_buffers(grads)
+            grads, err = comp.compressed_psum(grads, err, axis_name=None)
+        gnorm = opt.global_norm(grads)
+        params, opt_state = opt.apply_updates(
+            cfg, state["opt"], grads, param_dtype=model.param_dtype)
+        new_state = {"params": params, "opt": opt_state}
+        if grad_compression == "int8":
+            new_state["err"] = err
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "lr": opt.schedule(cfg, opt_state["step"])}
+        return new_state, metrics
+
+    return step

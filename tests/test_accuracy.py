@@ -1,0 +1,72 @@
+"""Accuracy model (Eq. 9-12) properties: the MILP's linearization is a
+one-sided lower bound — the central safety invariant (DESIGN.md §5)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import accuracy as acc
+from repro.core.apps import get_app
+from repro.core.taskgraph import Task, TaskGraph, Variant
+
+
+def make_graph(acc_a, acc_b):
+    t1 = Task("a", (Variant("hi", "gemma-2b", accuracy=acc_a),
+                    Variant("lo", "gemma-2b", accuracy=acc_a * 0.9),))
+    t2 = Task("b", (Variant("hi", "qwen2-7b", accuracy=acc_b),))
+    return TaskGraph("g", {"a": t1, "b": t2}, [("a", "b")])
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(0.5, 1.0), st.floats(0.5, 1.0),
+       st.floats(0.0, 1.0))
+def test_weierstrass_bound_is_one_sided(aa, ab, mix):
+    """a_obj_lower_bound(floors) <= exact a_obj whenever the floors are
+    below the exact per-task accuracies."""
+    g = make_graph(aa, ab)
+    # traffic split between hi/lo variants of task a
+    counts = {("a", "hi", "s", 1): 1, ("a", "lo", "s", 1): 1,
+              ("b", "hi", "s", 1): 1}
+    tput = {("a", "hi", "s", 1): 10.0 * mix + 1e-6,
+            ("a", "lo", "s", 1): 10.0 * (1 - mix) + 1e-6,
+            ("b", "hi", "s", 1): 5.0}
+    exact = acc.a_obj(g, counts, tput)
+    floors = {t: acc.effective_task_accuracy(g, t, counts, tput)
+              for t in g.tasks}
+    lb = acc.a_obj_lower_bound(g, floors)
+    assert lb <= exact + 1e-9
+
+
+def test_a_max_uses_most_accurate_variants():
+    g = get_app("traffic_analysis")
+    am = acc.a_max(g)
+    want = 0.5 * (0.902 * 0.871) + 0.5 * (0.902 * 0.845)
+    assert abs(am - want) < 1e-9
+
+
+def test_a_obj_is_one_with_best_variants():
+    g = get_app("social_media")
+    counts, tput = {}, {}
+    for tname, task in g.tasks.items():
+        v = task.most_accurate
+        counts[(tname, v.name, "s", 1)] = 1
+        tput[(tname, v.name, "s", 1)] = 10.0
+    assert abs(acc.a_obj(g, counts, tput) - 1.0) < 1e-9
+
+
+def test_effective_accuracy_is_throughput_weighted():
+    g = make_graph(1.0, 1.0)
+    counts = {("a", "hi", "s", 1): 2, ("a", "lo", "s", 1): 1}
+    tput = {("a", "hi", "s", 1): 1.0, ("a", "lo", "s", 1): 3.0}
+    # weights: hi 2*1=2, lo 1*3=3 → (2*1.0 + 3*0.9)/5
+    want = (2 * 1.0 + 3 * 0.9) / 5
+    got = acc.effective_task_accuracy(g, "a", counts, tput)
+    assert abs(got - want) < 1e-12
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(0.6, 1.0), min_size=2, max_size=4))
+def test_path_product_bound(accs):
+    """1 - Σ(1-a) <= Π a for a in [0,1] (Weierstrass)."""
+    prod = np.prod(accs)
+    bound = 1 - sum(1 - a for a in accs)
+    assert bound <= prod + 1e-12

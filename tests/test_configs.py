@@ -1,0 +1,88 @@
+"""Assigned-architecture configs: exact hyper-parameters + applicability."""
+import pytest
+
+from repro.configs import ARCHS, SHAPES, all_cells, applicable, get_arch
+
+EXPECTED = {
+    # name: (layers, d_model, heads, kv, d_ff, vocab)
+    "deepseek-67b": (95, 8192, 64, 8, 22016, 102400),
+    "gemma-2b": (18, 2048, 8, 1, 16384, 256000),
+    "granite-3-2b": (40, 2048, 32, 8, 8192, 49155),
+    "qwen2-7b": (28, 3584, 28, 4, 18944, 152064),
+    "pixtral-12b": (40, 5120, 32, 8, 14336, 131072),
+    "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+    "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+    "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+    "mamba2-130m": (24, 768, 0, 0, 0, 50280),
+    "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+}
+
+
+def test_all_ten_archs_present():
+    assert set(ARCHS) == set(EXPECTED)
+
+
+@pytest.mark.parametrize("name", sorted(EXPECTED))
+def test_exact_hparams(name):
+    a = ARCHS[name]
+    L, d, H, KV, ff, V = EXPECTED[name]
+    assert (a.num_layers, a.d_model, a.num_heads, a.num_kv_heads,
+            a.d_ff, a.vocab_size) == (L, d, H, KV, ff, V)
+
+
+def test_moe_configs():
+    scout = ARCHS["llama4-scout-17b-a16e"]
+    mav = ARCHS["llama4-maverick-400b-a17b"]
+    assert scout.moe.num_experts == 16 and scout.moe.experts_per_token == 1
+    assert mav.moe.num_experts == 128 and mav.moe.experts_per_token == 1
+
+
+def test_ssm_state_sizes():
+    assert ARCHS["mamba2-130m"].ssm.d_state == 128
+    assert ARCHS["zamba2-7b"].ssm.d_state == 64
+
+
+def test_param_counts_plausible():
+    # name → (lo, hi) in billions of TOTAL params
+    bounds = {"deepseek-67b": (60, 75), "gemma-2b": (2, 3.2),
+              "granite-3-2b": (2, 3.6), "qwen2-7b": (6.5, 8.5),
+              "pixtral-12b": (11, 14), "mamba2-130m": (0.1, 0.2),
+              "zamba2-7b": (6, 9), "musicgen-large": (1.5, 3.5),
+              "llama4-scout-17b-a16e": (90, 120),   # 109B total / 17B active
+              "llama4-maverick-400b-a17b": (200, 440)}
+    for name, (lo, hi) in bounds.items():
+        total, active = ARCHS[name].param_count()
+        assert lo <= total / 1e9 <= hi, (name, total / 1e9)
+        assert active <= total
+
+
+def test_moe_active_params():
+    mav = ARCHS["llama4-maverick-400b-a17b"]
+    total, active = mav.param_count()
+    assert active < 0.15 * total  # 17B active of ~400B
+
+
+def test_forty_cells_and_long_context_rule():
+    cells = list(all_cells())
+    assert len(cells) == 40
+    runnable = [c for c in cells if c[2]]
+    skipped = [c for c in cells if not c[2]]
+    assert len(skipped) == 8  # 8 full-attention archs skip long_500k
+    assert all(s.name == "long_500k" for (_, s, _, _) in skipped)
+    assert all("sub-quadratic" in r for (_, _, _, r) in skipped)
+    subq = {a.name for (a, s, ok, _) in runnable if s.name == "long_500k"}
+    assert subq == {"mamba2-130m", "zamba2-7b"}
+
+
+def test_reduced_configs_are_small():
+    for a in ARCHS.values():
+        r = a.reduced()
+        total, _ = r.param_count()
+        assert total < 5e6, (a.name, total)
+        assert r.family == a.family
+
+
+def test_get_arch_reduced_suffix():
+    assert get_arch("qwen2-7b-reduced").d_model == 64
+    with pytest.raises(KeyError):
+        get_arch("nonexistent")

@@ -1,0 +1,77 @@
+"""Controller + frontend + trace integration: the paper's serving loop at
+small scale, including failure-shrunken capacity and elasticity."""
+import numpy as np
+import pytest
+
+from repro.core import Controller, register
+from repro.core.apps import get_app
+from repro.core.milp import FeatureSet
+from repro.core.trace import DemandTrace, diurnal_trace, predict_demand
+from repro.core.frontend import Frontend
+
+
+@pytest.fixture(scope="module")
+def ctl(social_profiler):
+    g, prof = social_profiler
+    return Controller(g, prof, s_avail=64,
+                      planner_kwargs=dict(max_tuples_per_task=32,
+                                          bb_nodes=4, bb_time_s=1.0))
+
+
+def test_trace_properties():
+    t = diurnal_trace(seed=1, bins=288)
+    assert t.num_bins == 288
+    assert t.rps.max() == pytest.approx(1.0)
+    t2 = diurnal_trace(seed=1, bins=288)
+    np.testing.assert_array_equal(t.rps, t2.rps)   # deterministic
+    scaled = t.scaled_to_max(500.0)
+    assert scaled.rps.max() == pytest.approx(500.0)
+
+
+def test_predictor_mean_of_last_five_plus_slack():
+    hist = [10.0, 20.0, 30.0, 40.0, 50.0, 60.0]
+    assert predict_demand(hist, slack=0.05) == pytest.approx(
+        np.mean(hist[-5:]) * 1.05)
+
+
+def test_controller_trace_loop(ctl):
+    trace = diurnal_trace(seed=2, bins=6).scaled_to_max(120.0)
+    reports = [ctl.step(i, float(r), sim_seconds=6.0, seed=i)
+               for i, r in enumerate(trace.rps)]
+    # all bins served with low violations
+    for rep in reports:
+        assert rep.violation_rate < 0.05, rep
+        assert rep.slices_used <= 64
+    # at least one replan over a 3x demand range
+    assert any(r.replanned for r in reports)
+    # MILP time in the paper's envelope (2-20 s upper bound)
+    assert all(t < 20_000 for t in ctl.milp_times_ms)
+
+
+def test_controller_capacity_shrink(social_profiler):
+    """Failure handling: re-solve with dead chips removed still serves."""
+    g, prof = social_profiler
+    ctl = Controller(g, prof, s_avail=64,
+                     planner_kwargs=dict(max_tuples_per_task=32,
+                                         bb_nodes=4, bb_time_s=1.0))
+    rep = ctl.step(0, 40.0, sim_seconds=6.0, dead_chips=32)
+    assert rep.slices_used <= 32
+    assert rep.violation_rate < 0.05
+
+
+def test_max_serviceable_demand_positive(ctl):
+    cap = ctl.max_serviceable_demand()
+    assert cap > 10.0
+
+
+def test_frontend_deadlines_and_binning():
+    g = get_app("ar_assistant")
+    fe = Frontend(g, bin_seconds=10.0)
+    m = fe.submit(1.0)
+    # depth-3 app: SLO + 2 hops x 10 ms
+    assert m.deadline_s == pytest.approx(1.0 + (1550 + 20) / 1e3)
+    for t in (2.0, 3.0, 11.0):
+        fe.submit(t)
+    assert fe.observed_demand()[0] == pytest.approx(3 / 10.0)
+    assert fe.should_replan(planned_for_rps=100.0)   # big drift
+    assert not fe.should_replan(planned_for_rps=0.1)

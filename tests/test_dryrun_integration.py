@@ -1,0 +1,129 @@
+"""Dry-run machinery integration: lower+compile a REDUCED arch on an
+8-device host mesh in a subprocess (the only place tests touch
+multi-device state), HLO collective parsing, extrapolation math, and
+elastic mesh shapes."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def run_sub(code: str) -> subprocess.CompletedProcess:
+    env = {**os.environ, "PYTHONPATH": SRC,
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=8"}
+    return subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          env=env, capture_output=True, text=True,
+                          timeout=420)
+
+
+@pytest.mark.slow
+def test_reduced_cells_lower_and_compile_on_8_devices():
+    """One reduced arch per family × {train, decode} on a 2x4 mesh."""
+    r = run_sub("""
+        import json
+        import jax, jax.numpy as jnp
+        import dataclasses
+        from repro.configs import get_arch
+        from repro.configs.shapes import ShapeConfig
+        from repro.launch.dryrun import build_step
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        out = {}
+        for name in ["qwen2-7b", "llama4-scout-17b-a16e", "mamba2-130m",
+                     "zamba2-7b"]:
+            arch = get_arch(name).reduced()
+            for shape in [ShapeConfig("t", 64, 8, "train"),
+                          ShapeConfig("d", 64, 8, "decode")]:
+                fn, args, policy = build_step(arch, shape, mesh)
+                compiled = fn.lower(*args).compile()
+                ca = compiled.cost_analysis()
+                out[f"{name}/{shape.kind}"] = float(ca.get("flops", 0))
+        print("RESULT" + json.dumps(out))
+    """)
+    assert r.returncode == 0, r.stderr[-3000:]
+    payload = [l for l in r.stdout.splitlines() if l.startswith("RESULT")]
+    data = json.loads(payload[0][len("RESULT"):])
+    assert len(data) == 8
+    assert all(v > 0 for v in data.values())
+
+
+def test_collective_parsing():
+    from repro.launch.dryrun import parse_collective_bytes
+    hlo = """
+      %ar = f32[128,256]{1,0} all-reduce(f32[128,256]{1,0} %x), replica_groups={}
+      %ag.1 = bf16[64]{0} all-gather(bf16[32]{0} %y), dimensions={0}
+      %rs = f32[16,16]{1,0} reduce-scatter(f32[32,16]{1,0} %z), dimensions={0}
+      %cp = u32[8]{0} collective-permute(u32[8]{0} %w), source_target_pairs={}
+      %notacoll = f32[4]{0} add(f32[4]{0} %a, f32[4]{0} %b)
+    """
+    got = parse_collective_bytes(hlo)
+    # physical ring-traffic accounting: AR at 2x operand (reduce-scatter +
+    # all-gather phases), AG at result size, RS/permute at operand size
+    assert got["all-reduce"] == 2 * 128 * 256 * 4
+    assert got["all-gather"] == 64 * 2          # result bf16[64]
+    assert got["reduce-scatter"] == 32 * 16 * 4
+    assert got["collective-permute"] == 8 * 4
+    assert "add" not in got
+
+
+def test_extrapolation_math_linear():
+    """f(L) linear in L ⇒ est == exact."""
+    from repro.launch.dryrun import depth_pair
+    from repro.configs import get_arch
+    a = get_arch("qwen2-7b")
+    L1, L2 = depth_pair(a)
+    assert (L1, L2) == (1, 2)
+    assert depth_pair(get_arch("llama4-maverick-400b-a17b")) == (2, 4)
+    assert depth_pair(get_arch("zamba2-7b")) == (6, 12)
+    f = lambda L: 3.0 + 2.0 * L     # affine cost model
+    per = (f(L2) - f(L1)) / (L2 - L1)
+    est = f(L1) + per * (a.num_layers - L1)
+    assert est == pytest.approx(f(a.num_layers))
+
+
+def test_input_specs_cover_all_cells():
+    import jax.numpy as jnp
+    from repro.configs import ARCHS, SHAPES, applicable
+    from repro.launch.specs import input_specs
+    for a in ARCHS.values():
+        for s in SHAPES.values():
+            if not applicable(a, s):
+                continue
+            spec = input_specs(a, s)
+            assert "tokens" in spec
+            if s.kind == "train":
+                assert spec["labels"].shape == (s.global_batch, s.seq_len)
+            if s.kind == "decode":
+                assert spec["tokens"].shape == (s.global_batch, 1)
+                assert "cache" in spec
+            if a.frontend != "none" and s.kind in ("train", "prefill"):
+                assert "frontend_embeds" in spec
+
+
+def test_elastic_mesh_shapes():
+    from repro.training.elastic import reshard_plan, viable_mesh_shape
+    shape, names = viable_mesh_shape(512, 16, prefer_pods=2)
+    assert shape == (2, 16, 16) and names == ("pod", "data", "model")
+    shape, names = viable_mesh_shape(496, 16)     # lost a host
+    assert shape == (31, 16)
+    with pytest.raises(ValueError):
+        viable_mesh_shape(8, 16)
+
+
+def test_production_mesh_shapes_via_subprocess():
+    r = run_sub("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+        import jax
+        from repro.launch.mesh import make_production_mesh
+        m1 = make_production_mesh()
+        m2 = make_production_mesh(multi_pod=True)
+        assert dict(m1.shape) == {"data": 16, "model": 16}
+        assert dict(m2.shape) == {"pod": 2, "data": 16, "model": 16}
+        print("MESHOK")
+    """)
+    assert r.returncode == 0 and "MESHOK" in r.stdout, r.stderr[-2000:]

@@ -1,0 +1,111 @@
+"""Planner invariants (the paper's Eq. 1-14 semantics) as property tests:
+every returned config satisfies the EXACT constraints, feature supersets
+never plan worse, and the paper's Fig. 3 orderings reproduce."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.baselines import ANALYTICAL_BASELINES
+from repro.core.milp import FeatureSet, Planner, _pareto_prune, TupleVar
+
+
+def planner_for(g, prof, fs=None, s_avail=128):
+    return Planner(g, prof, s_avail=s_avail,
+                   features=fs or FeatureSet(),
+                   max_tuples_per_task=32, bb_nodes=4, bb_time_s=1.0)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.floats(5.0, 400.0))
+def test_returned_config_is_exactly_feasible(traffic_profiler, R):
+    g, prof = traffic_profiler
+    planner = planner_for(g, prof)
+    cfg = planner.plan(R)
+    if cfg is None:
+        return
+    # Eq. 8: resources
+    assert cfg.slices <= planner.s_avail
+    # Eq. 6: throughput at the headroom-inflated demand
+    for t, r in cfg.demand.items():
+        assert cfg.task_throughput(t) >= r - 1e-6
+    # Eq. 3: path latency
+    assert cfg.worst_path_latency() <= g.slo_latency_ms + 1e-6
+    # Eq. 13 via the EXACT evaluator — the one-sided-bound guarantee
+    assert cfg.exact_a_obj() >= g.slo_accuracy - 1e-9
+
+
+def test_accuracy_slo_never_violated_across_demands(traffic_profiler):
+    g, prof = traffic_profiler
+    planner = planner_for(g, prof, s_avail=256)
+    for R in (5, 20, 80, 320, 1280):
+        cfg = planner.plan(float(R))
+        if cfg is not None:
+            assert cfg.exact_a_obj() >= g.slo_accuracy - 1e-9, R
+
+
+def test_feature_superset_never_reduces_capacity(traffic_profiler):
+    """max serviceable demand is monotone in the feature set."""
+    g, prof = traffic_profiler
+
+    def max_demand(fs):
+        planner = planner_for(g, prof, fs, s_avail=128)
+        best, R = 0.0, 8.0
+        while R < 1e5 and planner.plan(R) is not None:
+            best, R = R, R * 2
+        return best
+
+    caps = {k: max_demand(fs) for k, fs in ANALYTICAL_BASELINES.items()}
+    assert caps["A+S+T"] >= max(caps["A+S"], caps["A+T"], caps["S+T"]) - 1e-9
+    assert caps["A+T"] >= caps["A"] - 1e-9
+    assert caps["S+T"] >= caps["S"] - 1e-9
+    assert caps["A+S+T"] >= caps["Unopt"]
+
+
+def test_no_accuracy_scaling_uses_only_most_accurate(traffic_profiler):
+    g, prof = traffic_profiler
+    planner = planner_for(g, prof, FeatureSet(False, True, True))
+    cfg = planner.plan(40.0)
+    assert cfg is not None
+    for (t, v, s, b), m in cfg.counts.items():
+        if m > 0:
+            assert v == g.tasks[t].most_accurate.name
+
+
+def test_no_spatial_uses_whole_units_only(traffic_profiler):
+    g, prof = traffic_profiler
+    planner = planner_for(g, prof, FeatureSet(True, False, True))
+    cfg = planner.plan(40.0)
+    assert cfg is not None
+    from repro.sharding.segments import by_name
+    for (t, v, s, b), m in cfg.counts.items():
+        if m > 0:
+            seg = by_name(s)
+            assert seg.chips == planner.unopt_chips and seg.streams == 1
+
+
+def test_pareto_prune_keeps_nondominated():
+    a = TupleVar("t", "v", "s1", 1, 10.0, 100.0, 2, 0.9)
+    b = TupleVar("t", "v", "s2", 1, 20.0, 50.0, 2, 0.9)   # dominated by a
+    c = TupleVar("t", "v", "s3", 1, 5.0, 40.0, 1, 0.9)    # cheaper+faster
+    kept = _pareto_prune([a, b, c])
+    assert a in kept and c in kept and b not in kept
+
+
+def test_infeasible_demand_returns_none(social_profiler):
+    g, prof = social_profiler
+    planner = planner_for(g, prof, s_avail=4)
+    assert planner.plan(1e9) is None
+
+
+def test_fbar_changes_downstream_sizing(traffic_profiler):
+    """Eq. 4-5: the observed multiplicative factor scales demand."""
+    g, prof = traffic_profiler
+    planner = planner_for(g, prof, s_avail=512)
+    lo = planner.plan(100.0, fbar={("detect", "vehicle_attrs"): 0.5,
+                                   ("detect", "person_attrs"): 0.5})
+    hi = planner.plan(100.0, fbar={("detect", "vehicle_attrs"): 4.0,
+                                   ("detect", "person_attrs"): 4.0})
+    assert lo is not None and hi is not None
+    lo_t = lo.task_throughput("vehicle_attrs")
+    hi_t = hi.task_throughput("vehicle_attrs")
+    assert hi_t > lo_t * 2

@@ -1,0 +1,109 @@
+"""Closed-form roofline profiler: monotonicity + physical sanity (the
+properties the MILP's choices rely on)."""
+import pytest
+
+from repro.core import hw
+from repro.core.apps import get_app
+from repro.core.profiler import BATCH_SIZES, Profiler
+from repro.sharding.segments import SegmentType, catalogue
+
+
+@pytest.fixture(scope="module")
+def prof(traffic_profiler):
+    return traffic_profiler[1]
+
+
+def test_latency_monotone_in_batch(prof):
+    for (t, v, s, b), e in prof.table.items():
+        if b == 1:
+            for b2 in BATCH_SIZES[1:]:
+                e2 = prof.get(t, v, s, b2)
+                if e2 is not None:
+                    assert e2.latency_ms >= e.latency_ms * 0.99, \
+                        (t, v, s, b2)
+
+
+def test_throughput_nondecreasing_in_batch(prof):
+    """Bigger batches never reduce instance throughput (amortized reads)."""
+    keys = sorted(prof.table)
+    for (t, v, s, b) in keys:
+        nxt = prof.get(t, v, s, b * 2)
+        cur = prof.get(t, v, s, b)
+        if nxt is not None and cur is not None:
+            assert nxt.throughput_rps >= cur.throughput_rps * 0.95
+
+
+def test_more_chips_reduce_latency(prof):
+    """Same variant/batch/streams on a bigger segment is never slower."""
+    for (t, v, s, b), e in prof.table.items():
+        if e.streams != 1 or b != 1:
+            continue
+        for seg in catalogue():
+            if seg.streams == 1 and seg.chips > e.chips:
+                e2 = prof.get(t, v, seg.name, b)
+                if e2 is not None:
+                    assert e2.latency_ms <= e.latency_ms * 1.01
+
+
+def test_streams_trade_latency_for_throughput(prof):
+    for (t, v, s, b), e in prof.table.items():
+        if e.streams != 1:
+            continue
+        seg4 = s.replace("s1", "s4")
+        e4 = prof.get(t, v, seg4, b)
+        if e4 is None:
+            continue
+        assert e4.throughput_rps >= e.throughput_rps * 0.99
+        assert e4.latency_ms >= e.latency_ms * 0.99
+
+
+def test_memory_bound_models_benefit_from_streams(prof):
+    """The MPS-analogue property: a memory-bound (u<0.25) single-stream
+    entry gains >2x throughput from 4 streams."""
+    found = 0
+    for (t, v, s, b), e in prof.table.items():
+        if e.streams == 1 and e.utilization < 0.25:
+            e4 = prof.get(t, v, s.replace("s1", "s4"), b)
+            if e4 is not None:
+                assert e4.throughput_rps > 2.0 * e.throughput_rps * 0.99
+                found += 1
+    assert found > 0, "no memory-bound entries to check"
+
+
+def test_oom_configs_excluded():
+    """pixtral-12b (24.6 GB bf16) cannot fit one chip's 14.4 usable GiB;
+    a 1x2 segment (two chips) holds it."""
+    g = get_app("ar_assistant")
+    prof = Profiler(g)
+    assert prof.get("detect", "pixtral-12b", "1x1s1", 1) is None
+    assert prof.get("detect", "pixtral-12b", "1x2s1", 1) is not None
+
+
+def test_int8_variant_dominates_bf16_on_speed(prof):
+    """Same arch quantized: lower latency, higher throughput (2x MXU +
+    halved weight traffic)."""
+    pairs = 0
+    for (t, v, s, b), e in prof.table.items():
+        if not v.endswith("-int8"):
+            continue
+        base = prof.get(t, v[:-5], s, b)
+        if base is not None:
+            assert e.latency_ms <= base.latency_ms * 1.01
+            assert e.throughput_rps >= base.throughput_rps * 0.99
+            pairs += 1
+    assert pairs > 0
+
+
+def test_observe_refines_latency(prof):
+    key = next(iter(prof.table))
+    import copy
+    p2 = Profiler(prof.graph, table=dict(prof.table))
+    before = p2.table[key].latency_ms
+    p2.observe(key, measured_latency_ms=before * 2.0)
+    after = p2.table[key].latency_ms
+    assert before < after < before * 2.0
+
+
+def test_hbm_feasibility_respected(prof):
+    for e in prof.table.values():
+        assert e.hbm_per_chip <= hw.HBM_BYTES * hw.HBM_USABLE_FRACTION

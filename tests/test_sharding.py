@@ -1,0 +1,124 @@
+"""Sharding policy: divisibility safety for every assigned cell, spec
+de-duplication, and segment-mesh construction (pure — no multi-device
+runtime needed; specs are just metadata)."""
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, applicable
+from repro.sharding.policy import ShardingPolicy, make_policy
+from repro.sharding.segments import SEGMENT_SHAPES, by_name, catalogue
+
+
+class FakeMesh:
+    """Mesh stand-in: policy only reads axis_names + shape."""
+    def __init__(self, shape_by_name):
+        self.axis_names = tuple(shape_by_name)
+        self.shape = dict(shape_by_name)
+        self.devices = np.empty(tuple(shape_by_name.values()),
+                                dtype=object)
+
+
+POD = FakeMesh({"data": 16, "model": 16})
+MULTIPOD = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def all_cells():
+    for a in ARCHS.values():
+        for s in SHAPES.values():
+            if applicable(a, s):
+                yield a, s
+
+
+@pytest.mark.parametrize("mesh", [POD, MULTIPOD], ids=["pod", "multipod"])
+def test_every_cell_has_divisible_rules(mesh):
+    for arch, shape in all_cells():
+        pol = make_policy(arch, shape, mesh,
+                          training=(shape.kind == "train"))
+        for logical, axes in pol.rules.items():
+            if axes is None:
+                continue
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            dim = _logical_dim(arch, shape, logical)
+            if dim is not None:
+                assert dim % size == 0, (arch.name, shape.name, logical,
+                                         dim, size)
+
+
+def _logical_dim(arch, shape, logical):
+    ssm = arch.ssm
+    return {
+        "batch": shape.global_batch,
+        "qheads": arch.num_heads or None,
+        "kvheads": arch.num_kv_heads or None,
+        "seq": shape.seq_len,
+        "cache_seq": shape.seq_len,
+        "head_dim": arch.head_dim or None,
+        "ff": arch.d_ff or None,
+        "vocab": arch.vocab_size,
+        "embed": arch.d_model,
+        "experts": arch.moe.num_experts if arch.moe else None,
+        "expert_ff": arch.moe.d_ff_expert if arch.moe else None,
+        "expert_embed": arch.d_model if arch.moe else None,
+        "ssm_heads": ssm.num_heads(arch.d_model) if ssm else None,
+        "ssm_pdim": ssm.head_dim if ssm else None,
+        "ssm_state": ssm.d_state if ssm else None,
+        "layers": None,
+    }.get(logical)
+
+
+def test_spec_deduplicates_mesh_axes():
+    pol = ShardingPolicy(mesh=POD, rules={"seq": ("model",),
+                                          "ff": ("model",),
+                                          "batch": ("data",)})
+    spec = pol.spec("batch", "seq", "ff")
+    assert spec == P("data", ("model",), None) or spec == P("data", "model",
+                                                            None)
+
+
+def test_null_policy_is_identity(null_policy):
+    import jax.numpy as jnp
+    x = jnp.ones((4, 4))
+    assert null_policy.pin(x, "batch", "ff") is x
+    assert null_policy.spec("batch") == P(None)
+
+
+@pytest.mark.parametrize("mesh", [POD, MULTIPOD], ids=["pod", "multipod"])
+def test_attention_mode_selection(mesh):
+    qwen = ARCHS["qwen2-7b"]          # 28 heads % 16 != 0 → context
+    deep = ARCHS["deepseek-67b"]      # 64 heads % 16 == 0 → head TP
+    s = SHAPES["train_4k"]
+    assert make_policy(qwen, s, mesh).attn_mode == "context"
+    assert make_policy(deep, s, mesh).attn_mode == "head_tp"
+
+
+def test_moe_expert_parallelism_over_data_axes():
+    mav = ARCHS["llama4-maverick-400b-a17b"]
+    pol = make_policy(mav, SHAPES["train_4k"], MULTIPOD, training=True)
+    assert pol.rules["experts"] is not None
+    assert set(pol.rules["experts"]).issubset({"pod", "data"})
+    assert pol.rules["expert_ff"] == ("model",)
+
+
+def test_big_dense_serving_gets_weight_storage_sharding():
+    deep = ARCHS["deepseek-67b"]
+    pol = make_policy(deep, SHAPES["decode_32k"], POD, training=False)
+    assert pol.rules["embed"] is not None        # ZeRO-style streaming
+    gem = ARCHS["gemma-2b"]
+    pol2 = make_policy(gem, SHAPES["decode_32k"], POD, training=False)
+    assert pol2.rules["embed"] is None           # small model: replicated
+
+
+def test_segment_catalogue():
+    segs = catalogue()
+    assert len(segs) == 7 * 4
+    assert all(s.chips == s.shape[0] * s.shape[1] for s in segs)
+    assert by_name("4x4s2").chips == 16
+    unopt = catalogue(spatial=False)
+    assert len(unopt) == 1 and unopt[0].streams == 1
+
+
+def test_segment_mesh_construction():
+    from repro.launch.mesh import make_segment_mesh
+    m = make_segment_mesh(1)
+    assert dict(m.shape) == {"data": 1, "model": 1}

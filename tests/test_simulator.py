@@ -1,0 +1,92 @@
+"""Discrete-event simulator: conservation, SLO behaviour at planned
+demand, overload degradation, straggler & failure handling."""
+import numpy as np
+import pytest
+
+from repro.core.milp import Planner
+from repro.core.simulator import Simulator
+
+
+@pytest.fixture(scope="module")
+def planned(traffic_profiler):
+    g, prof = traffic_profiler
+    planner = Planner(g, prof, s_avail=128, max_tuples_per_task=32,
+                      bb_nodes=4, bb_time_s=1.0)
+    cfg = planner.plan(60.0)
+    assert cfg is not None
+    return g, cfg
+
+
+def test_low_violations_at_planned_demand(planned):
+    g, cfg = planned
+    m = Simulator(g, cfg, seed=0).run(60.0, duration_s=15.0, warmup_s=3.0)
+    assert m.completions > 100
+    assert m.violation_rate < 0.02, m.violation_rate
+
+
+def test_overload_raises_violations(planned):
+    g, cfg = planned
+    m_ok = Simulator(g, cfg, seed=1).run(60.0, duration_s=12.0, warmup_s=3.0)
+    m_over = Simulator(g, cfg, seed=1).run(600.0, duration_s=12.0,
+                                           warmup_s=3.0)
+    assert m_over.violation_rate > m_ok.violation_rate
+    assert m_over.violation_rate > 0.2
+
+
+def test_accuracy_accounting_within_variant_range(planned):
+    g, cfg = planned
+    m = Simulator(g, cfg, seed=2).run(60.0, duration_s=10.0, warmup_s=2.0)
+    a = m.realized_a_obj(g)
+    assert 0.0 < a <= 1.0 + 1e-9
+    for t in g.tasks:
+        ta = m.realized_task_accuracy(g, t)
+        accs = [v.accuracy for v in g.tasks[t].variants]
+        assert min(accs) - 1e-9 <= ta <= max(accs) + 1e-9
+
+
+def test_latencies_within_slo_envelope(planned):
+    g, cfg = planned
+    m = Simulator(g, cfg, seed=3).run(60.0, duration_s=12.0, warmup_s=3.0)
+    assert m.latencies_ms, "no completions recorded"
+    # violations are already counted; surviving p99 must be sane
+    assert m.p99_ms < g.slo_latency_ms * 1.5
+
+
+def test_straggler_tail_absorbed(planned):
+    """4x the latency jitter should not collapse the SLO at planned load
+    (early-drop + shared queue handles stragglers)."""
+    g, cfg = planned
+    m = Simulator(g, cfg, seed=4, jitter_sigma=0.32).run(
+        60.0, duration_s=12.0, warmup_s=3.0)
+    assert m.violation_rate < 0.10
+
+
+def test_instance_failure_absorbed_or_flagged(planned):
+    g, cfg = planned
+    sim = Simulator(g, cfg, seed=5)
+    # kill one server of the task with the most servers
+    task = max(sim.by_task, key=lambda t: len(sim.by_task[t]))
+    victim = sim.by_task[task][0].idx
+    if len(sim.by_task[task]) > 1:
+        sim.fail_instances([victim])
+        m = sim.run(30.0, duration_s=10.0, warmup_s=2.0)
+        assert m.completions > 0
+    else:
+        with pytest.raises(RuntimeError, match="re-plan"):
+            sim.fail_instances([victim])
+
+
+def test_total_task_loss_raises(planned):
+    g, cfg = planned
+    sim = Simulator(g, cfg, seed=6)
+    task = next(iter(sim.by_task))
+    with pytest.raises(RuntimeError):
+        sim.fail_instances([s.idx for s in sim.by_task[task]])
+
+
+def test_determinism_per_seed(planned):
+    g, cfg = planned
+    m1 = Simulator(g, cfg, seed=7).run(40.0, duration_s=8.0, warmup_s=2.0)
+    m2 = Simulator(g, cfg, seed=7).run(40.0, duration_s=8.0, warmup_s=2.0)
+    assert m1.completions == m2.completions
+    assert m1.violations == m2.violations

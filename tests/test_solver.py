@@ -1,0 +1,108 @@
+"""Solver correctness: simplex vs vertex enumeration; B&B vs brute force
+(hypothesis property tests — assignment requirement)."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.solver.branch_bound import solve_milp
+from repro.core.solver.simplex import solve_lp
+
+
+def brute_force_lp(c, A, b):
+    """Optimal vertex of {Ax<=b, x>=0} by enumeration (small dims)."""
+    m, n = A.shape
+    Afull = np.vstack([A, -np.eye(n)])
+    bfull = np.concatenate([b, np.zeros(n)])
+    best = np.inf
+    for rows in itertools.combinations(range(m + n), n):
+        Asub, bsub = Afull[list(rows)], bfull[list(rows)]
+        if abs(np.linalg.det(Asub)) < 1e-9:
+            continue
+        x = np.linalg.solve(Asub, bsub)
+        if (Afull @ x <= bfull + 1e-7).all():
+            best = min(best, float(c @ x))
+    return best
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 10_000))
+def test_simplex_matches_vertex_enumeration(seed):
+    rng = np.random.default_rng(seed)
+    n, m = 3, 5
+    A = rng.normal(size=(m, n))
+    b = rng.uniform(0.5, 2.0, size=m)       # x=0 feasible
+    c = rng.normal(size=n)
+    res = solve_lp(c, A_ub=A, b_ub=b)
+    assert res.status in ("optimal", "unbounded")
+    if res.status == "optimal":
+        best = brute_force_lp(c, A, b)
+        assert abs(res.objective - best) < 1e-5
+        assert (A @ res.x <= b + 1e-6).all()
+        assert (res.x >= -1e-9).all()
+
+
+def test_simplex_equality_and_bounds():
+    res = solve_lp(np.array([1.0, 2.0, 3.0]),
+                   A_eq=np.array([[1.0, 1.0, 1.0]]), b_eq=np.array([1.0]),
+                   ub=np.array([0.5, np.inf, np.inf]))
+    assert res.status == "optimal"
+    np.testing.assert_allclose(res.x, [0.5, 0.5, 0.0], atol=1e-8)
+
+
+def test_simplex_infeasible_detected():
+    res = solve_lp(np.array([1.0]), A_ub=np.array([[1.0], [-1.0]]),
+                   b_ub=np.array([1.0, -2.0]))
+    assert res.status == "infeasible"
+
+
+def test_simplex_unbounded_detected():
+    res = solve_lp(np.array([-1.0]), A_ub=np.array([[-1.0]]),
+                   b_ub=np.array([0.0]))
+    assert res.status == "unbounded"
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10_000))
+def test_bb_matches_brute_force(seed):
+    rng = np.random.default_rng(seed)
+    n, m = 4, 4
+    A = rng.uniform(0, 1, size=(m, n))
+    b = rng.uniform(1, 4, size=m)
+    c = rng.normal(size=n)
+    ub = np.full(n, 4.0)
+    res = solve_milp(c, A, b, None, None, ub, np.ones(n, bool),
+                     max_nodes=3000, time_limit_s=30.0)
+    best = np.inf
+    for x in itertools.product(range(5), repeat=n):
+        xa = np.array(x, float)
+        if (A @ xa <= b + 1e-9).all():
+            best = min(best, float(c @ xa))
+    assert res.status in ("optimal", "feasible")
+    assert abs(res.objective - best) < 1e-6
+
+
+def test_bb_respects_integrality_and_constraints():
+    rng = np.random.default_rng(7)
+    A = rng.uniform(0, 1, (6, 6))
+    b = rng.uniform(2, 5, 6)
+    c = rng.normal(size=6)
+    ub = np.full(6, 10.0)
+    res = solve_milp(c, A, b, None, None, ub, np.ones(6, bool),
+                     max_nodes=500)
+    if res.x is not None:
+        assert np.abs(res.x - np.round(res.x)).max() < 1e-6
+        assert (A @ res.x <= b + 1e-6).all()
+
+
+def test_bb_mixed_integer():
+    """One continuous + one integer variable."""
+    # max x0 + x1 st x0 <= 1.5 (cont), x1 <= 2.5 (int) → 1.5 + 2
+    c = np.array([-1.0, -1.0])
+    A = np.array([[1.0, 0.0], [0.0, 1.0]])
+    b = np.array([1.5, 2.5])
+    res = solve_milp(c, A, b, None, None, np.array([np.inf, np.inf]),
+                     np.array([False, True]), max_nodes=50)
+    assert res.status in ("optimal", "feasible")
+    assert abs(res.objective - (-3.5)) < 1e-6

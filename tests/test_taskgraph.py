@@ -1,0 +1,90 @@
+"""Task graphs + registration handler: DAG validation, path enumeration,
+Eq. 5 demand propagation, registration errors."""
+import pytest
+
+from repro.core.apps import APPS, get_app
+from repro.core.registry import RegistrationError, register
+from repro.core.taskgraph import Task, TaskGraph, Variant
+
+
+def V(name="v", arch="gemma-2b", acc=0.9):
+    return Variant(name, arch, accuracy=acc)
+
+
+def test_apps_register_cleanly():
+    for name in APPS:
+        reg = register(get_app(name))
+        assert reg.profiler.table
+
+
+def test_paths_and_depth():
+    g = get_app("traffic_analysis")
+    assert sorted(g.paths) == [("detect", "person_attrs"),
+                               ("detect", "vehicle_attrs")]
+    assert g.depth == 1
+    assert get_app("ar_assistant").paths == [("detect", "caption", "tts")]
+    assert get_app("ar_assistant").depth == 2
+
+
+def test_cycle_rejected():
+    with pytest.raises(ValueError, match="cycle"):
+        TaskGraph("bad", {"a": Task("a", (V(),)), "b": Task("b", (V(),))},
+                  [("a", "b"), ("b", "a")])
+
+
+def test_multiple_entries_rejected():
+    with pytest.raises(ValueError, match="entry"):
+        TaskGraph("bad", {"a": Task("a", (V(),)), "b": Task("b", (V(),)),
+                          "c": Task("c", (V(),))},
+                  [("a", "c"), ("b", "c")])
+
+
+def test_unknown_edge_task_rejected():
+    with pytest.raises(ValueError, match="unknown"):
+        TaskGraph("bad", {"a": Task("a", (V(),))}, [("a", "zzz")])
+
+
+def test_demand_propagation_eq5():
+    g = get_app("traffic_analysis")
+    d = g.demand_at_tasks(100.0)   # most-accurate detect: cars 1.5, ppl 2.0
+    assert d["detect"] == 100.0
+    assert d["vehicle_attrs"] == pytest.approx(150.0)
+    assert d["person_attrs"] == pytest.approx(200.0)
+    # observed fbar overrides (paper §3.2)
+    d2 = g.demand_at_tasks(100.0, {("detect", "vehicle_attrs"): 3.0})
+    assert d2["vehicle_attrs"] == pytest.approx(300.0)
+
+
+def test_demand_propagation_chain():
+    g = get_app("ar_assistant")
+    d = g.demand_at_tasks(10.0)
+    assert d["caption"] == pytest.approx(12.0)   # 1.2 fan-out
+    assert d["tts"] == pytest.approx(12.0)
+
+
+def test_register_unknown_arch_rejected():
+    t = Task("a", (Variant("v", "not-an-arch", accuracy=0.9),))
+    g = TaskGraph("g", {"a": t}, [])
+    with pytest.raises(RegistrationError, match="unknown arch"):
+        register(g)
+
+
+def test_register_bad_mult_edge_rejected():
+    g = TaskGraph("g", {"a": Task("a", (V(),)), "b": Task("b", (V(),))},
+                  [("a", "b")])
+    g.mult[("b", "v", "a")] = 2.0
+    with pytest.raises(RegistrationError, match="no matching edge"):
+        register(g)
+
+
+def test_variant_accuracy_bounds():
+    with pytest.raises(ValueError):
+        Variant("v", "gemma-2b", accuracy=1.5)
+    with pytest.raises(ValueError):
+        Variant("v", "gemma-2b", accuracy=0.0)
+
+
+def test_path_fractions_must_sum_to_one():
+    with pytest.raises(ValueError, match="sum"):
+        TaskGraph("g", {"a": Task("a", (V(),)), "b": Task("b", (V(),))},
+                  [("a", "b")], path_fractions={("a", "b"): 0.5})
