@@ -1,7 +1,12 @@
 """Paper §5.1: MILP/controller solve time across demand conditions and
-applications (paper envelope: 2-20 s on Gurobi; ours must stay inside)."""
+applications (paper envelope: 2-20 s on Gurobi; ours must stay inside).
+
+``run()`` returns a JSON-able dict (per app: solve ms, B&B nodes, warm/cold
+LP counts, and the realized objective beta*slices - alpha*A_obj per demand)
+which the harness persists as ``BENCH_milp.json`` so future PRs have a perf
+trajectory to regress against."""
 import time
-from typing import Dict, List
+from typing import Dict
 
 import numpy as np
 
@@ -13,25 +18,44 @@ S_AVAIL = 256
 DEMANDS = (10.0, 100.0, 800.0)
 
 
-def run(csv=print) -> Dict[str, List[float]]:
-    out: Dict[str, List[float]] = {}
+def run(csv=print) -> Dict[str, dict]:
+    out: Dict[str, dict] = {}
     for app in APPS:
         g = get_app(app)
         prof = Profiler(g)
         planner = Planner(g, prof, s_avail=S_AVAIL,
                           max_tuples_per_task=48, bb_nodes=8,
                           bb_time_s=2.0)
-        times = []
+        times, objectives, feasible = [], [], []
         for R in DEMANDS:
             t0 = time.time()
             cfg = planner.plan(R)
             dt = time.time() - t0
             times.append(dt)
+            obj = (planner.beta * cfg.slices
+                   - planner.alpha * cfg.exact_a_obj()) if cfg else None
+            objectives.append(obj)
+            feasible.append(cfg is not None)
             csv(f"milp,{app},R={R:.0f},{dt*1e3:.0f},ms,"
                 f"{'ok' if cfg else 'infeasible'}")
-        out[app] = times
+        st = planner.stats
+        out[app] = {
+            "demands": list(DEMANDS),
+            "solve_ms": [t * 1e3 for t in times],
+            "mean_ms": float(np.mean(times) * 1e3),
+            "max_ms": float(np.max(times) * 1e3),
+            "objective": objectives,
+            "feasible": feasible,
+            "bb_nodes": st.nodes,
+            "milp_solves": st.milp_solves,
+            "lp_warm": st.lp_warm,
+            "lp_cold": st.lp_cold,
+            "warm_basis_hits": st.warm_basis_hits,
+            "matrix_cache_hits": st.matrix_cache_hits,
+        }
         csv(f"milp_summary,{app},mean={np.mean(times)*1e3:.0f}ms,"
-            f"max={np.max(times)*1e3:.0f}ms,paper=2-20s")
+            f"max={np.max(times)*1e3:.0f}ms,nodes={st.nodes},"
+            f"lp_warm={st.lp_warm},lp_cold={st.lp_cold},paper=2-20s")
     return out
 
 

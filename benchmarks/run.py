@@ -2,9 +2,15 @@
 
     PYTHONPATH=src python -m benchmarks.run [--only NAME]
 
-Prints ``name,key,value,...`` CSV lines per benchmark.
+Prints ``name,key,value,...`` CSV lines per benchmark.  Benchmarks whose
+``run()`` returns a dict also get it persisted as ``BENCH_<name>.json``
+(next to this file's repo root) so later PRs can regress against the
+recorded perf trajectory — e.g. ``BENCH_milp.json`` holds mean/max solve
+ms, B&B node counts, and per-app objectives.
 """
 import argparse
+import json
+import os
 import time
 
 from benchmarks import (bench_capacity, bench_configs, bench_empirical,
@@ -27,12 +33,18 @@ def main() -> None:
     ap.add_argument("--only", choices=sorted(ALL), default=None)
     args = ap.parse_args()
     names = [args.only] if args.only else list(ALL)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     t_all = time.time()
     for name in names:
         print(f"### benchmark: {name}")
         t0 = time.time()
         try:
-            ALL[name].run()
+            result = ALL[name].run()
+            if isinstance(result, dict):
+                path = os.path.join(root, f"BENCH_{name}.json")
+                with open(path, "w") as f:
+                    json.dump(result, f, indent=2, default=str)
+                print(f"{name},json,{path}")
         except Exception as e:  # noqa: BLE001 — keep the harness going
             print(f"{name},ERROR,{type(e).__name__}: {e}")
         print(f"### {name} done in {time.time()-t0:.1f}s\n")

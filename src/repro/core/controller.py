@@ -33,6 +33,8 @@ class BinReport:
     accuracy_drop_pct: float      # vs A_max, in percent
     completions: int
     p99_ms: float
+    warm_replan: bool = False     # re-plan reused the previous bin's basis
+    milp_nodes: int = 0           # B&B nodes spent in this bin's re-plan
 
 
 @dataclass
@@ -69,15 +71,23 @@ class Controller:
 
         replanned = False
         milp_ms = 0.0
+        warm_replan = False
+        milp_nodes = 0
         need = (self._config is None
                 or abs(predicted - self._planned_for)
                 > self.replan_threshold * max(self._planned_for, 1e-9))
         s_now = self.s_avail - dead_chips
         if need:
             t0 = time.monotonic()
+            # steady-state bins re-plan from the previous bin's incumbent
+            # and root basis (Planner carries the warm state per context)
+            warm0 = self.planner.stats.warm_basis_hits
+            nodes0 = self.planner.stats.nodes
             self.planner.s_avail = s_now
             cfg = self.planner.plan(predicted, self._fbar or None)
             milp_ms = (time.monotonic() - t0) * 1e3
+            warm_replan = self.planner.stats.warm_basis_hits > warm0
+            milp_nodes = self.planner.stats.nodes - nodes0
             self.milp_times_ms.append(milp_ms)
             if cfg is not None:
                 self._config = cfg
@@ -112,6 +122,8 @@ class Controller:
             accuracy_drop_pct=acc_drop,
             completions=metrics.completions,
             p99_ms=metrics.p99_ms,
+            warm_replan=warm_replan,
+            milp_nodes=milp_nodes,
         )
 
     # ------------------------------------------------------------------

@@ -28,10 +28,58 @@ import numpy as np
 from repro.core import accuracy as acc_mod
 from repro.core.profiler import ProfileEntry, Profiler
 from repro.core.solver.branch_bound import MILPResult, solve_milp
+from repro.core.solver.simplex import BasisState, BoundedSimplex
 from repro.core.taskgraph import TaskGraph
 from repro.sharding.segments import SegmentType, catalogue
 
 Key = Tuple[str, str, str, int]
+
+# geometric grid for instance-cap quantization: caps (and with them the
+# whole constraint matrix) stay identical while demand moves within one
+# band, so re-plans hit the matrix cache and warm-start from the previous
+# bin's basis.  Quantizing UP only enlarges the feasible space.
+CAP_QUANT = 1.25
+
+
+def _quantize_up(d: float) -> float:
+    if d <= 0.0:
+        return 0.0
+    k = math.ceil(math.log(d) / math.log(CAP_QUANT) - 1e-9)
+    return CAP_QUANT ** k
+
+
+@dataclass
+class PlannerStats:
+    """Solve-stats counters (cumulative over a Planner's lifetime)."""
+    milp_solves: int = 0
+    nodes: int = 0
+    lp_warm: int = 0              # node LPs warm-started from a basis
+    lp_cold: int = 0              # node LPs solved from scratch
+    matrix_cache_hits: int = 0
+    matrix_cache_misses: int = 0
+    warm_basis_hits: int = 0      # root LP seeded from a previous solve
+    warm_incumbent_hits: int = 0
+
+
+@dataclass
+class _Assembled:
+    """Demand-independent MILP matrices (cached across ``plan()`` calls)."""
+    c: np.ndarray
+    A_ub: np.ndarray
+    b_ub: np.ndarray              # template; throughput rows patched per call
+    A_eq: np.ndarray
+    b_eq: np.ndarray
+    ub: np.ndarray
+    int_mask: np.ndarray
+    solver: BoundedSimplex        # factorized-basis solver bound to A
+    tput_rows: Dict[str, int]     # task -> row index of its Eq.6 row
+    grid: Dict[str, List[float]]
+    caps: np.ndarray
+    ix_x: np.ndarray
+    ix_y: np.ndarray
+    ix_L: Dict[str, int]
+    ix_z: Dict[Tuple[str, int], int]
+    nvar: int
 
 
 @dataclass(frozen=True)
@@ -141,15 +189,36 @@ class Planner:
     # plan at <= headroom utilization so steady-state queueing stays inside
     # the paper's 2x latency allowance (Eq. 3)
     headroom: float = 0.8
+    prune_dominated: bool = True      # drop dominated (t,v,s,b) pre-assembly
+    matrix_cache_size: int = 8        # LRU entries of cached MILP matrices
 
     def __post_init__(self):
         if self.beta is None:
             self.beta = self.alpha / max(self.s_avail, 1)
+        self.stats = PlannerStats()
+        self._admissible_cache: Dict[str, List[TupleVar]] = {}
+        self._matrix_cache: Dict[tuple, _Assembled] = {}
+        # per-context warm state: last solve's root basis + incumbent
+        self._warm: Dict[Optional[str],
+                         Tuple[tuple, Optional[BasisState],
+                               Optional[np.ndarray]]] = {}
 
     # ------------------------------------------------------------------
     # admissible tuples
     # ------------------------------------------------------------------
+    def invalidate_caches(self) -> None:
+        """Drop cached admissible tuples / matrices / warm state (call after
+        profiler entries or graph SLOs change)."""
+        self._admissible_cache.clear()
+        self._matrix_cache.clear()
+        self._warm.clear()
+
     def _admissible(self, task: str) -> List[TupleVar]:
+        # profiler entries and SLOs are fixed for a Planner's lifetime
+        # (see invalidate_caches), so the pareto-pruned tuple set is too
+        cached = self._admissible_cache.get(task)
+        if cached is not None:
+            return cached
         t = self.graph.tasks[task]
         variants = (t.variants if self.features.accuracy_scaling
                     else (t.most_accurate,))
@@ -185,6 +254,7 @@ class Planner:
                     else:
                         del groups[key]
             out = picked
+        self._admissible_cache[task] = out
         return out
 
     # ------------------------------------------------------------------
@@ -252,6 +322,10 @@ class Planner:
             lmax[t] = max(e.latency_ms for _, e in entries
                           if 2 * e.latency_ms <= g.slo_latency_ms)
         total_res = sum(exp_res.values())
+        if total_res <= 0.0:
+            # zero demand everywhere: no meaningful static split exists
+            # (the joint path handles R=0 as an empty deployment)
+            return None
         res_budget = {t: self.s_avail * exp_res[t] / total_res
                       for t in g.tasks}
         # per-path latency split in ratio of lmax; task gets min across paths
@@ -290,11 +364,12 @@ class Planner:
     # ------------------------------------------------------------------
     # MILP assembly
     # ------------------------------------------------------------------
-    def _solve(self, tuples: List[TupleVar],
-               task_tuples: Dict[str, List[int]],
-               demand: Dict[str, float], *, slo_l: float, slo_a: float,
-               s_avail: int, single_task: Optional[str] = None
-               ) -> Optional[PlanConfig]:
+    def _assemble(self, tuples: List[TupleVar],
+                  task_tuples: Dict[str, List[int]], caps: np.ndarray,
+                  *, slo_l: float, slo_a: float, s_avail: int,
+                  single_task: Optional[str]) -> _Assembled:
+        """Build the demand-independent MILP matrices (throughput rhs is a
+        template patched per solve)."""
         g = self.graph
         tasks = list(task_tuples)
         nj = len(tuples)
@@ -315,20 +390,7 @@ class Planner:
                 z_off += 1
         nvar = z_off
 
-        caps = np.array([max(1.0, math.ceil(demand[j.task]
-                                            / max(j.throughput, 1e-9))) + 1
-                         for j in tuples])
-
-        # path weights w_t = Σ_{p∋t} f_p (for the linearized Eq. 12)
-        if single_task is None:
-            w = {t: sum(f for p, f in g.path_fractions.items() if t in p)
-                 for t in tasks}
-            paths = g.paths
-        else:
-            w = {single_task: 1.0}
-            paths = [(single_task,)]
-        amax = acc_mod.a_max(g) if single_task is None else \
-            g.tasks[single_task].max_accuracy
+        w, paths, amax = self._weights(tasks, single_task)
 
         rows, rhs = [], []
 
@@ -347,10 +409,12 @@ class Planner:
         # Eq.3 per path: Σ 2*Lhat <= SLO_l
         for p in paths:
             add({ix_L[t]: 2.0 for t in p if t in ix_L}, slo_l)
-        # Eq.6 throughput: -Σ x*H <= -R̂(t)
+        # Eq.6 throughput: -Σ x*H <= -R̂(t)  (rhs patched with live demand)
+        tput_rows = {}
         for t in tasks:
+            tput_rows[t] = len(rows)
             add({ix_x[i]: -tuples[i].throughput for i in task_tuples[t]},
-                -demand[t])
+                0.0)
         # Eq.8 resources
         add({ix_x[i]: float(tuples[i].cost) for i in range(nj)},
             float(s_avail))
@@ -401,6 +465,67 @@ class Planner:
         b_ub = np.array(rhs)
         A_eq = _densify(eq_rows, nvar)
         b_eq = np.array(eq_rhs)
+        solver = BoundedSimplex(c, A_ub, b_ub, A_eq, b_eq)
+        return _Assembled(c, A_ub, b_ub, A_eq, b_eq, ub, int_mask, solver,
+                          tput_rows, grid, caps, ix_x, ix_y, ix_L, ix_z,
+                          nvar)
+
+    def _weights(self, tasks, single_task):
+        """Path weights w_t = Σ_{p∋t} f_p (for the linearized Eq. 12)."""
+        g = self.graph
+        if single_task is None:
+            w = {t: sum(f for p, f in g.path_fractions.items() if t in p)
+                 for t in tasks}
+            paths = g.paths
+            amax = acc_mod.a_max(g)
+        else:
+            w = {single_task: 1.0}
+            paths = [(single_task,)]
+            amax = g.tasks[single_task].max_accuracy
+        return w, paths, amax
+
+    def _solve(self, tuples: List[TupleVar],
+               task_tuples: Dict[str, List[int]],
+               demand: Dict[str, float], *, slo_l: float, slo_a: float,
+               s_avail: int, single_task: Optional[str] = None
+               ) -> Optional[PlanConfig]:
+        g = self.graph
+        if self.prune_dominated:
+            tuples, task_tuples = _prune_dominated(tuples, task_tuples)
+        tasks = list(task_tuples)
+        nj = len(tuples)
+
+        # instance caps from demand quantized UP onto a geometric grid so
+        # the matrices (and the warm-start basis) survive small demand moves
+        qd = {t: _quantize_up(demand[t]) for t in tasks}
+        caps = np.array([max(1.0, math.ceil(qd[j.task]
+                                            / max(j.throughput, 1e-9))) + 1
+                         for j in tuples])
+
+        cache_key = (single_task, tuple(tuples),
+                     tuple(int(cp) for cp in caps),
+                     round(slo_l, 9), round(slo_a, 12), int(s_avail))
+        asm = self._matrix_cache.pop(cache_key, None)
+        if asm is None:
+            self.stats.matrix_cache_misses += 1
+            asm = self._assemble(tuples, task_tuples, caps,
+                                 slo_l=slo_l, slo_a=slo_a, s_avail=s_avail,
+                                 single_task=single_task)
+        else:
+            self.stats.matrix_cache_hits += 1
+        self._matrix_cache[cache_key] = asm       # LRU: re-insert as newest
+        while len(self._matrix_cache) > self.matrix_cache_size:
+            self._matrix_cache.pop(next(iter(self._matrix_cache)))
+
+        # patch the live demand into the throughput rows
+        b_ub = asm.b_ub.copy()
+        for t in tasks:
+            b_ub[asm.tput_rows[t]] = -demand[t]
+
+        w, _, amax = self._weights(tasks, single_task)
+        grid = asm.grid
+        ix_x, ix_y, ix_L, ix_z = asm.ix_x, asm.ix_y, asm.ix_L, asm.ix_z
+        nvar = asm.nvar
 
         def make_cfg(counts: Dict[Key, int]) -> PlanConfig:
             return PlanConfig(g, counts,
@@ -416,9 +541,27 @@ class Planner:
             return self._lift(counts, tuples, task_tuples, grid, nvar,
                               ix_x, ix_y, ix_L, ix_z, tasks)
 
-        res = solve_milp(c, A_ub, b_ub, A_eq, b_eq, ub, int_mask,
+        # warm start: previous solve of the same matrices in this context
+        ctx = single_task
+        wkey, wbasis, wx = self._warm.get(ctx, (None, None, None))
+        warm_basis = wbasis if wkey == cache_key else None
+        warm_x = wx if wkey == cache_key else None
+        if warm_x is not None:
+            self.stats.warm_incumbent_hits += 1
+
+        res = solve_milp(asm.c, asm.A_ub, b_ub, asm.A_eq, asm.b_eq,
+                         asm.ub, asm.int_mask,
                          repair=repair, max_nodes=self.bb_nodes,
-                         time_limit_s=self.bb_time_s)
+                         time_limit_s=self.bb_time_s, solver=asm.solver,
+                         warm_basis=warm_basis, warm_incumbent=warm_x)
+        self.stats.milp_solves += 1
+        self.stats.nodes += res.nodes
+        self.stats.lp_warm += res.lp_warm
+        self.stats.lp_cold += res.lp_cold
+        if res.root_warm:
+            self.stats.warm_basis_hits += 1
+        self._warm[ctx] = (cache_key, res.root_basis,
+                           res.x.copy() if res.x is not None else None)
         if res.x is None:
             return None
         counts = {tuples[i].key: int(round(res.x[ix_x[i]]))
@@ -635,6 +778,46 @@ class Planner:
 
 
 # ---------------------------------------------------------------------------
+def _prune_dominated(tuples: List[TupleVar],
+                     task_tuples: Dict[str, List[int]]
+                     ) -> Tuple[List[TupleVar], Dict[str, List[int]]]:
+    """Drop tuples dominated within their task (≥ cost, ≥ latency,
+    ≤ throughput, ≤ accuracy than some other tuple, strict somewhere)
+    before matrix assembly, re-indexing ``task_tuples``.  Removing a
+    dominated column never changes the MILP optimum: any solution using it
+    maps to one at least as good on the dominator."""
+    new_tuples: List[TupleVar] = []
+    new_tt: Dict[str, List[int]] = {}
+    for t, idxs in task_tuples.items():
+        group = [tuples[i] for i in idxs]
+        keep = _nondominated_mask(group)
+        new_tt[t] = []
+        for j, k in zip(group, keep):
+            if k:
+                new_tt[t].append(len(new_tuples))
+                new_tuples.append(j)
+    return new_tuples, new_tt
+
+
+def _nondominated_mask(group: List[TupleVar]) -> List[bool]:
+    keep = [True] * len(group)
+    for a, j in enumerate(group):
+        for b, i in enumerate(group):
+            if a == b or not keep[b]:
+                continue
+            if (i.accuracy >= j.accuracy
+                    and i.latency_ms <= j.latency_ms
+                    and i.throughput >= j.throughput
+                    and i.cost <= j.cost
+                    and (i.latency_ms < j.latency_ms
+                         or i.throughput > j.throughput
+                         or i.cost < j.cost or i.accuracy > j.accuracy
+                         or b < a)):     # tie-break exact duplicates
+                keep[a] = False
+                break
+    return keep
+
+
 def _pareto_prune(tuples: List[TupleVar]) -> List[TupleVar]:
     """Drop (t,v,s,b) tuples dominated on (latency, throughput, cost)."""
     out = []

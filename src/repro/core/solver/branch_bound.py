@@ -1,9 +1,13 @@
-"""Best-first branch & bound over the LP relaxation (numpy simplex).
+"""Best-first branch & bound over the LP relaxation (revised simplex).
 
-Branches on the most-fractional integer variable; node bounds come from
-the LP; incumbents from caller-supplied rounding ``repair`` (the MILP
-layer passes its exact-semantics greedy repair).  Node/time caps keep the
-controller's solve inside the paper's 2-20 s envelope.
+Branches on the most-fractional integer variable.  Each node carries its
+parent's optimal basis and passes its ``lo``/``hi`` **natively** to the
+bounded-variable simplex — a child LP is the parent basis plus one bound
+tightening, so it re-solves with a handful of dual-simplex pivots instead
+of a from-scratch phase 1.  Node bounds come from the LP; incumbents from
+caller-supplied rounding ``repair`` (the MILP layer passes its
+exact-semantics greedy repair).  Node/time caps keep the controller's
+solve inside the paper's 2-20 s envelope.
 """
 from __future__ import annotations
 
@@ -15,7 +19,7 @@ from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.solver.simplex import solve_lp
+from repro.core.solver.simplex import BasisState, BoundedSimplex
 
 INT_TOL = 1e-6
 
@@ -26,7 +30,12 @@ class MILPResult:
     x: Optional[np.ndarray]
     objective: float
     nodes: int
-    gap: float                  # |best_bound - incumbent| / (|incumbent|+1)
+    gap: float                  # (incumbent - best_bound) / (|incumbent|+1)
+    best_bound: float = np.nan  # proven lower bound when the search stops
+    root_basis: Optional[BasisState] = None   # warm start for the next solve
+    lp_warm: int = 0            # node LPs that reused a parent/caller basis
+    lp_cold: int = 0            # node LPs solved from scratch (phase 1)
+    root_warm: bool = False     # root LP reused the caller's warm basis
 
 
 def solve_milp(
@@ -42,36 +51,54 @@ def solve_milp(
     max_nodes: int = 400,
     time_limit_s: float = 20.0,
     gap_tol: float = 1e-3,
+    solver: Optional[BoundedSimplex] = None,
+    warm_basis: Optional[BasisState] = None,
+    warm_incumbent: Optional[np.ndarray] = None,
 ) -> MILPResult:
     """min c@x, integer on int_mask. `repair` maps a fractional LP point to
     an integer-feasible point (or None); its result seeds/updates the
-    incumbent."""
+    incumbent.
+
+    ``solver`` lets the caller reuse a cached :class:`BoundedSimplex`
+    (constraint matrix built once across re-plans); ``warm_basis`` seeds
+    the root LP from a previous solve of the same matrix and
+    ``warm_incumbent`` seeds the incumbent (both used by the controller's
+    bin-to-bin warm start)."""
     n = c.size
     t0 = time.monotonic()
 
-    def lp(lo: np.ndarray, hi: np.ndarray):
-        # lower bounds via shifted vars would complicate; encode lo as rows
-        rows, rhs = [], []
-        nz = lo > INT_TOL
-        if nz.any():
-            R = np.zeros((int(nz.sum()), n))
-            R[np.arange(int(nz.sum())), np.where(nz)[0]] = -1.0
-            rows.append(R)
-            rhs.append(-lo[nz])
-        A2 = A_ub if A_ub is not None else np.zeros((0, n))
-        b2 = b_ub if b_ub is not None else np.zeros((0,))
-        if rows:
-            A2 = np.vstack([A2] + rows)
-            b2 = np.concatenate([b2] + rhs)
-        return solve_lp(c, A2, b2, A_eq, b_eq, ub=hi)
+    if solver is None:
+        solver = BoundedSimplex(c, A_ub, b_ub, A_eq, b_eq)
+        b_full = None
+    else:
+        # refresh rhs in case the cached matrix is re-used at a new demand
+        b_full = np.concatenate([
+            np.asarray(b_ub, float).ravel() if b_ub is not None else
+            np.zeros(0),
+            np.asarray(b_eq, float).ravel() if b_eq is not None else
+            np.zeros(0)])
+
+    lp_warm = lp_cold = 0
+
+    def count(res):
+        nonlocal lp_warm, lp_cold
+        if res.warm_used:
+            lp_warm += 1
+        else:
+            lp_cold += 1
 
     lo0 = np.zeros(n)
     hi0 = ub.astype(float).copy()
-    root = lp(lo0, hi0)
+    root = solver.solve(lo0, hi0, b=b_full, warm=warm_basis)
+    count(root)
     if root.status == "infeasible":
-        return MILPResult("infeasible", None, np.inf, 1, np.inf)
+        return MILPResult("infeasible", None, np.inf, 1, np.inf,
+                          best_bound=np.inf, lp_warm=lp_warm, lp_cold=lp_cold)
     if root.status != "optimal":
-        return MILPResult("cap", None, np.nan, 1, np.inf)
+        return MILPResult("cap", None, np.nan, 1, np.inf,
+                          lp_warm=lp_warm, lp_cold=lp_cold)
+    root_basis = root.basis
+    root_warm = bool(root.warm_used)
 
     best_x: Optional[np.ndarray] = None
     best_obj = np.inf
@@ -80,59 +107,86 @@ def solve_milp(
         nonlocal best_x, best_obj
         if x is None:
             return
+        x = np.asarray(x, float)
         val = float(c @ x)
         if val < best_obj - 1e-12:
-            feas = _is_feasible(x, A_ub, b_ub, A_eq, b_eq, ub, int_mask)
-            if feas:
+            if _is_feasible(x, A_ub, b_ub, A_eq, b_eq, ub, int_mask):
                 best_obj = val
                 best_x = x.copy()
 
+    try_incumbent(warm_incumbent)
     if repair is not None:
         try_incumbent(repair(root.x))
 
     counter = itertools.count()
-    heap: List[Tuple[float, int, np.ndarray, np.ndarray]] = []
-    heapq.heappush(heap, (root.objective, next(counter), lo0, hi0))
+    Node = Tuple[float, int, np.ndarray, np.ndarray, Optional[BasisState]]
+    heap: List[Node] = []
+    heapq.heappush(heap, (root.objective, next(counter), lo0, hi0,
+                          root.basis))
     nodes = 0
-    best_bound = root.objective
+    proven = False
+    dropped_bound = np.inf   # tightest bound among subtrees lost to
+                             # numeric trouble (maxiter/singular node LPs)
 
     while heap and nodes < max_nodes:
         if time.monotonic() - t0 > time_limit_s:
             break
-        bound, _, lo, hi = heapq.heappop(heap)
-        best_bound = bound
-        if bound >= best_obj - 1e-9:
-            break  # best-first: nothing better remains
-        res = lp(lo, hi)
+        if heap[0][0] >= best_obj - 1e-9:
+            proven = True   # best-first: nothing better remains anywhere
+            break
+        bound, _, lo, hi, pbasis = heapq.heappop(heap)
+        res = solver.solve(lo, hi, warm=pbasis)
+        count(res)
         nodes += 1
+        if res.status not in ("optimal", "infeasible"):
+            # subtree dropped unproven: its parent bound stays a valid
+            # lower bound on whatever it contained
+            dropped_bound = min(dropped_bound, bound)
+            continue
         if res.status != "optimal" or res.objective >= best_obj - 1e-9:
             continue
         x = res.x
-        frac = np.where(int_mask,
-                        np.abs(x - np.round(x)), 0.0)
+        frac = np.where(int_mask, np.abs(x - np.round(x)), 0.0)
         j = int(np.argmax(frac))
         if frac[j] <= INT_TOL:
             try_incumbent(np.where(int_mask, np.round(x), x))
             continue
         if repair is not None:
             try_incumbent(repair(x))
-        lo_hi = lo.copy(), hi.copy()
         # down branch
         hi_d = hi.copy()
         hi_d[j] = np.floor(x[j])
-        heapq.heappush(heap, (res.objective, next(counter), lo.copy(), hi_d))
+        heapq.heappush(heap, (res.objective, next(counter), lo, hi_d,
+                              res.basis))
         # up branch
         lo_u = lo.copy()
         lo_u[j] = np.ceil(x[j])
-        heapq.heappush(heap, (res.objective, next(counter), lo_u, hi.copy()))
+        heapq.heappush(heap, (res.objective, next(counter), lo_u, hi,
+                              res.basis))
 
-    gap = abs(best_bound - best_obj) / (abs(best_obj) + 1.0) \
-        if best_x is not None else np.inf
+    # the true remaining bound is the heap minimum (the loop may have
+    # stopped on the node/time cap without popping it), further capped by
+    # any subtree dropped on a numeric failure
+    if (proven or not heap) and not np.isfinite(dropped_bound):
+        best_bound = best_obj if best_x is not None else np.inf
+        exhausted = True
+    else:
+        remaining = heap[0][0] if heap else np.inf
+        best_bound = min(remaining, dropped_bound, best_obj)
+        exhausted = False
+
     if best_x is None:
-        return MILPResult("infeasible" if not heap else "cap",
-                          None, np.inf, nodes, np.inf)
-    status = "optimal" if (not heap or gap <= gap_tol) else "feasible"
-    return MILPResult(status, best_x, best_obj, nodes, gap)
+        unexplored = bool(heap) or np.isfinite(dropped_bound)
+        return MILPResult("cap" if unexplored else "infeasible",
+                          None, np.inf, nodes, np.inf,
+                          best_bound=best_bound, root_basis=root_basis,
+                          lp_warm=lp_warm, lp_cold=lp_cold,
+                          root_warm=root_warm)
+    gap = max(0.0, best_obj - best_bound) / (abs(best_obj) + 1.0)
+    status = "optimal" if (exhausted or gap <= gap_tol) else "feasible"
+    return MILPResult(status, best_x, best_obj, nodes, gap,
+                      best_bound=best_bound, root_basis=root_basis,
+                      lp_warm=lp_warm, lp_cold=lp_cold, root_warm=root_warm)
 
 
 def _is_feasible(x, A_ub, b_ub, A_eq, b_eq, ub, int_mask, tol=1e-6) -> bool:

@@ -1,0 +1,82 @@
+"""Use real `hypothesis` when installed, else a deterministic fallback.
+
+The seed image does not ship hypothesis (see requirements-dev.txt), which
+used to crash collection of five test modules.  Property tests import
+``given``/``settings``/``st`` from here instead: with hypothesis installed
+they behave exactly as before; without it, each ``@given`` test runs its
+strategies over a fixed deterministic sample of ``max_examples`` draws
+(no shrinking, but the same pass/fail semantics on the sampled points).
+"""
+import functools
+import inspect
+import random
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class _strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                size = rng.randint(min_size, max_size)
+                return [elements.example(rng) for _ in range(size)]
+            return _Strategy(draw)
+
+    st = _strategies
+
+    def settings(max_examples=20, **_kwargs):
+        def deco(fn):
+            fn._fallback_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            # strategies fill the rightmost params (hypothesis semantics);
+            # the rest are pytest fixtures, which arrive as kwargs
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            filled = [p.name for p in params[len(params) - len(strats):]]
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_fallback_max_examples", 20)
+                for i in range(n):
+                    rng = random.Random(7919 * i + 13)
+                    vals = {name: s.example(rng)
+                            for name, s in zip(filled, strats)}
+                    fn(*args, **kwargs, **vals)
+            # hide the strategy-filled params from pytest so it only
+            # injects the remaining ones as fixtures
+            wrapper.__signature__ = sig.replace(
+                parameters=params[:len(params) - len(strats)])
+            del wrapper.__wrapped__
+            return wrapper
+        return deco

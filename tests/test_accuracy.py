@@ -2,7 +2,7 @@
 one-sided lower bound — the central safety invariant (DESIGN.md §5)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import accuracy as acc
 from repro.core.apps import get_app

@@ -75,3 +75,20 @@ def test_frontend_deadlines_and_binning():
     assert fe.observed_demand()[0] == pytest.approx(3 / 10.0)
     assert fe.should_replan(planned_for_rps=100.0)   # big drift
     assert not fe.should_replan(planned_for_rps=0.1)
+
+
+def test_controller_steady_state_warm_replan(social_profiler):
+    """A steady-state re-plan (e.g. the violation-trigger path at an
+    unchanged demand) must reuse the previous bin's basis — observable via
+    the planner's solve-stats counter and the BinReport flag."""
+    g, prof = social_profiler
+    ctl = Controller(g, prof, s_avail=64,
+                     planner_kwargs=dict(max_tuples_per_task=32,
+                                         bb_nodes=4, bb_time_s=1.0))
+    r0 = ctl.step(0, 100.0, sim_seconds=2.0)
+    ctl._planned_for = -1.0     # force a re-plan at the same demand
+    r1 = ctl.step(1, 100.0, sim_seconds=2.0)
+    assert r0.replanned and r1.replanned
+    assert not r0.warm_replan
+    assert r1.warm_replan
+    assert ctl.planner.stats.warm_basis_hits >= 1

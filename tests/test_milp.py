@@ -3,7 +3,7 @@ every returned config satisfies the EXACT constraints, feature supersets
 never plan worse, and the paper's Fig. 3 orderings reproduce."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.baselines import ANALYTICAL_BASELINES
 from repro.core.milp import FeatureSet, Planner, _pareto_prune, TupleVar
@@ -109,3 +109,57 @@ def test_fbar_changes_downstream_sizing(traffic_profiler):
     lo_t = lo.task_throughput("vehicle_attrs")
     hi_t = hi.task_throughput("vehicle_attrs")
     assert hi_t > lo_t * 2
+
+
+# ---------------------------------------------------------------------------
+# dominated-tuple pruning + warm-started re-planning
+# ---------------------------------------------------------------------------
+def test_prune_dominated_never_changes_objective(traffic_profiler,
+                                                 social_profiler):
+    """Regression: dropping dominated (t,v,s,b) columns before matrix
+    assembly must not change the planned objective on the seed apps."""
+    for g, prof in (traffic_profiler, social_profiler):
+        for R in (10.0, 100.0):
+            on = Planner(g, prof, s_avail=128, max_tuples_per_task=32,
+                         bb_nodes=4, bb_time_s=1.0,
+                         prune_dominated=True).plan(R)
+            off = Planner(g, prof, s_avail=128, max_tuples_per_task=32,
+                          bb_nodes=4, bb_time_s=1.0,
+                          prune_dominated=False).plan(R)
+            assert (on is None) == (off is None)
+            if on is not None:
+                assert on.slices == off.slices
+                assert on.exact_a_obj() == pytest.approx(
+                    off.exact_a_obj(), abs=1e-9)
+
+
+def test_warm_start_replan_uses_previous_basis(social_profiler):
+    """A steady-state re-plan (same demand band) must reuse the previous
+    solve's root basis and incumbent — observable via the stats counters."""
+    g, prof = social_profiler
+    planner = planner_for(g, prof)
+    cfg0 = planner.plan(100.0)
+    assert cfg0 is not None
+    assert planner.stats.warm_basis_hits == 0
+    cfg1 = planner.plan(100.0)
+    assert cfg1 is not None
+    assert planner.stats.warm_basis_hits >= 1
+    assert planner.stats.warm_incumbent_hits >= 1
+    assert planner.stats.matrix_cache_hits >= 1
+    # warm-started plan is exactly as good
+    assert cfg1.slices == cfg0.slices
+    assert cfg1.exact_a_obj() == pytest.approx(cfg0.exact_a_obj(), abs=1e-9)
+
+
+def test_warm_start_same_band_demand_move(social_profiler):
+    """Demand moves inside one cap-quantization band keep the matrices
+    (and so the warm basis) valid."""
+    g, prof = social_profiler
+    planner = planner_for(g, prof)
+    assert planner.plan(100.0) is not None
+    cfg = planner.plan(104.0)     # < 25% move: same quantization band
+    assert cfg is not None
+    assert planner.stats.matrix_cache_hits >= 1
+    # the plan still clears the real demand at the new rate
+    for t, r in cfg.demand.items():
+        assert cfg.task_throughput(t) >= r - 1e-6

@@ -2,7 +2,7 @@
 hypothesis sweep over random segment mixes."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.placement import POD_SHAPE, Placer
 from repro.sharding.segments import SEGMENT_SHAPES, SegmentType, catalogue

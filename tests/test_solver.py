@@ -1,13 +1,15 @@
 """Solver correctness: simplex vs vertex enumeration; B&B vs brute force
-(hypothesis property tests — assignment requirement)."""
+(hypothesis property tests — assignment requirement).  Plus the
+bounded-variable revised-simplex specifics: implicit bounds vs reference,
+degenerate/cycling instances, and warm-start == cold-start optimality."""
 import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.solver.branch_bound import solve_milp
-from repro.core.solver.simplex import solve_lp
+from repro.core.solver.simplex import BoundedSimplex, solve_lp
 
 
 def brute_force_lp(c, A, b):
@@ -106,3 +108,171 @@ def test_bb_mixed_integer():
                      np.array([False, True]), max_nodes=50)
     assert res.status in ("optimal", "feasible")
     assert abs(res.objective - (-3.5)) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# bounded-variable revised simplex
+# ---------------------------------------------------------------------------
+def brute_force_bounded_lp(c, A, b, lo, hi):
+    """Optimal vertex of {Ax<=b, lo<=x<=hi} by enumeration (small dims)."""
+    m, n = A.shape
+    Afull = np.vstack([A, -np.eye(n), np.eye(n)])
+    bfull = np.concatenate([b, -lo, hi])
+    rows_all = [i for i in range(Afull.shape[0]) if np.isfinite(bfull[i])]
+    best = np.inf
+    for rows in itertools.combinations(rows_all, n):
+        Asub, bsub = Afull[list(rows)], bfull[list(rows)]
+        if abs(np.linalg.det(Asub)) < 1e-9:
+            continue
+        x = np.linalg.solve(Asub, bsub)
+        if (Afull[rows_all] @ x <= bfull[rows_all] + 1e-7).all():
+            best = min(best, float(c @ x))
+    return best
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 10_000))
+def test_bounded_lp_matches_vertex_enumeration(seed):
+    """lo/hi handled implicitly in the ratio test == bounds-as-rows."""
+    rng = np.random.default_rng(seed)
+    n, m = 4, 4
+    A = rng.normal(size=(m, n))
+    b = rng.uniform(0.5, 2.0, size=m)
+    c = rng.normal(size=n)
+    lo = rng.uniform(0.0, 0.3, n)
+    hi = lo + rng.uniform(0.2, 2.0, n)
+    res = solve_lp(c, A_ub=A, b_ub=b, lo=lo, ub=hi)
+    best = brute_force_bounded_lp(c, A, b, lo, hi)
+    if res.status == "optimal":
+        assert abs(res.objective - best) < 1e-5
+        assert (A @ res.x <= b + 1e-6).all()
+        assert (res.x >= lo - 1e-8).all() and (res.x <= hi + 1e-8).all()
+    else:
+        assert not np.isfinite(best)
+
+
+def test_beale_cycling_instance_terminates_optimal():
+    """Beale's classic cycling LP: Dantzig pricing cycles without an
+    anti-cycling rule; the Bland fallback must terminate at -1/20."""
+    c = np.array([-0.75, 150.0, -0.02, 6.0])
+    A = np.array([[0.25, -60.0, -1.0 / 25.0, 9.0],
+                  [0.5, -90.0, -1.0 / 50.0, 3.0],
+                  [0.0, 0.0, 1.0, 0.0]])
+    b = np.array([0.0, 0.0, 1.0])
+    res = solve_lp(c, A_ub=A, b_ub=b)
+    assert res.status == "optimal"
+    assert abs(res.objective - (-0.05)) < 1e-8
+
+
+def test_degenerate_redundant_rows():
+    """Many coincident constraints through the optimum (degenerate
+    vertices) must not stall or mis-converge."""
+    c = np.array([-1.0, -1.0])
+    A = np.vstack([[1.0, 1.0]] * 6 + [[1.0, 0.0], [0.0, 1.0]])
+    b = np.array([1.0] * 6 + [1.0, 1.0])
+    res = solve_lp(c, A_ub=A, b_ub=b)
+    assert res.status == "optimal"
+    assert abs(res.objective - (-1.0)) < 1e-8
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10_000))
+def test_warm_start_equals_cold_start_after_bound_tightening(seed):
+    """A child LP re-solved from the parent basis (dual simplex) must be
+    exactly as optimal as a from-scratch solve — the B&B invariant."""
+    rng = np.random.default_rng(seed)
+    n, m = 6, 5
+    A = rng.uniform(-0.5, 1.0, size=(m, n))
+    b = rng.uniform(1.0, 4.0, size=m)
+    c = rng.normal(size=n)
+    hi = rng.uniform(1.0, 5.0, n)
+    lo = np.zeros(n)
+    solver = BoundedSimplex(c, A, b)
+    parent = solver.solve(lo, hi)
+    if parent.status != "optimal":
+        return
+    j = int(rng.integers(0, n))
+    if rng.random() < 0.5:
+        hi2, lo2 = hi.copy(), lo
+        hi2[j] = np.floor(parent.x[j])
+    else:
+        lo2, hi2 = lo.copy(), hi
+        lo2[j] = np.ceil(parent.x[j])
+    if lo2[j] > hi2[j]:
+        return
+    warm = solver.solve(lo2, hi2, warm=parent.basis)
+    cold = BoundedSimplex(c, A, b).solve(lo2, hi2)
+    assert warm.status == cold.status
+    if warm.status == "optimal":
+        assert abs(warm.objective - cold.objective) \
+            <= 1e-9 * (1.0 + abs(cold.objective))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000))
+def test_warm_start_equals_cold_start_after_rhs_change(seed):
+    """Re-planning at a new demand = same matrix, new rhs: the previous
+    basis stays dual feasible and the warm solve must match cold."""
+    rng = np.random.default_rng(seed)
+    n, m = 8, 6
+    A = rng.uniform(-0.2, 1.0, size=(m, n))
+    b = rng.uniform(1.0, 4.0, size=m)
+    c = rng.normal(size=n)
+    hi = rng.uniform(1.0, 5.0, n)
+    solver = BoundedSimplex(c, A, b)
+    r0 = solver.solve(np.zeros(n), hi)
+    if r0.status != "optimal":
+        return
+    b2 = b * rng.uniform(0.9, 1.1, m)
+    warm = solver.solve(np.zeros(n), hi, b=b2, warm=r0.basis)
+    cold = BoundedSimplex(c, A, b2).solve(np.zeros(n), hi)
+    assert warm.status == cold.status
+    if warm.status == "optimal":
+        assert abs(warm.objective - cold.objective) \
+            <= 1e-9 * (1.0 + abs(cold.objective))
+
+
+def test_warm_solve_counters():
+    c = np.array([-1.0, -2.0, 1.0])
+    A = np.array([[1.0, 1.0, 0.0], [0.0, 1.0, 1.0]])
+    b = np.array([2.0, 3.0])
+    s = BoundedSimplex(c, A, b)
+    r0 = s.solve(np.zeros(3), np.full(3, 4.0))
+    assert r0.status == "optimal" and not r0.warm_used
+    hi2 = np.array([4.0, 1.0, 4.0])
+    r1 = s.solve(np.zeros(3), hi2, warm=r0.basis)
+    assert r1.status == "optimal" and r1.warm_used
+    assert s.stats.warm_solves == 1 and s.stats.cold_solves == 1
+
+
+def test_milp_reports_true_best_bound_on_node_cap():
+    """When the search stops on the node cap, gap/best_bound must come from
+    the heap minimum — not from the last popped node."""
+    rng = np.random.default_rng(3)
+    n, m = 8, 6
+    A = rng.uniform(0.1, 1.0, size=(m, n))
+    b = rng.uniform(2.0, 4.0, size=m)
+    c = -rng.uniform(0.5, 1.5, size=n)
+    ub = np.full(n, 6.0)
+    res = solve_milp(c, A, b, None, None, ub, np.ones(n, bool),
+                     max_nodes=3, time_limit_s=30.0)
+    if res.x is not None:
+        # bound is a valid lower bound on the (unknown) optimum, hence also
+        # on the incumbent, and the gap is consistent with it
+        assert res.best_bound <= res.objective + 1e-9
+        assert res.gap == pytest.approx(
+            max(0.0, res.objective - res.best_bound)
+            / (abs(res.objective) + 1.0))
+
+
+def test_milp_warm_node_lps_counted():
+    rng = np.random.default_rng(11)
+    n, m = 6, 5
+    A = rng.uniform(0, 1, size=(m, n))
+    b = rng.uniform(1, 4, size=m)
+    c = rng.normal(size=n)
+    res = solve_milp(c, A, b, None, None, np.full(n, 4.0),
+                     np.ones(n, bool), max_nodes=500)
+    assert res.lp_cold >= 1          # the root
+    if res.nodes > 1:
+        assert res.lp_warm >= 1      # children reuse the parent basis
