@@ -1,0 +1,69 @@
+"""ClusterRuntime event-loop throughput: how many simulated requests and
+discrete events per wall-second the shared serving loop sustains with the
+SimBackend data plane — the control-plane hot path every scenario pays.
+
+Persisted as ``BENCH_runtime.json`` by ``benchmarks.run`` so later PRs
+can regress event-loop perf.
+"""
+import time
+from typing import Dict
+
+from repro.core.apps import get_app
+from repro.core.milp import Planner
+from repro.core.profiler import Profiler
+from repro.runtime import (ClusterRuntime, FailureEvent, Scenario,
+                           SimBackend)
+
+S_AVAIL = 128
+PLAN_RPS = 60.0
+DURATION_S = 30.0
+
+
+def _scenarios():
+    return {
+        "poisson": Scenario.poisson(PLAN_RPS, duration_s=DURATION_S,
+                                    warmup_s=3.0),
+        "diurnal": Scenario.diurnal(PLAN_RPS, duration_s=DURATION_S,
+                                    warmup_s=3.0, seed=1),
+        "burst": Scenario.burst(PLAN_RPS * 0.4, PLAN_RPS * 1.2,
+                                duration_s=DURATION_S, warmup_s=3.0),
+        "diurnal+failure": Scenario.diurnal(
+            PLAN_RPS, duration_s=DURATION_S, warmup_s=3.0,
+            seed=1).with_failures(
+                FailureEvent(at_s=DURATION_S / 2, count=1)),
+    }
+
+
+def run(csv=print) -> Dict[str, Dict[str, float]]:
+    out: Dict[str, Dict[str, float]] = {}
+    for app in ("social_media", "traffic_analysis"):
+        g = get_app(app)
+        prof = Profiler(g)
+        cfg = Planner(g, prof, s_avail=S_AVAIL, max_tuples_per_task=32,
+                      bb_nodes=4, bb_time_s=1.0).plan(PLAN_RPS)
+        if cfg is None:
+            csv(f"runtime,{app},ERROR=infeasible")
+            continue
+        for name, scn in _scenarios().items():
+            rt = ClusterRuntime(g, cfg, SimBackend(), seed=0)
+            t0 = time.perf_counter()
+            m = rt.run(scn)
+            wall = time.perf_counter() - t0
+            served = m.completions + m.dropped
+            out[f"{app}/{name}"] = {
+                "wall_s": wall,
+                "completions": float(m.completions),
+                "violation_rate": m.violation_rate,
+                "requests_per_wall_s": served / max(wall, 1e-9),
+                "sim_speedup": DURATION_S / max(wall, 1e-9),
+            }
+            csv(f"runtime,{app},{name},wall_s={wall:.3f},"
+                f"completions={m.completions},"
+                f"req_per_wall_s={served / max(wall, 1e-9):.0f},"
+                f"sim_speedup={DURATION_S / max(wall, 1e-9):.0f}x,"
+                f"viol%={100 * m.violation_rate:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -15,7 +15,7 @@ import time
 
 from benchmarks import (bench_capacity, bench_configs, bench_empirical,
                         bench_kernels, bench_milp, bench_perf,
-                        bench_roofline)
+                        bench_roofline, bench_runtime)
 
 ALL = {
     "kernels": bench_kernels,        # kernel vs oracle + TPU roofline
@@ -25,6 +25,7 @@ ALL = {
     "empirical": bench_empirical,    # paper Fig. 4
     "roofline": bench_roofline,      # assignment §Roofline
     "perf": bench_perf,              # assignment §Perf iterations
+    "runtime": bench_runtime,        # ClusterRuntime event-loop throughput
 }
 
 
@@ -35,6 +36,7 @@ def main() -> None:
     names = [args.only] if args.only else list(ALL)
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     t_all = time.time()
+    errors = []
     for name in names:
         print(f"### benchmark: {name}")
         t0 = time.time()
@@ -47,8 +49,11 @@ def main() -> None:
                 print(f"{name},json,{path}")
         except Exception as e:  # noqa: BLE001 — keep the harness going
             print(f"{name},ERROR,{type(e).__name__}: {e}")
+            errors.append(name)
         print(f"### {name} done in {time.time()-t0:.1f}s\n")
     print(f"### all benchmarks done in {time.time()-t_all:.1f}s")
+    if errors:   # every bench ran, but CI must still see the failure
+        raise SystemExit(f"benchmarks failed: {', '.join(errors)}")
 
 
 if __name__ == "__main__":

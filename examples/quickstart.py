@@ -1,9 +1,12 @@
 """Quickstart: register a compound inference system, solve the MILP,
-place the segments on the pod, and simulate one demand bin.
+place the segments on the pod, and serve one demand bin on the cluster
+runtime.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core import Planner, Simulator, register
+from repro.core import Planner, register
+from repro.runtime import (ClusterRuntime, FailureEvent, Scenario,
+                           SimBackend)
 from repro.core.apps import get_app
 from repro.core.placement import Placer
 
@@ -36,9 +39,19 @@ placements = placer.pack(segs)
 print(f"\nplaced {len(placements)} instances; "
       f"pod utilization {placer.utilization():.0%}")
 
-# 4. run one simulated demand bin (paper §3.3 batching + early drop)
-metrics = Simulator(graph, cfg, seed=0).run(60.0, duration_s=12.0,
-                                            warmup_s=3.0)
-print(f"\nsimulated 12s @ 60rps: {metrics.completions} completions, "
+# 4. serve one demand bin on the cluster runtime (paper §3.3 batching +
+#    early drop).  The Scenario is declarative — swap Scenario.diurnal /
+#    .burst, add FailureEvents, or swap SimBackend for EngineBackend to
+#    drive real engines through the identical control loop.
+scenario = Scenario.poisson(60.0, duration_s=12.0, warmup_s=3.0)
+metrics = ClusterRuntime(graph, cfg, SimBackend(), seed=0).run(scenario)
+print(f"\nserved 12s @ 60rps: {metrics.completions} completions, "
       f"violations {metrics.violation_rate:.2%}, p99 {metrics.p99_ms:.0f}ms, "
       f"realized accuracy {metrics.realized_a_obj(graph):.4f}")
+
+# 5. same workload, now with a mid-run instance failure injected — the
+#    shared task-level queues absorb the lost capacity
+faulty = scenario.with_failures(FailureEvent(at_s=6.0, count=1))
+m2 = ClusterRuntime(graph, cfg, SimBackend(), seed=0).run(faulty)
+print(f"with mid-run failure: {m2.completions} completions, "
+      f"violations {m2.violation_rate:.2%}")

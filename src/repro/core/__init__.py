@@ -5,15 +5,39 @@ variants, (S) fine-grained TPU segment allocation, and (T) task-graph-
 informed latency/accuracy/resource budgeting — paper Eq. 1-14 plus the
 runtime (batching, early-drop, controller loop, placement).
 """
+import importlib
+
 from repro.core.taskgraph import Task, TaskGraph, Variant
 from repro.core.milp import FeatureSet, PlanConfig, Planner
 from repro.core.profiler import Profiler
 from repro.core.registry import Registration, RegistrationError, register
+from repro.core.frontend import Frontend
 from repro.core.controller import Controller
 from repro.core.simulator import SimMetrics, Simulator
+
+# runtime re-exports resolve lazily (PEP 562): repro.runtime and
+# repro.core import each other's leaves, so eager package-level imports
+# here would break whichever package is imported first
+_RUNTIME_EXPORTS = {
+    "ClusterRuntime": "repro.runtime.cluster",
+    "ExecutionBackend": "repro.runtime.backend",
+    "SimBackend": "repro.runtime.backend",
+    "EngineBackend": "repro.runtime.backend",
+    "Scenario": "repro.runtime.scenario",
+}
+
+
+def __getattr__(name):
+    mod = _RUNTIME_EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    return getattr(importlib.import_module(mod), name)
+
 
 __all__ = [
     "Task", "TaskGraph", "Variant", "FeatureSet", "PlanConfig", "Planner",
     "Profiler", "Registration", "RegistrationError", "register",
-    "Controller", "SimMetrics", "Simulator",
+    "Controller", "Frontend", "SimMetrics", "Simulator",
+    "ClusterRuntime", "ExecutionBackend", "SimBackend", "EngineBackend",
+    "Scenario",
 ]

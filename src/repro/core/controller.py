@@ -4,21 +4,34 @@ reconfiguration, driven per demand-timestamp bin.
 Also the fault-tolerance / elasticity brain: on capacity change (failed
 chips or added pods) it re-solves with the adjusted ``S_avail`` and the
 placer routes around dead hosts.
+
+The controller is pure control plane: each bin it builds (or receives) a
+:class:`~repro.runtime.scenario.Scenario` and executes it on a
+:class:`~repro.runtime.cluster.ClusterRuntime` over a pluggable
+:class:`~repro.runtime.backend.ExecutionBackend` — it never touches a
+concrete datapath directly.  The re-plan trigger is the
+:class:`~repro.core.frontend.Frontend`'s single implementation.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.frontend import Frontend
 from repro.core.milp import FeatureSet, PlanConfig, Planner
 from repro.core.placement import Placement, Placer
 from repro.core.profiler import Profiler
-from repro.core.simulator import SimMetrics, Simulator
 from repro.core.taskgraph import TaskGraph
 from repro.core.trace import DemandTrace, predict_demand
+
+if TYPE_CHECKING:   # pragma: no cover — repro.runtime loads lazily to
+    # keep the core/runtime leaf imports cycle-free
+    from repro.runtime.backend import ExecutionBackend
+    from repro.runtime.cluster import ClusterRuntime
+    from repro.runtime.scenario import Scenario
 
 
 @dataclass
@@ -49,10 +62,19 @@ class Controller:
     staleness_ms: float = 20.0
     num_pods: int = 2
     planner_kwargs: dict = field(default_factory=dict)
+    # control-plane intake + pluggable data plane
+    frontend: Optional[Frontend] = None
+    backend_factory: Optional[Callable[[], "ExecutionBackend"]] = None
 
     def __post_init__(self):
         self.planner = Planner(self.graph, self.profiler, self.s_avail,
                                features=self.features, **self.planner_kwargs)
+        if self.frontend is None:
+            self.frontend = Frontend(self.graph)
+        if self.backend_factory is None:
+            from repro.runtime.backend import SimBackend
+            self.backend_factory = SimBackend
+        self._backend: Optional["ExecutionBackend"] = None
         self._config: Optional[PlanConfig] = None
         self._planned_for: float = -1.0
         self._history: List[float] = []
@@ -60,10 +82,31 @@ class Controller:
         self.milp_times_ms: List[float] = []
 
     # ------------------------------------------------------------------
+    @property
+    def backend(self) -> "ExecutionBackend":
+        """The data plane, built once — an EngineBackend keeps its jit'd
+        engines across bins instead of recompiling every step."""
+        if self._backend is None:
+            self._backend = self.backend_factory()
+        return self._backend
+
+    def make_runtime(self, *, seed: int = 0,
+                     time_base_s: float = 0.0) -> "ClusterRuntime":
+        """Deploy the current config on a fresh runtime (frontend-intaked)."""
+        from repro.runtime.cluster import ClusterRuntime
+        if self._config is None:
+            raise RuntimeError("no plan deployed — call step() first")
+        return ClusterRuntime(self.graph, self._config, self.backend,
+                              seed=seed, staleness_ms=self.staleness_ms,
+                              frontend=self.frontend,
+                              time_base_s=time_base_s)
+
+    # ------------------------------------------------------------------
     def step(self, bin_idx: int, demand_actual: float, *,
              sim_seconds: float = 12.0, seed: int = 0,
-             dead_chips: int = 0) -> BinReport:
-        """One demand-timestamp bin: predict → (re)plan → simulate."""
+             dead_chips: int = 0,
+             scenario: Optional[Scenario] = None) -> BinReport:
+        """One demand-timestamp bin: predict → (re)plan → execute."""
         predicted = predict_demand(self._history + [demand_actual],
                                    self.slack) if self._history else \
             demand_actual * (1 + self.slack)
@@ -73,9 +116,15 @@ class Controller:
         milp_ms = 0.0
         warm_replan = False
         milp_nodes = 0
+        # the frontend owns the ONE drift/violation re-plan trigger; the
+        # controller feeds it the predicted demand and last bin's outcome
         need = (self._config is None
-                or abs(predicted - self._planned_for)
-                > self.replan_threshold * max(self._planned_for, 1e-9))
+                or self.frontend.should_replan(
+                    self._planned_for,
+                    threshold=self.replan_threshold,
+                    violation_trigger=self.violation_trigger,
+                    demand_rps=predicted))
+        self.frontend.reset_bin()   # the runtime records this bin's outcome
         s_now = self.s_avail - dead_chips
         if need:
             t0 = time.monotonic()
@@ -85,10 +134,6 @@ class Controller:
             nodes0 = self.planner.stats.nodes
             self.planner.s_avail = s_now
             cfg = self.planner.plan(predicted, self._fbar or None)
-            milp_ms = (time.monotonic() - t0) * 1e3
-            warm_replan = self.planner.stats.warm_basis_hits > warm0
-            milp_nodes = self.planner.stats.nodes - nodes0
-            self.milp_times_ms.append(milp_ms)
             if cfg is not None:
                 self._config = cfg
                 self._planned_for = predicted
@@ -96,21 +141,34 @@ class Controller:
             elif self._config is None:
                 # fall back to the highest plannable demand (paper §5:
                 # "uses the configuration that can serve the highest demand")
-                cfg = self._plan_max(s_now)
+                cfg = self._plan_max(s_now, charge=False)
                 if cfg is None:
                     raise RuntimeError("no feasible config at any demand")
                 self._config = cfg
                 self._planned_for = predicted
                 replanned = True
+            # one charge per bin, fallback search included
+            milp_ms = (time.monotonic() - t0) * 1e3
+            warm_replan = self.planner.stats.warm_basis_hits > warm0
+            milp_nodes = self.planner.stats.nodes - nodes0
+            self.milp_times_ms.append(milp_ms)
 
-        sim = Simulator(self.graph, self._config, seed=seed,
-                        staleness_ms=self.staleness_ms)
-        metrics = sim.run(demand_actual, duration_s=sim_seconds,
-                          warmup_s=min(3.0, sim_seconds / 4))
+        if scenario is None:
+            from repro.runtime.scenario import Scenario
+            scenario = Scenario.poisson(
+                demand_actual, duration_s=sim_seconds,
+                warmup_s=min(3.0, sim_seconds / 4))
+        runtime = self.make_runtime(
+            seed=seed, time_base_s=bin_idx * self.frontend.bin_seconds)
+        metrics = runtime.run(scenario)
+        # two demand views coexist on purpose: _history holds the ground-
+        # truth bin demand the predictor consumes (the paper's demand
+        # timestamps); the frontend's bins hold DATAPATH-observed demand —
+        # extrapolated to a full-bin rate here since the runtime only
+        # sampled scenario.duration_s of the bin
+        self.frontend.extrapolate_bin(bin_idx, scenario.duration_s)
         # runtime profile refinement (paper §3.1): EWMA of realized latency
         acc_drop = (1.0 - metrics.realized_a_obj(self.graph)) * 100.0
-        if metrics.violation_rate > self.violation_trigger:
-            self._planned_for = -1.0  # force a re-plan next bin
         return BinReport(
             bin_idx=bin_idx,
             demand_actual=demand_actual,
@@ -127,15 +185,39 @@ class Controller:
         )
 
     # ------------------------------------------------------------------
-    def _plan_max(self, s_now: int) -> Optional[PlanConfig]:
-        lo, hi = 1.0, 1.0
-        best = None
-        while hi < 1e6:
+    def _search_max_demand(self, hi_cap: float = 1e6
+                           ) -> Tuple[Optional[PlanConfig], float]:
+        """Geometric doubling to bracket the largest feasible demand, then
+        bisection DOWN into the bracket — also reaches sub-1 rps demands
+        when even plan(1.0) is infeasible.  Returns (config, demand)."""
+        lo, hi = 0.0, 1.0
+        best: Optional[PlanConfig] = None
+        while hi <= hi_cap:
             cfg = self.planner.plan(hi)
             if cfg is None:
                 break
             best, lo = cfg, hi
             hi *= 2
+        for _ in range(6):
+            mid = (lo + hi) / 2
+            cfg = self.planner.plan(mid)
+            if cfg is not None:
+                best, lo = cfg, mid
+            else:
+                hi = mid
+        return best, lo
+
+    def _plan_max(self, s_now: int, *, charge: bool = True
+                  ) -> Optional[PlanConfig]:
+        """Max-demand fallback (paper §5: 'uses the configuration that can
+        serve the highest demand').  Charges its solve time to
+        ``milp_times_ms`` unless the caller (``step``) already times the
+        whole planning pass."""
+        t0 = time.monotonic()
+        self.planner.s_avail = s_now
+        best, _ = self._search_max_demand()
+        if charge:
+            self.milp_times_ms.append((time.monotonic() - t0) * 1e3)
         return best
 
     # ------------------------------------------------------------------
@@ -150,15 +232,5 @@ class Controller:
 
     def max_serviceable_demand(self, hi_cap: float = 1e6) -> float:
         """Binary-search the largest plannable demand (Fig. 3 metric)."""
-        best, R = 0.0, 1.0
-        while R <= hi_cap and self.planner.plan(R) is not None:
-            best = R
-            R *= 2
-        lo, hi = best, R
-        for _ in range(6):
-            mid = (lo + hi) / 2
-            if self.planner.plan(mid) is not None:
-                lo = mid
-            else:
-                hi = mid
-        return lo
+        _, demand = self._search_max_demand(hi_cap)
+        return demand

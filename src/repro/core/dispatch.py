@@ -1,17 +1,17 @@
-"""Per-instance batching and early dropping (paper §3.3).
+"""Batching and early dropping primitives (paper §3.3).
 
-Each model instance owns a queue.  A batch launches when it is full OR the
-oldest request has waited the task's batch-formation timeout L̂(t) (and the
-instance is idle).  Before executing, the instance early-drops requests
-that (a) cannot meet their deadline even if the *fastest* variants of all
-remaining tasks serve them instantly, or (b) have gone stale in the queue.
+Queues are task-level and live in :class:`repro.runtime.cluster.
+ClusterRuntime`; this module holds the shared dispatch rules: the launch
+condition (a batch launches when full OR the oldest request has waited the
+task's batch-formation timeout L̂(t)), the re-poll time, and the early-drop
+rule — drop requests that (a) cannot meet their deadline even if the
+*fastest* variants of all remaining tasks serve them instantly, or (b)
+have gone stale in the queue.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
-
-from repro.core.milp import TupleVar
+from dataclasses import dataclass
+from typing import Optional, Tuple
 
 
 @dataclass
@@ -24,41 +24,18 @@ class QueuedRequest:
     path_done: Tuple[str, ...] = ()
 
 
-@dataclass
-class InstanceState:
-    """Runtime state of one deployed model instance."""
-    tup: TupleVar
-    idx: int
-    busy_until: float = 0.0
-    queue: List[QueuedRequest] = field(default_factory=list)
-    served: int = 0
-    dropped: int = 0
+def batch_ready(queue_len: int, batch_size: int, head_wait_ms: float,
+                timeout_ms: float) -> bool:
+    """Launch condition: full batch, or head-of-line waited >= L̂(t)."""
+    return queue_len >= batch_size or head_wait_ms >= timeout_ms - 1e-9
 
-    @property
-    def batch_size(self) -> int:
-        return self.tup.batch
 
-    @property
-    def service_ms(self) -> float:
-        return self.tup.latency_ms
-
-    def ready_batch(self, now: float, timeout_ms: float) -> bool:
-        """Launch condition: full batch, or oldest waited >= timeout."""
-        if not self.queue or self.busy_until > now:
-            return False
-        if len(self.queue) >= self.batch_size:
-            return True
-        oldest_wait = (now - self.queue[0].enqueue_t) * 1e3
-        return oldest_wait >= timeout_ms
-
-    def next_event_time(self, now: float, timeout_ms: float
-                        ) -> Optional[float]:
-        """When should the simulator re-examine this instance?"""
-        if not self.queue:
-            return None
-        t_timeout = self.queue[0].enqueue_t + timeout_ms / 1e3
-        return max(self.busy_until, min(now, t_timeout)
-                   if len(self.queue) >= self.batch_size else t_timeout)
+def next_poll_time(head_enqueue_t: float, timeout_ms: float,
+                   min_busy_until: float) -> float:
+    """When the dispatcher must re-examine a non-empty task queue: the
+    head's batch-formation timeout, or the first server to free up —
+    whichever is LATER (before that, nothing can change the decision)."""
+    return max(head_enqueue_t + timeout_ms / 1e3, min_busy_until)
 
 
 def early_drop(req: QueuedRequest, now: float,

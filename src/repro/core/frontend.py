@@ -1,10 +1,12 @@
 """Frontend (paper §3.1): request intake, deadline stamping, demand
 tracking, and controller triggering.
 
-In the simulated cluster the Simulator plays the datapath role; the
-Frontend is the control-plane face: it bins arrivals into demand
-timestamps, exposes the observed-demand history the predictor consumes,
-and raises the re-plan trigger when demand shifts or violations spike.
+The Frontend is the :class:`repro.runtime.cluster.ClusterRuntime`'s
+intake and the control plane's single source of truth: it stamps request
+ids + deadlines, bins arrivals into demand timestamps, accumulates the
+per-bin violation count the runtime reports back, and owns the ONE
+re-plan trigger (:meth:`should_replan`) the controller consumes — there
+is deliberately no second drift/violation check anywhere else.
 """
 from __future__ import annotations
 
@@ -44,17 +46,41 @@ class Frontend:
                 + self.comm_hop_ms * self.graph.depth)
 
     def submit(self, now_s: float) -> RequestMeta:
-        """Stamp metadata (request id + deadline) and count demand."""
+        """Stamp metadata (request id + deadline) and count demand.
+
+        Feeds the demand bins only; the violation-trigger window counts
+        datapath outcomes reported via ``record_bin_outcome`` (requests
+        and violations together), keeping its rate on the same
+        fan-weighted leaf-level basis as ``SimMetrics.violation_rate``."""
         b = int(now_s // self.bin_seconds)
         while b >= len(self._bin_counts):
             self._bin_counts.append(0)
         self._bin_counts[b] += 1
-        self.requests_this_bin += 1
         return RequestMeta(next(self._ids), now_s,
                            now_s + self.effective_slo_ms / 1e3)
 
-    def record_violation(self):
-        self.violations_this_bin += 1
+    def record_bin_outcome(self, requests: int, violations: int):
+        """Fold a bin's datapath outcome into the trigger state — always
+        requests and violations TOGETHER, so the violation rate keeps a
+        denominator (the runtime reports each run's SimMetrics totals)."""
+        self.requests_this_bin += requests
+        self.violations_this_bin += violations
+
+    def reset_bin(self):
+        """Start a fresh violation-tracking window (one controller bin)."""
+        self.violations_this_bin = 0
+        self.requests_this_bin = 0
+
+    def extrapolate_bin(self, bin_idx: int, observed_window_s: float):
+        """The runtime observed only ``observed_window_s`` of bin
+        ``bin_idx`` (e.g. a short simulated slice of a 300 s bin) —
+        extrapolate the count so ``observed_demand`` reports a true rate."""
+        if not (0 <= bin_idx < len(self._bin_counts)):
+            return
+        if 0.0 < observed_window_s < self.bin_seconds:
+            scale = self.bin_seconds / observed_window_s
+            self._bin_counts[bin_idx] = int(
+                round(self._bin_counts[bin_idx] * scale))
 
     # ------------------------------------------------------------------
     def observed_demand(self) -> List[float]:
@@ -63,11 +89,18 @@ class Frontend:
 
     def should_replan(self, planned_for_rps: float,
                       threshold: float = 0.10,
-                      violation_trigger: float = 0.05) -> bool:
-        hist = self.observed_demand()
-        if not hist:
-            return False
-        drift = abs(hist[-1] - planned_for_rps) > threshold * max(
+                      violation_trigger: float = 0.05,
+                      demand_rps: Optional[float] = None) -> bool:
+        """THE re-plan trigger (single implementation, paper §3.1): demand
+        drifted from the planned-for rate, or the last window's violation
+        rate spiked.  ``demand_rps`` defaults to the last observed bin; the
+        controller passes its *predicted* demand instead."""
+        if demand_rps is None:
+            hist = self.observed_demand()
+            if not hist:
+                return False
+            demand_rps = hist[-1]
+        drift = abs(demand_rps - planned_for_rps) > threshold * max(
             planned_for_rps, 1e-9)
         vrate = (self.violations_this_bin
                  / max(self.requests_this_bin, 1))

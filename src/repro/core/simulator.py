@@ -1,265 +1,60 @@
-"""Discrete-event cluster simulator — the empirical evaluation engine.
+"""Compatibility shim: the legacy discrete-event ``Simulator`` API.
 
-Executes a deployed :class:`PlanConfig` against a Poisson request stream.
-Queues are TASK-LEVEL (paper §3.3: a request is dropped as stale only "if
-all the model instances filled up their batches and the request is not
-picked up by any model instance of the task" — i.e. instances pull from a
-shared queue).  Each k-stream segment contributes k concurrent servers
-whose profiled latency already carries the k-contention stretch.
-
-Batch formation: a server launches when the queue can fill its batch, or
-the queue head has waited the task's L̂(t) timeout (paper §3.3).  Early
-dropping per ``repro.core.dispatch``.  Service times draw a lognormal
-around the profiled p95 — the tail models stragglers, absorbed by
-early-drop + shared-queue work stealing.
-
-Fault tolerance: ``fail_instances`` kills servers mid-run; the shared
-queue means surviving servers absorb the work, and the controller re-plans
-with the shrunken capacity (exercised in tests/benchmarks).
+The event loop, task-level batching, early drop and failure handling now
+live in :class:`repro.runtime.cluster.ClusterRuntime`; the profiled-
+latency lognormal service model is :class:`repro.runtime.backend.
+SimBackend`.  ``Simulator(graph, cfg).run(rps)`` is preserved verbatim —
+it wraps ``ClusterRuntime(SimBackend())`` with a Poisson
+:class:`~repro.runtime.scenario.Scenario` and is draw-for-draw identical
+to the pre-refactor implementation (seed-deterministic traces).
 """
 from __future__ import annotations
 
-import heapq
-import itertools
-import math
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence
 
-import numpy as np
+from repro.runtime.metrics import Server, SimMetrics
 
-from repro.core.dispatch import QueuedRequest, early_drop
-from repro.core.milp import PlanConfig, TupleVar
-from repro.core.taskgraph import TaskGraph
-from repro.sharding.segments import by_name
-
-
-@dataclass
-class SimMetrics:
-    completions: int = 0           # leaf sub-requests serviced
-    missed: int = 0                # serviced but past the deadline
-    dropped: int = 0               # early-drops, fan-out weighted (§4.5)
-    latencies_ms: List[float] = field(default_factory=list)
-    traffic: Dict[Tuple[str, str], int] = field(default_factory=dict)
-
-    @property
-    def violations(self) -> int:
-        return self.missed + self.dropped
-
-    @property
-    def total_requests(self) -> int:
-        return self.completions + self.dropped
-
-    @property
-    def violation_rate(self) -> float:
-        return self.violations / max(self.total_requests, 1)
-
-    @property
-    def p99_ms(self) -> float:
-        if not self.latencies_ms:
-            return 0.0
-        return float(np.percentile(self.latencies_ms, 99))
-
-    def realized_task_accuracy(self, graph: TaskGraph, task: str) -> float:
-        num = den = 0.0
-        for (t, v), n in self.traffic.items():
-            if t == task:
-                num += n * graph.tasks[t].variant(v).accuracy
-                den += n
-        return num / den if den else 1.0
-
-    def realized_a_obj(self, graph: TaskGraph) -> float:
-        from repro.core import accuracy as acc
-        weighted = 0.0
-        for p in graph.paths:
-            a = 1.0
-            for t in p:
-                a *= self.realized_task_accuracy(graph, t)
-            weighted += graph.path_fractions[p] * a
-        return weighted / acc.a_max(graph)
-
-
-@dataclass
-class Server:
-    """One execution stream of one deployed instance."""
-    tup: TupleVar
-    idx: int
-    busy_until: float = 0.0
-    served: int = 0
+__all__ = ["Server", "SimMetrics", "Simulator"]
 
 
 class Simulator:
-    def __init__(self, graph: TaskGraph, config: PlanConfig, *,
-                 seed: int = 0, staleness_ms: float = 20.0,
-                 jitter_sigma: float = 0.08):
+    """Thin wrapper over ``ClusterRuntime(SimBackend())``."""
+
+    def __init__(self, graph, config, *, seed: int = 0,
+                 staleness_ms: float = 20.0, jitter_sigma: float = 0.08):
+        # deferred: repro.core and repro.runtime import each other's
+        # leaves, so the heavy modules load lazily on first use
+        from repro.runtime.backend import SimBackend
+        from repro.runtime.cluster import ClusterRuntime
+
         self.graph = graph
         self.config = config
-        self.rng = np.random.default_rng(seed)
-        self.staleness_ms = staleness_ms
-        self.jitter = jitter_sigma
-        self.servers: List[Server] = []
-        for tup, m in config.instances():
-            streams = by_name(tup.segment).streams
-            for _ in range(m * streams):
-                self.servers.append(Server(tup, len(self.servers)))
-        self.by_task: Dict[str, List[Server]] = {}
-        for s in self.servers:
-            self.by_task.setdefault(s.tup.task, []).append(s)
-        self.queues: Dict[str, List[QueuedRequest]] = {
-            t: [] for t in graph.tasks}
-        self._fastest = self._fastest_remaining()
-        self._timeout = {t: config.lhat(t) for t in graph.tasks}
+        self._rt = ClusterRuntime(
+            graph, config, SimBackend(jitter_sigma=jitter_sigma),
+            seed=seed, staleness_ms=staleness_ms)
 
-    # ------------------------------------------------------------------
-    def _fastest_remaining(self) -> Dict[str, float]:
-        fastest_inst = {t: min(s.tup.latency_ms for s in ss)
-                        for t, ss in self.by_task.items() if ss}
-        out: Dict[str, float] = {}
+    # -- legacy surface, delegated to the runtime -----------------------
+    @property
+    def servers(self) -> List[Server]:
+        return self._rt.servers
 
-        def rec(t: str) -> float:
-            if t in out:
-                return out[t]
-            tail = max((rec(n) for n in self.graph.successors(t)),
-                       default=0.0)
-            out[t] = fastest_inst.get(t, 0.0) + tail
-            return out[t]
+    @property
+    def by_task(self) -> Dict[str, List[Server]]:
+        return self._rt.by_task
 
-        for t in self.graph.tasks:
-            rec(t)
-        return out
+    @property
+    def queues(self):
+        return self._rt.queues
 
-    # ------------------------------------------------------------------
+    @property
+    def rng(self):
+        return self._rt.rng
+
     def fail_instances(self, indices: Sequence[int]):
-        """Kill servers (node failure). Shared queues mean survivors
-        simply absorb the load; raises if a task loses all capacity."""
-        dead = set(indices)
-        self.servers = [s for s in self.servers if s.idx not in dead]
-        self.by_task = {}
-        for s in self.servers:
-            self.by_task.setdefault(s.tup.task, []).append(s)
-        for t in self.graph.tasks:
-            if not self.by_task.get(t):
-                raise RuntimeError(
-                    f"task {t!r} lost all instances — controller must "
-                    "re-plan with reduced S_avail")
-        self._fastest = self._fastest_remaining()
+        self._rt.fail_instances(indices)
 
-    # ------------------------------------------------------------------
     def run(self, demand_rps: float, duration_s: float = 20.0,
             warmup_s: float = 2.0) -> SimMetrics:
-        g = self.graph
-        m = SimMetrics()
-        ids = itertools.count()
-        seq = itertools.count()
-        events: List[Tuple[float, int, str, object]] = []
-
-        def push(t, kind, payload):
-            heapq.heappush(events, (t, next(seq), kind, payload))
-
-        t = 0.0
-        while t < duration_s:
-            t += self.rng.exponential(1.0 / max(demand_rps, 1e-9))
-            rid = next(ids)
-            deadline = t + g.slo_latency_ms / 1e3
-            push(t, "arrive", QueuedRequest(rid, rid, g.entry, t, deadline))
-
-        def root_time(req: QueuedRequest) -> float:
-            return req.deadline - g.slo_latency_ms / 1e3
-
-        def drop_scan(task: str, now: float):
-            """Early-drop pass over the task queue (paper §3.3)."""
-            q = self.queues[task]
-            keep = []
-            fastest = self._fastest[task]
-            timeout = self._timeout[task]
-            for req in q:
-                reason = early_drop(req, now, fastest, self.staleness_ms,
-                                    timeout)
-                if reason is None:
-                    keep.append(req)
-                elif root_time(req) >= warmup_s:
-                    fan = max(1, round(sum(
-                        g.factor(task, g.tasks[task].most_accurate.name, t2)
-                        for t2 in g.successors(task)) or 1))
-                    m.dropped += fan
-            self.queues[task] = keep
-
-        def try_dispatch(task: str, now: float):
-            drop_scan(task, now)
-            q = self.queues[task]
-            while q:
-                idle = [s for s in self.by_task[task]
-                        if s.busy_until <= now + 1e-12]
-                if not idle:
-                    break
-                head_wait = (now - q[0].enqueue_t) * 1e3
-                timed_out = head_wait >= self._timeout[task] - 1e-9
-                # pick the idle server that can drain the most
-                srv = max(idle, key=lambda s: s.tup.batch)
-                if len(q) < srv.tup.batch and not timed_out:
-                    break
-                if len(q) < srv.tup.batch:
-                    # partial launch on the smallest-batch idle server
-                    srv = min(idle, key=lambda s: s.tup.batch)
-                batch = q[: srv.tup.batch]
-                del q[: srv.tup.batch]
-                service = srv.tup.latency_ms / 1e3
-                service *= float(self.rng.lognormal(-0.15, self.jitter))
-                srv.busy_until = now + service
-                push(srv.busy_until, "done", (srv.idx, batch))
-            if q:
-                head = q[0]
-                t_poll = max(
-                    head.enqueue_t + self._timeout[task] / 1e3,
-                    min(s.busy_until for s in self.by_task[task]))
-                if t_poll > now + 1e-9:
-                    push(t_poll, "poll", task)
-
-        srv_by_idx = {s.idx: s for s in self.servers}
-
-        while events:
-            now, _, kind, payload = heapq.heappop(events)
-            if now > duration_s + 10.0:
-                break
-            if kind == "arrive":
-                req = payload
-                req.enqueue_t = now
-                self.queues[req.task].append(req)
-                try_dispatch(req.task, now)
-            elif kind == "poll":
-                try_dispatch(payload, now)
-            elif kind == "done":
-                idx, batch = payload
-                srv = srv_by_idx.get(idx)
-                if srv is None or srv not in self.servers:
-                    continue
-                task, variant = srv.tup.task, srv.tup.variant
-                for req in batch:
-                    srv.served += 1
-                    key = (task, variant)
-                    m.traffic[key] = m.traffic.get(key, 0) + 1
-                    succs = self.graph.successors(task)
-                    if not succs:
-                        if root_time(req) >= warmup_s:
-                            lat = (now - root_time(req)) * 1e3
-                            m.latencies_ms.append(lat)
-                            m.completions += 1
-                            if now > req.deadline + 1e-9:
-                                m.missed += 1
-                        continue
-                    for t2 in succs:
-                        fan = self._sample_fanout(
-                            self.graph.factor(task, variant, t2))
-                        for _ in range(fan):
-                            child = QueuedRequest(
-                                next(ids), req.root_id, t2, now,
-                                req.deadline, req.path_done + (task,))
-                            self.queues[t2].append(child)
-                    for t2 in succs:
-                        try_dispatch(t2, now)
-                try_dispatch(task, now)
-        return m
-
-    # ------------------------------------------------------------------
-    def _sample_fanout(self, f: float) -> int:
-        base = int(math.floor(f))
-        return base + (1 if self.rng.random() < (f - base) else 0)
+        from repro.runtime.scenario import Scenario
+        return self._rt.run(Scenario.poisson(demand_rps, duration_s,
+                                             warmup_s))

@@ -51,6 +51,17 @@ def diurnal_trace(seed: int = 0, bins: int = BINS_PER_DAY,
     return DemandTrace(rps / rps.max())
 
 
+def burst_trace(base_rps: float, burst_rps: float, bins: int = 40,
+                period_bins: int = 10, duty: float = 0.3) -> DemandTrace:
+    """On/off bursty demand: ``base_rps`` with periodic square bursts to
+    ``burst_rps`` lasting ``duty`` of each period (deterministic)."""
+    rps = np.full(bins, float(base_rps))
+    on = max(1, int(round(period_bins * duty)))
+    for start in range(0, bins, max(period_bins, 1)):
+        rps[start:start + on] = float(burst_rps)
+    return DemandTrace(rps)
+
+
 def predict_demand(history: List[float], slack: float = 0.05) -> float:
     """Paper §4.2: mean of the last 5 observed bins + slack."""
     if not history:

@@ -1,0 +1,19 @@
+"""Pluggable cluster runtime: one control plane, many data planes.
+
+``ClusterRuntime`` executes a declarative ``Scenario`` (arrival process +
+failure / capacity schedules + SLO scale) against any ``ExecutionBackend``
+— the profiled-latency ``SimBackend`` or the real-engine ``EngineBackend``
+— producing ``SimMetrics`` with an identical schema either way.
+"""
+from repro.runtime.backend import EngineBackend, ExecutionBackend, SimBackend
+from repro.runtime.metrics import Server, SimMetrics
+from repro.runtime.cluster import ClusterRuntime
+from repro.runtime.scenario import (ArrivalProcess, CapacityEvent,
+                                    FailureEvent, PoissonArrivals, Scenario,
+                                    TraceArrivals)
+
+__all__ = [
+    "ArrivalProcess", "CapacityEvent", "ClusterRuntime", "EngineBackend",
+    "ExecutionBackend", "FailureEvent", "PoissonArrivals", "Scenario",
+    "Server", "SimBackend", "SimMetrics", "TraceArrivals",
+]

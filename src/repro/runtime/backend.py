@@ -1,0 +1,134 @@
+"""Execution backends: HOW a dispatched batch gets served.
+
+The :class:`~repro.runtime.cluster.ClusterRuntime` owns queues, batching,
+early-drop and the event clock; a backend only answers "how long does THIS
+server take to serve THIS batch?" plus optional capacity-change hooks.
+Two implementations:
+
+* :class:`SimBackend` — the profiled-latency lognormal model extracted
+  from the legacy ``Simulator`` (p95 latency × lognormal jitter; the tail
+  models stragglers).
+* :class:`EngineBackend` — drives real :class:`repro.serving.engine.Engine`
+  instances (reduced archs, CPU) and uses the measured wall-clock
+  generation time as the service time, so the same control loop and
+  scenarios exercise the actual jit'd datapath.
+"""
+from __future__ import annotations
+
+import time
+import zlib
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Protocol, Sequence, TYPE_CHECKING, runtime_checkable
+
+import numpy as np
+
+if TYPE_CHECKING:   # pragma: no cover — typing only, avoids jax at import
+    from repro.core.milp import PlanConfig
+    from repro.core.taskgraph import TaskGraph
+    from repro.runtime.cluster import Server
+
+
+@runtime_checkable
+class ExecutionBackend(Protocol):
+    """Data-plane contract consumed by :class:`ClusterRuntime`."""
+
+    def bind(self, graph: "TaskGraph", config: "PlanConfig") -> None:
+        """Called once before serving starts (build engines, caches...)."""
+        ...
+
+    def service_s(self, server: "Server", batch: Sequence[Any],
+                  now_s: float, rng: np.random.Generator) -> float:
+        """Service time (seconds) for ``server`` executing ``batch``."""
+        ...
+
+    def on_capacity_change(self, servers: List["Server"]) -> None:
+        """Called after failure-injection / elasticity changed the fleet."""
+        ...
+
+
+# ---------------------------------------------------------------------------
+@dataclass
+class SimBackend:
+    """Profiled-latency model: lognormal jitter around the profiled p95.
+
+    Draw-for-draw identical to the legacy ``Simulator`` service-time model
+    so the compatibility shim stays seed-deterministic."""
+    jitter_sigma: float = 0.08
+    mu: float = -0.15
+
+    def bind(self, graph, config):
+        pass
+
+    def service_s(self, server, batch, now_s, rng):
+        return (server.tup.latency_ms / 1e3
+                * float(rng.lognormal(self.mu, self.jitter_sigma)))
+
+    def on_capacity_change(self, servers):
+        pass
+
+
+# ---------------------------------------------------------------------------
+@dataclass
+class EngineBackend:
+    """Serve batches on real ``serving.Engine`` instances (CPU, reduced
+    archs — the small-config parity path).
+
+    One engine is built per distinct model arch on first use; its jit
+    compile is excluded from service times by a warmup generate.  Service
+    time is the measured wall-clock of the batched greedy decode, scaled
+    by ``time_scale`` (sim-seconds per wall-second).
+    """
+    max_batch: int = 4
+    max_seq: int = 64
+    prompt_len: int = 8
+    max_new: int = 4
+    time_scale: float = 1.0
+    _engines: Dict[str, Any] = field(default_factory=dict, repr=False)
+    _graph: Any = field(default=None, repr=False)
+
+    def bind(self, graph, config):
+        self._graph = graph
+
+    # ------------------------------------------------------------------
+    def _engine_for(self, arch_name: str):
+        eng = self._engines.get(arch_name)
+        if eng is None:
+            import jax
+            import jax.numpy as jnp
+            from repro.configs import ARCHS
+            from repro.models import Model
+            from repro.serving.engine import Engine, EngineConfig
+            from repro.sharding.policy import ShardingPolicy
+
+            arch = ARCHS[arch_name].reduced()
+            model = Model(arch, ShardingPolicy(mesh=None),
+                          param_dtype=jnp.float32)
+            # stable per-arch seed (str hash is salted per process)
+            seed = zlib.crc32(arch_name.encode()) & 0x7FFFFFFF
+            params = model.init(jax.random.key(seed))
+            eng = Engine(model, params,
+                         EngineConfig(max_batch=self.max_batch,
+                                      max_seq=self.max_seq))
+            # warmup: trigger the prefill/decode jit outside timed serving
+            warm = np.zeros((1, self.prompt_len), np.int32)
+            eng.generate(warm, max_new=2)
+            self._engines[arch_name] = eng
+        return eng
+
+    def service_s(self, server, batch, now_s, rng):
+        task = self._graph.tasks[server.tup.task]
+        arch_name = task.variant(server.tup.variant).arch
+        eng = self._engine_for(arch_name)
+        vocab = eng.model.arch.vocab_size
+        b = min(max(len(batch), 1), eng.cfg.max_batch)
+        prompts = np.asarray(
+            rng.integers(0, vocab, size=(b, self.prompt_len)), np.int32)
+        t0 = time.monotonic()
+        eng.generate(prompts, max_new=self.max_new)
+        wall = time.monotonic() - t0
+        # a fixed-shape engine may need several launches for a big batch
+        launches = -(-len(batch) // eng.cfg.max_batch)
+        return wall * launches * self.time_scale
+
+    def on_capacity_change(self, servers):
+        pass

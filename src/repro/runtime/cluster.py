@@ -1,0 +1,287 @@
+"""ClusterRuntime: the single shared serving event loop.
+
+Control plane (queues, task-level batching per paper §3.3, early drop,
+failure/elasticity bookkeeping, metrics) lives here; the data plane is a
+pluggable :class:`~repro.runtime.backend.ExecutionBackend` that only turns
+(server, batch) into a service time.  Workloads arrive as declarative
+:class:`~repro.runtime.scenario.Scenario` objects.  The legacy
+``repro.core.simulator.Simulator`` is a thin shim over
+``ClusterRuntime(SimBackend())`` and stays seed-deterministic.
+
+When a :class:`~repro.core.frontend.Frontend` is attached it is the
+runtime's intake: it stamps request ids and deadlines (effective SLO incl.
+per-hop allowance), accumulates demand bins, and receives violation
+reports — the single source of truth the controller's re-plan trigger
+reads.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.dispatch import (QueuedRequest, batch_ready, early_drop,
+                                 next_poll_time)
+from repro.core.milp import PlanConfig, TupleVar
+from repro.core.taskgraph import TaskGraph
+from repro.runtime.backend import ExecutionBackend, SimBackend
+from repro.runtime.metrics import Server, SimMetrics
+from repro.runtime.scenario import CapacityEvent, FailureEvent, Scenario
+from repro.sharding.segments import by_name
+
+__all__ = ["ClusterRuntime", "Server", "SimMetrics"]
+
+
+class ClusterRuntime:
+    def __init__(self, graph: TaskGraph, config: PlanConfig,
+                 backend: Optional[ExecutionBackend] = None, *,
+                 seed: int = 0, staleness_ms: float = 20.0,
+                 frontend=None, time_base_s: float = 0.0):
+        self.graph = graph
+        self.config = config
+        self.backend = backend if backend is not None else SimBackend()
+        self.rng = np.random.default_rng(seed)
+        self.staleness_ms = staleness_ms
+        self.frontend = frontend
+        self.time_base_s = time_base_s
+        self.servers: List[Server] = []
+        for tup, m in config.instances():
+            streams = by_name(tup.segment).streams
+            for _ in range(m * streams):
+                self.servers.append(Server(tup, len(self.servers)))
+        self._next_idx = len(self.servers)
+        self.by_task: Dict[str, List[Server]] = {}
+        for s in self.servers:
+            self.by_task.setdefault(s.tup.task, []).append(s)
+        self.queues: Dict[str, List[QueuedRequest]] = {
+            t: [] for t in graph.tasks}
+        # root_id -> root arrival time; ids and the map are instance-level
+        # so a re-run on a runtime with leftover queued requests still
+        # resolves their roots (and never reuses their ids)
+        self._ids = itertools.count()
+        self._root_t: Dict[int, float] = {}
+        self._fastest = self._fastest_remaining()
+        self._timeout = {t: config.lhat(t) for t in graph.tasks}
+        self.backend.bind(graph, config)
+
+    # ------------------------------------------------------------------
+    def _fastest_remaining(self) -> Dict[str, float]:
+        fastest_inst = {t: min(s.tup.latency_ms for s in ss)
+                        for t, ss in self.by_task.items() if ss}
+        out: Dict[str, float] = {}
+
+        def rec(t: str) -> float:
+            if t in out:
+                return out[t]
+            tail = max((rec(n) for n in self.graph.successors(t)),
+                       default=0.0)
+            out[t] = fastest_inst.get(t, 0.0) + tail
+            return out[t]
+
+        for t in self.graph.tasks:
+            rec(t)
+        return out
+
+    # ------------------------------------------------------------------
+    # capacity hooks (failure injection + elasticity)
+    # ------------------------------------------------------------------
+    def fail_instances(self, indices: Sequence[int]):
+        """Kill servers (node failure). Shared queues mean survivors
+        simply absorb the load; raises if a task loses all capacity."""
+        dead = set(indices)
+        self.servers = [s for s in self.servers if s.idx not in dead]
+        self.by_task = {}
+        for s in self.servers:
+            self.by_task.setdefault(s.tup.task, []).append(s)
+        for t in self.graph.tasks:
+            if not self.by_task.get(t):
+                raise RuntimeError(
+                    f"task {t!r} lost all instances — controller must "
+                    "re-plan with reduced S_avail")
+        self._fastest = self._fastest_remaining()
+        self.backend.on_capacity_change(self.servers)
+
+    def add_instances(self, task: str, count: int, now: float = 0.0):
+        """Elasticity: clone ``count`` extra streams of ``task``'s first
+        deployed tuple (a pod joined / capacity was restored)."""
+        pool = self.by_task.get(task)
+        if not pool:
+            raise RuntimeError(f"task {task!r} has no live instance to clone")
+        for _ in range(count):
+            s = Server(pool[0].tup, self._next_idx, busy_until=now)
+            self._next_idx += 1
+            self.servers.append(s)
+            self.by_task[task].append(s)
+        self._fastest = self._fastest_remaining()
+        self.backend.on_capacity_change(self.servers)
+
+    def _apply_failure(self, ev: FailureEvent):
+        if ev.indices is not None:
+            self.fail_instances(ev.indices)
+            return
+        task = ev.task or max(self.by_task, key=lambda t: len(self.by_task[t]))
+        victims = [s.idx for s in self.by_task.get(task, [])[:ev.count]]
+        if victims:
+            self.fail_instances(victims)
+
+    def _apply_capacity(self, ev: CapacityEvent, now: float):
+        if ev.delta >= 0:
+            self.add_instances(ev.task, ev.delta, now)
+        else:
+            victims = [s.idx for s in self.by_task.get(ev.task, [])[:-ev.delta]]
+            if victims:
+                self.fail_instances(victims)
+
+    # ------------------------------------------------------------------
+    def run(self, scenario: Scenario) -> SimMetrics:
+        g = self.graph
+        m = SimMetrics()
+        ids = self._ids
+        seq = itertools.count()
+        events: List[Tuple[float, int, str, object]] = []
+        duration_s, warmup_s = scenario.duration_s, scenario.warmup_s
+        slo_s = g.slo_latency_ms / 1e3 * scenario.slo_scale
+        # drain horizon: in-flight work may finish past duration_s; +10 s
+        # is the legacy allowance, widened when scaled SLOs exceed it
+        drain_s = duration_s + max(10.0, 2.0 * slo_s)
+        root_t = self._root_t
+
+        def push(t, kind, payload):
+            heapq.heappush(events, (t, next(seq), kind, payload))
+
+        for t in scenario.arrivals.times(self.rng, duration_s):
+            if t > drain_s:
+                # past the drain horizon the loop never processes it — an
+                # idle arrival process can overshoot by ~1e9 s, which
+                # would otherwise blow up the frontend's demand bins
+                break
+            if self.frontend is not None:
+                meta = self.frontend.submit(self.time_base_s + t)
+                rid = meta.req_id
+                deadline = t + (meta.deadline_s
+                                - (self.time_base_s + t)) * scenario.slo_scale
+            else:
+                rid = next(ids)
+                deadline = t + slo_s
+            root_t[rid] = t
+            push(t, "arrive", QueuedRequest(rid, rid, g.entry, t, deadline))
+        for ev in scenario.failures:
+            push(ev.at_s, "fail", ev)
+        for ev in scenario.capacity:
+            push(ev.at_s, "capacity", ev)
+        for task, q in self.queues.items():
+            if q:                   # leftover work from a prior run
+                push(0.0, "poll", task)
+
+        def drop_scan(task: str, now: float):
+            """Early-drop pass over the task queue (paper §3.3)."""
+            q = self.queues[task]
+            keep = []
+            fastest = self._fastest[task]
+            timeout = self._timeout[task]
+            for req in q:
+                reason = early_drop(req, now, fastest, self.staleness_ms,
+                                    timeout)
+                if reason is None:
+                    keep.append(req)
+                elif root_t[req.root_id] >= warmup_s:
+                    fan = max(1, round(sum(
+                        g.factor(task, g.tasks[task].most_accurate.name, t2)
+                        for t2 in g.successors(task)) or 1))
+                    m.dropped += fan
+            self.queues[task] = keep
+
+        def try_dispatch(task: str, now: float):
+            drop_scan(task, now)
+            q = self.queues[task]
+            while q:
+                idle = [s for s in self.by_task[task]
+                        if s.busy_until <= now + 1e-12]
+                if not idle:
+                    break
+                head_wait = (now - q[0].enqueue_t) * 1e3
+                # pick the idle server that can drain the most
+                srv = max(idle, key=lambda s: s.tup.batch)
+                if not batch_ready(len(q), srv.tup.batch, head_wait,
+                                   self._timeout[task]):
+                    break
+                if len(q) < srv.tup.batch:
+                    # partial launch on the smallest-batch idle server
+                    srv = min(idle, key=lambda s: s.tup.batch)
+                batch = q[: srv.tup.batch]
+                del q[: srv.tup.batch]
+                service = self.backend.service_s(srv, batch, now, self.rng)
+                srv.busy_until = now + service
+                push(srv.busy_until, "done", (srv.idx, batch))
+            if q:
+                t_poll = next_poll_time(
+                    q[0].enqueue_t, self._timeout[task],
+                    min(s.busy_until for s in self.by_task[task]))
+                if t_poll > now + 1e-9:
+                    push(t_poll, "poll", task)
+
+        srv_by_idx = {s.idx: s for s in self.servers}
+
+        while events:
+            now, _, kind, payload = heapq.heappop(events)
+            if now > drain_s:
+                break
+            if kind == "arrive":
+                req = payload
+                req.enqueue_t = now
+                self.queues[req.task].append(req)
+                try_dispatch(req.task, now)
+            elif kind == "poll":
+                try_dispatch(payload, now)
+            elif kind in ("fail", "capacity"):
+                if kind == "fail":
+                    self._apply_failure(payload)
+                else:
+                    self._apply_capacity(payload, now)
+                srv_by_idx = {s.idx: s for s in self.servers}
+                for t2 in self.graph.tasks:
+                    try_dispatch(t2, now)
+            elif kind == "done":
+                idx, batch = payload
+                srv = srv_by_idx.get(idx)
+                if srv is None:
+                    continue
+                task, variant = srv.tup.task, srv.tup.variant
+                for req in batch:
+                    srv.served += 1
+                    key = (task, variant)
+                    m.traffic[key] = m.traffic.get(key, 0) + 1
+                    succs = self.graph.successors(task)
+                    if not succs:
+                        if root_t[req.root_id] >= warmup_s:
+                            lat = (now - root_t[req.root_id]) * 1e3
+                            m.latencies_ms.append(lat)
+                            m.completions += 1
+                            if now > req.deadline + 1e-9:
+                                m.missed += 1
+                        continue
+                    for t2 in succs:
+                        fan = self._sample_fanout(
+                            self.graph.factor(task, variant, t2))
+                        for _ in range(fan):
+                            child = QueuedRequest(
+                                next(ids), req.root_id, t2, now,
+                                req.deadline, req.path_done + (task,))
+                            self.queues[t2].append(child)
+                    for t2 in succs:
+                        try_dispatch(t2, now)
+                try_dispatch(task, now)
+        if self.frontend is not None:
+            # report the exact datapath outcome (fan-weighted, leaf-level —
+            # identical accounting to SimMetrics.violation_rate) into the
+            # frontend's re-plan trigger window
+            self.frontend.record_bin_outcome(m.total_requests, m.violations)
+        return m
+
+    # ------------------------------------------------------------------
+    def _sample_fanout(self, f: float) -> int:
+        base = int(math.floor(f))
+        return base + (1 if self.rng.random() < (f - base) else 0)

@@ -1,0 +1,69 @@
+"""Leaf module: serving metrics + server state shared by every backend.
+
+Deliberately imports nothing from ``repro.core`` at module level so it can
+be loaded from either side of the runtime/core boundary without cycles.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Dict, List, Tuple
+
+import numpy as np
+
+if TYPE_CHECKING:   # pragma: no cover — typing only
+    from repro.core.milp import TupleVar
+    from repro.core.taskgraph import TaskGraph
+
+
+@dataclass
+class SimMetrics:
+    completions: int = 0           # leaf sub-requests serviced
+    missed: int = 0                # serviced but past the deadline
+    dropped: int = 0               # early-drops, fan-out weighted (§4.5)
+    latencies_ms: List[float] = field(default_factory=list)
+    traffic: Dict[Tuple[str, str], int] = field(default_factory=dict)
+
+    @property
+    def violations(self) -> int:
+        return self.missed + self.dropped
+
+    @property
+    def total_requests(self) -> int:
+        return self.completions + self.dropped
+
+    @property
+    def violation_rate(self) -> float:
+        return self.violations / max(self.total_requests, 1)
+
+    @property
+    def p99_ms(self) -> float:
+        if not self.latencies_ms:
+            return 0.0
+        return float(np.percentile(self.latencies_ms, 99))
+
+    def realized_task_accuracy(self, graph: "TaskGraph", task: str) -> float:
+        num = den = 0.0
+        for (t, v), n in self.traffic.items():
+            if t == task:
+                num += n * graph.tasks[t].variant(v).accuracy
+                den += n
+        return num / den if den else 1.0
+
+    def realized_a_obj(self, graph: "TaskGraph") -> float:
+        from repro.core import accuracy as acc
+        weighted = 0.0
+        for p in graph.paths:
+            a = 1.0
+            for t in p:
+                a *= self.realized_task_accuracy(graph, t)
+            weighted += graph.path_fractions[p] * a
+        return weighted / acc.a_max(graph)
+
+
+@dataclass
+class Server:
+    """One execution stream of one deployed instance."""
+    tup: "TupleVar"
+    idx: int
+    busy_until: float = 0.0
+    served: int = 0

@@ -1,0 +1,162 @@
+"""Scenario API: WHAT the cluster is asked to serve.
+
+A :class:`Scenario` bundles an arrival process (Poisson, trace replay,
+burst, diurnal), a failure-injection schedule, a capacity-change schedule
+and an SLO scale into one declarative object that the
+:class:`~repro.runtime.cluster.ClusterRuntime` executes against any
+:class:`~repro.runtime.backend.ExecutionBackend`.  The same scenario runs
+unmodified against the profiled-latency simulation backend and the real
+``serving.Engine`` backend — that parity is what makes multi-backend
+evaluation (and the paper's empirical claims) reproducible.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import List, Optional, Protocol, Sequence, Tuple, runtime_checkable
+
+import numpy as np
+
+from repro.core.trace import DemandTrace, burst_trace, diurnal_trace
+
+
+# ---------------------------------------------------------------------------
+# arrival processes
+# ---------------------------------------------------------------------------
+@runtime_checkable
+class ArrivalProcess(Protocol):
+    """Generates the root-request arrival times of one run."""
+
+    def times(self, rng: np.random.Generator,
+              duration_s: float) -> List[float]:
+        ...
+
+
+@dataclass(frozen=True)
+class PoissonArrivals:
+    """Homogeneous Poisson stream at ``rate_rps``.
+
+    Draw-for-draw identical to the legacy ``Simulator.run`` arrival loop so
+    the compatibility shim reproduces seed-exact traces."""
+    rate_rps: float
+
+    def times(self, rng, duration_s):
+        out, t = [], 0.0
+        while t < duration_s:
+            t += rng.exponential(1.0 / max(self.rate_rps, 1e-9))
+            out.append(t)
+        return out
+
+
+@dataclass(frozen=True)
+class TraceArrivals:
+    """Piecewise-Poisson replay of a :class:`DemandTrace`.
+
+    The trace's bins are stretched/compressed to span ``duration_s``; the
+    instantaneous rate at time ``t`` is the bin ``t`` falls in.  A draw
+    that overshoots its bin boundary restarts from the boundary at the
+    next bin's rate — exact for piecewise-constant rates (memorylessness),
+    so idle (zero-rate) bins don't swallow later bins' arrivals."""
+    trace: DemandTrace
+
+    def times(self, rng, duration_s):
+        rps = np.asarray(self.trace.rps, float)
+        n = len(rps)
+        bin_s = duration_s / n
+        out, t, b = [], 0.0, 0
+        while t < duration_s:
+            while b < n - 1 and t >= (b + 1) * bin_s:
+                b += 1             # catch up to the bin containing t
+            nxt = t + rng.exponential(1.0 / max(float(rps[b]), 1e-9))
+            bin_end = (b + 1) * bin_s
+            if b < n - 1 and nxt > bin_end:
+                # no arrival left in this bin — resample from the boundary
+                # (the explicit index advance guarantees progress even
+                # when float rounding puts bin_end back inside bin b)
+                t, b = bin_end, b + 1
+                continue
+            t = nxt
+            out.append(t)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class FailureEvent:
+    """Kill servers at ``at_s``: explicit ``indices``, or ``count`` servers
+    of ``task`` (``task=None`` → the task with the most servers)."""
+    at_s: float
+    indices: Optional[Tuple[int, ...]] = None
+    count: int = 1
+    task: Optional[str] = None
+
+
+@dataclass(frozen=True)
+class CapacityEvent:
+    """Elasticity: at ``at_s`` add (``delta > 0``) or retire (``delta < 0``)
+    ``|delta|`` execution streams of ``task``, cloning an existing tuple."""
+    at_s: float
+    task: str
+    delta: int
+
+
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Scenario:
+    """One declarative serving experiment."""
+    arrivals: ArrivalProcess
+    duration_s: float = 20.0
+    warmup_s: float = 2.0
+    failures: Tuple[FailureEvent, ...] = ()
+    capacity: Tuple[CapacityEvent, ...] = ()
+    slo_scale: float = 1.0            # deadline = arrival + SLO * slo_scale
+    name: str = "scenario"
+
+    # -- constructors ---------------------------------------------------
+    @classmethod
+    def poisson(cls, rate_rps: float, duration_s: float = 20.0,
+                warmup_s: float = 2.0, **kw) -> "Scenario":
+        return cls(PoissonArrivals(rate_rps), duration_s, warmup_s,
+                   name=f"poisson@{rate_rps:g}rps", **kw)
+
+    @classmethod
+    def replay(cls, trace: DemandTrace, duration_s: float = 20.0,
+               warmup_s: float = 2.0, **kw) -> "Scenario":
+        return cls(TraceArrivals(trace), duration_s, warmup_s,
+                   name="trace-replay", **kw)
+
+    @classmethod
+    def diurnal(cls, peak_rps: float, duration_s: float = 20.0,
+                warmup_s: float = 2.0, *, seed: int = 0, bins: int = 48,
+                **kw) -> "Scenario":
+        tr = diurnal_trace(seed=seed, bins=bins).scaled_to_max(peak_rps)
+        return cls(TraceArrivals(tr), duration_s, warmup_s,
+                   name=f"diurnal@{peak_rps:g}rps", **kw)
+
+    @classmethod
+    def burst(cls, base_rps: float, burst_rps: float,
+              duration_s: float = 20.0, warmup_s: float = 2.0, *,
+              bins: int = 40, period_bins: int = 10, duty: float = 0.3,
+              **kw) -> "Scenario":
+        tr = burst_trace(base_rps, burst_rps, bins=bins,
+                         period_bins=period_bins, duty=duty)
+        return cls(TraceArrivals(tr), duration_s, warmup_s,
+                   name=f"burst@{base_rps:g}/{burst_rps:g}rps", **kw)
+
+    # -- derived scenarios ----------------------------------------------
+    def with_failures(self, *events: FailureEvent) -> "Scenario":
+        return dataclasses.replace(
+            self, failures=self.failures + tuple(events))
+
+    def with_capacity(self, *events: CapacityEvent) -> "Scenario":
+        return dataclasses.replace(
+            self, capacity=self.capacity + tuple(events))
+
+    def slo_sweep(self, scales: Sequence[float]) -> List["Scenario"]:
+        """SLO sensitivity sweep: the same workload under tighter/looser
+        deadlines (paper §4.4-style sensitivity analysis)."""
+        return [dataclasses.replace(self, slo_scale=float(s),
+                                    name=f"{self.name}|slo x{s:g}")
+                for s in scales]

@@ -1,0 +1,280 @@
+"""ClusterRuntime + Scenario + ExecutionBackend: replay determinism,
+failure-schedule parity with ``fail_instances``, capacity elasticity, SLO
+sweeps, and SimBackend vs EngineBackend SimMetrics-schema parity."""
+import dataclasses
+import inspect
+
+import numpy as np
+import pytest
+
+from repro.core.milp import PlanConfig, Planner, TupleVar
+from repro.core.simulator import Simulator
+from repro.core.taskgraph import Task, TaskGraph, Variant
+from repro.runtime import (CapacityEvent, ClusterRuntime, EngineBackend,
+                           FailureEvent, PoissonArrivals, Scenario,
+                           SimBackend, SimMetrics, TraceArrivals)
+
+
+@pytest.fixture(scope="module")
+def planned(traffic_profiler):
+    g, prof = traffic_profiler
+    planner = Planner(g, prof, s_avail=128, max_tuples_per_task=32,
+                      bb_nodes=4, bb_time_s=1.0)
+    cfg = planner.plan(60.0)
+    assert cfg is not None
+    return g, cfg
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    """One-task graph + hand-built PlanConfig small enough for the real
+    Engine datapath on CPU."""
+    g = TaskGraph(
+        name="tiny",
+        tasks={"gen": Task("gen", (
+            Variant("gemma-2b", "gemma-2b", accuracy=0.8,
+                    seq_len=16, gen_len=4),))},
+        edges=[], slo_latency_ms=4000.0)
+    key = ("gen", "gemma-2b", "1x1s1", 4)
+    tup = TupleVar("gen", "gemma-2b", "1x1s1", 4, latency_ms=120.0,
+                   throughput=30.0, cost=1, accuracy=0.8)
+    cfg = PlanConfig(graph=g, counts={key: 2}, tuples={key: tup},
+                     demand={"gen": 4.0})
+    return g, cfg
+
+
+# ---------------------------------------------------------------------------
+# scenario replay determinism
+# ---------------------------------------------------------------------------
+def test_scenario_replay_deterministic_per_seed(planned):
+    g, cfg = planned
+    scn = Scenario.diurnal(50.0, duration_s=8.0, warmup_s=2.0, seed=1)
+    runs = [ClusterRuntime(g, cfg, SimBackend(), seed=11).run(scn)
+            for _ in range(2)]
+    assert runs[0].completions == runs[1].completions
+    assert runs[0].violations == runs[1].violations
+    assert runs[0].latencies_ms == runs[1].latencies_ms
+    assert runs[0].traffic == runs[1].traffic
+
+
+def test_trace_replay_follows_rate(planned):
+    g, cfg = planned
+    rng = np.random.default_rng(0)
+    lo = TraceArrivals(trace=_flat_trace(10.0)).times(rng, 10.0)
+    rng = np.random.default_rng(0)
+    hi = TraceArrivals(trace=_flat_trace(80.0)).times(rng, 10.0)
+    assert len(hi) > 4 * len(lo)
+
+
+def _flat_trace(rps):
+    from repro.core.trace import DemandTrace
+    return DemandTrace(np.full(8, rps))
+
+
+def test_trace_replay_survives_idle_bins():
+    """A zero-rate bin must not swallow later bins' arrivals (the draw
+    restarts at the bin boundary — exact for piecewise-constant rates)."""
+    from repro.core.trace import DemandTrace
+    tr = DemandTrace(np.array([20.0, 0.0, 50.0, 50.0]))
+    times = np.asarray(
+        TraceArrivals(tr).times(np.random.default_rng(0), 20.0))
+    assert ((times >= 5.0) & (times < 10.0)).sum() == 0      # idle bin
+    late = ((times >= 10.0) & (times < 20.0)).sum()          # 50 rps bins
+    assert 350 < late < 650
+
+
+def test_burst_scenario_arrivals_bimodal():
+    scn = Scenario.burst(5.0, 60.0, duration_s=10.0)
+    times = np.asarray(scn.arrivals.times(np.random.default_rng(3), 10.0))
+    # burst windows must pack far more arrivals than quiet windows
+    counts, _ = np.histogram(times, bins=np.arange(0.0, 10.5, 0.5))
+    assert counts.max() > 4 * max(np.median(counts), 1)
+
+
+# ---------------------------------------------------------------------------
+# failure injection + elasticity schedules
+# ---------------------------------------------------------------------------
+def test_failure_schedule_parity_with_fail_instances(planned):
+    """A FailureEvent before the first arrival must reproduce a pre-run
+    ``fail_instances`` call exactly (same rng draw sequence)."""
+    g, cfg = planned
+    probe = ClusterRuntime(g, cfg, SimBackend(), seed=5)
+    task = max(probe.by_task, key=lambda t: len(probe.by_task[t]))
+    if len(probe.by_task[task]) < 2:
+        pytest.skip("config deployed no redundant servers")
+    victim = probe.by_task[task][0].idx
+
+    manual = ClusterRuntime(g, cfg, SimBackend(), seed=5)
+    manual.fail_instances([victim])
+    m1 = manual.run(Scenario.poisson(30.0, duration_s=8.0, warmup_s=2.0))
+
+    scheduled = ClusterRuntime(g, cfg, SimBackend(), seed=5)
+    scn = Scenario.poisson(30.0, duration_s=8.0, warmup_s=2.0).with_failures(
+        FailureEvent(at_s=-1.0, indices=(victim,)))
+    m2 = scheduled.run(scn)
+    assert m1.completions == m2.completions
+    assert m1.violations == m2.violations
+    assert m1.latencies_ms == m2.latencies_ms
+
+
+def test_midrun_failure_absorbed(planned):
+    g, cfg = planned
+    rt = ClusterRuntime(g, cfg, SimBackend(), seed=6)
+    scn = Scenario.poisson(30.0, duration_s=8.0, warmup_s=2.0).with_failures(
+        FailureEvent(at_s=4.0, count=1))
+    before = len(rt.servers)
+    m = rt.run(scn)
+    assert len(rt.servers) == before - 1
+    assert m.completions > 0
+
+
+def test_total_task_loss_still_raises(planned):
+    g, cfg = planned
+    rt = ClusterRuntime(g, cfg, SimBackend(), seed=7)
+    task = next(iter(rt.by_task))
+    scn = Scenario.poisson(30.0, duration_s=6.0).with_failures(
+        FailureEvent(at_s=1.0,
+                     indices=tuple(s.idx for s in rt.by_task[task])))
+    with pytest.raises(RuntimeError, match="re-plan"):
+        rt.run(scn)
+
+
+def test_capacity_event_adds_streams(planned):
+    g, cfg = planned
+    rt = ClusterRuntime(g, cfg, SimBackend(), seed=8)
+    task = max(rt.by_task, key=lambda t: len(rt.by_task[t]))
+    before = len(rt.by_task[task])
+    scn = Scenario.poisson(30.0, duration_s=6.0, warmup_s=1.0).with_capacity(
+        CapacityEvent(at_s=2.0, task=task, delta=3))
+    m = rt.run(scn)
+    assert len(rt.by_task[task]) == before + 3
+    assert m.completions > 0
+
+
+# ---------------------------------------------------------------------------
+# SLO sweep
+# ---------------------------------------------------------------------------
+def test_slo_sweep_monotone_violations(planned):
+    g, cfg = planned
+    base = Scenario.poisson(90.0, duration_s=8.0, warmup_s=2.0)
+    rates = []
+    for scn in base.slo_sweep([0.25, 1.0, 4.0]):
+        m = ClusterRuntime(g, cfg, SimBackend(), seed=9).run(scn)
+        rates.append(m.violation_rate)
+    assert rates[0] >= rates[1] >= rates[2]
+
+
+# ---------------------------------------------------------------------------
+# backend parity (acceptance criterion): the SAME scenario — diurnal trace
+# + mid-run failure injection — runs unmodified on both backends and
+# yields the same SimMetrics schema
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def parity_scenario():
+    return Scenario.diurnal(5.0, duration_s=4.0, warmup_s=0.5,
+                            seed=2).with_failures(
+        FailureEvent(at_s=2.0, count=1, task="gen"))
+
+
+def test_sim_vs_engine_metrics_schema_parity(tiny, parity_scenario):
+    g, cfg = tiny
+    backends = {"sim": SimBackend(),
+                "engine": EngineBackend(max_new=2, prompt_len=6)}
+    results = {}
+    for name, be in backends.items():
+        m = ClusterRuntime(g, cfg, be, seed=3).run(parity_scenario)
+        results[name] = m
+        assert isinstance(m, SimMetrics)
+        assert m.completions > 0
+    f_sim = {f.name: type(getattr(results["sim"], f.name))
+             for f in dataclasses.fields(SimMetrics)}
+    f_eng = {f.name: type(getattr(results["engine"], f.name))
+             for f in dataclasses.fields(SimMetrics)}
+    assert f_sim == f_eng
+    for m in results.values():      # derived metrics work on both
+        assert 0.0 <= m.violation_rate <= 1.0
+        assert m.p99_ms >= 0.0
+        assert 0.0 < m.realized_a_obj(g) <= 1.0 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# control-plane decoupling
+# ---------------------------------------------------------------------------
+def test_controller_step_does_not_touch_simulator():
+    import repro.core.controller as controller_mod
+    src = inspect.getsource(controller_mod)
+    assert "Simulator" not in src
+    assert "simulator" not in src
+
+
+def test_controller_runs_on_custom_backend(social_profiler):
+    """Controller.step drives whatever backend the factory provides."""
+    from repro.core.controller import Controller
+
+    calls = []
+
+    class CountingBackend(SimBackend):
+        def service_s(self, server, batch, now_s, rng):
+            calls.append(len(batch))
+            return super().service_s(server, batch, now_s, rng)
+
+    g, prof = social_profiler
+    ctl = Controller(g, prof, s_avail=64,
+                     planner_kwargs=dict(max_tuples_per_task=32,
+                                         bb_nodes=4, bb_time_s=1.0),
+                     backend_factory=CountingBackend)
+    rep = ctl.step(0, 40.0, sim_seconds=4.0, seed=1)
+    assert calls, "custom backend never reached"
+    assert rep.completions > 0
+
+
+def test_controller_accepts_explicit_scenario(social_profiler):
+    from repro.core.controller import Controller
+    g, prof = social_profiler
+    ctl = Controller(g, prof, s_avail=64,
+                     planner_kwargs=dict(max_tuples_per_task=32,
+                                         bb_nodes=4, bb_time_s=1.0))
+    scn = Scenario.burst(20.0, 50.0, duration_s=5.0, warmup_s=1.0)
+    rep = ctl.step(0, 40.0, scenario=scn)
+    assert rep.completions > 0
+
+
+def test_simulator_shim_matches_runtime(planned):
+    """The legacy Simulator facade is exactly ClusterRuntime(SimBackend)
+    driven by a Poisson scenario."""
+    g, cfg = planned
+    m_shim = Simulator(g, cfg, seed=4).run(40.0, duration_s=6.0,
+                                           warmup_s=1.0)
+    m_rt = ClusterRuntime(g, cfg, SimBackend(), seed=4).run(
+        Scenario.poisson(40.0, duration_s=6.0, warmup_s=1.0))
+    assert m_shim.completions == m_rt.completions
+    assert m_shim.latencies_ms == m_rt.latencies_ms
+
+
+def test_runtime_rerun_tolerates_leftover_queue(planned):
+    """A second run() on the same runtime (e.g. after an aborted first
+    run left requests queued) must still resolve their root times."""
+    g, cfg = planned
+    rt = ClusterRuntime(g, cfg, SimBackend(), seed=10)
+    rt.run(Scenario.poisson(40.0, duration_s=4.0, warmup_s=1.0))
+    # simulate an aborted-run remnant: a run-1 request still queued
+    from repro.core.dispatch import QueuedRequest
+    rid = next(iter(rt._root_t))
+    task = next(iter(rt.queues))
+    rt.queues[task].append(QueuedRequest(rid, rid, task, 0.0, 1.0))
+    m = rt.run(Scenario.poisson(40.0, duration_s=4.0, warmup_s=1.0))
+    assert m.completions > 0
+
+
+def test_plan_max_bisects_and_records_time(social_profiler):
+    from repro.core.controller import Controller
+    g, prof = social_profiler
+    ctl = Controller(g, prof, s_avail=64,
+                     planner_kwargs=dict(max_tuples_per_task=32,
+                                         bb_nodes=4, bb_time_s=1.0))
+    n0 = len(ctl.milp_times_ms)
+    cfg = ctl._plan_max(64)
+    assert cfg is not None
+    assert len(ctl.milp_times_ms) == n0 + 1     # solve time charged
+    # the bisected demand must serve at least the doubling-phase demand
+    assert ctl.planner.plan(1.0) is not None
