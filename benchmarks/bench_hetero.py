@@ -1,0 +1,74 @@
+"""Heterogeneous-cluster planning + serving: a v5e torus pool plus a
+MIG-sliced A100 pool plans through the per-pool MILP and serves a
+capacity-pressure scenario through ClusterRuntime(SimBackend).
+
+Reports per-pool slice usage, plan solve time, and event-loop serving
+throughput; persisted as ``BENCH_hetero.json`` by ``benchmarks.run`` so
+later PRs can regress the heterogeneous path.
+"""
+import time
+from typing import Dict
+
+from repro.core.apps import get_app
+from repro.core.milp import Planner
+from repro.core.profiler import Profiler
+from repro.hwspec import tight_hetero_cluster
+from repro.runtime import ClusterRuntime, Scenario, SimBackend
+
+DURATION_S = 20.0
+PRESSURE_RPS = 300.0
+
+
+def run(csv=print) -> Dict[str, Dict[str, float]]:
+    out: Dict[str, Dict[str, float]] = {}
+    # the SAME cluster the acceptance tests pin (tests/test_hetero.py)
+    cluster = tight_hetero_cluster()
+    for app in ("social_media", "traffic_analysis"):
+        g = get_app(app)
+        t0 = time.perf_counter()
+        prof = Profiler(g, cluster=cluster)
+        profile_s = time.perf_counter() - t0
+        planner = Planner(g, prof, s_avail=cluster.total_units,
+                          max_tuples_per_task=48, bb_nodes=8, bb_time_s=2.0)
+        # find the highest pressure this small cluster can plan
+        rate = PRESSURE_RPS
+        t0 = time.perf_counter()
+        cfg = planner.plan(rate)
+        while cfg is None and rate > 1.0:
+            rate /= 2
+            cfg = planner.plan(rate)
+        plan_s = time.perf_counter() - t0
+        if cfg is None:
+            # raise so benchmarks.run marks the bench failed (CI must not
+            # stay green with the two-pool path broken)
+            raise RuntimeError(f"hetero plan infeasible for {app} at "
+                               f"every rate down to {rate:g} rps")
+        used = cfg.pool_slices()
+        rt = ClusterRuntime(g, cfg, SimBackend(), seed=0)
+        t0 = time.perf_counter()
+        m = rt.run(Scenario.poisson(rate * 0.8, duration_s=DURATION_S,
+                                    warmup_s=2.0))
+        wall = time.perf_counter() - t0
+        served = m.completions + m.dropped
+        out[app] = {
+            "planned_rps": rate,
+            "profile_s": profile_s,
+            "plan_s": plan_s,
+            "v5e_slices": float(used.get("v5e", 0)),
+            "mig_slices": float(used.get("mig", 0)),
+            "both_pools_used": float(used.get("v5e", 0) > 0
+                                     and used.get("mig", 0) > 0),
+            "completions": float(m.completions),
+            "violation_rate": m.violation_rate,
+            "requests_per_wall_s": served / max(wall, 1e-9),
+        }
+        csv(f"hetero,{app},rps={rate:g},v5e={used.get('v5e', 0)},"
+            f"mig={used.get('mig', 0)},plan_s={plan_s:.2f},"
+            f"completions={m.completions},"
+            f"viol%={100 * m.violation_rate:.2f},"
+            f"req_per_wall_s={served / max(wall, 1e-9):.0f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -14,8 +14,8 @@ import os
 import time
 
 from benchmarks import (bench_capacity, bench_configs, bench_empirical,
-                        bench_kernels, bench_milp, bench_perf,
-                        bench_roofline, bench_runtime)
+                        bench_hetero, bench_kernels, bench_milp,
+                        bench_perf, bench_roofline, bench_runtime)
 
 ALL = {
     "kernels": bench_kernels,        # kernel vs oracle + TPU roofline
@@ -26,6 +26,7 @@ ALL = {
     "roofline": bench_roofline,      # assignment §Roofline
     "perf": bench_perf,              # assignment §Perf iterations
     "runtime": bench_runtime,        # ClusterRuntime event-loop throughput
+    "hetero": bench_hetero,          # two-pool heterogeneous plan + serve
 }
 
 

@@ -1,68 +1,67 @@
 """End-to-end compound serving with REAL model execution (the paper's
 kind of system, scaled to this container): a depth-2 task chain —
-classify → caption — where each task runs a reduced LM through the real
-Engine + Batcher datapath on CPU, with deadlines and drops.
+classify → caption — planned by the MILP and served through the
+``Scenario`` / ``ClusterRuntime`` / ``EngineBackend`` stack, so the same
+control plane that drives the simulations drives real reduced LMs
+(jit'd ``serving.Engine`` instances on CPU) here.
 
     PYTHONPATH=src python examples/compound_serving.py
 """
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.core.milp import Planner
+from repro.core.profiler import Profiler
+from repro.core.registry import register
+from repro.core.taskgraph import Task, TaskGraph, Variant
+from repro.runtime import ClusterRuntime, EngineBackend, Scenario
 
-from repro.configs import ARCHS
-from repro.models import Model
-from repro.serving.batcher import Batcher, ServeRequest
-from repro.serving.engine import Engine, EngineConfig
-from repro.sharding.policy import ShardingPolicy
+# --- the compound app: classify feeds caption ------------------------------
+graph = TaskGraph(
+    name="classify_caption",
+    tasks={
+        "classify": Task("classify", (
+            Variant("granite-3-2b", "granite-3-2b", accuracy=0.823,
+                    seq_len=64, gen_len=4),
+            Variant("gemma-2b", "gemma-2b", accuracy=0.786,
+                    seq_len=64, gen_len=4),
+        )),
+        "caption": Task("caption", (
+            Variant("gemma-2b", "gemma-2b", accuracy=0.801,
+                    seq_len=64, gen_len=8),
+        )),
+    },
+    edges=[("classify", "caption")],
+    slo_latency_ms=2000.0,
+    slo_accuracy=0.90,
+)
+reg = register(graph)          # validates + profiles (closed-form roofline)
 
-rng = np.random.default_rng(0)
+# --- plan: the MILP picks variants, slices and batch sizes -----------------
+planner = Planner(graph, reg.profiler, s_avail=16,
+                  max_tuples_per_task=32, bb_nodes=4, bb_time_s=1.0)
+DEMAND_RPS = 4.0
+cfg = planner.plan(DEMAND_RPS)
+assert cfg is not None, "no feasible deployment at this demand"
+print(f"planned {cfg.slices} slices for {DEMAND_RPS:g} rps:")
+for tup, m in cfg.instances():
+    print(f"  {tup.task:9s} {tup.variant:14s} on {tup.segment:8s} "
+          f"batch={tup.batch:<3d} x{m}")
 
+# --- serve: real engines behind the shared cluster event loop --------------
+backend = EngineBackend(max_batch=4, max_seq=64, prompt_len=8, max_new=4)
+runtime = ClusterRuntime(graph, cfg, backend, seed=0)
+# CPU wall-clock stands in for accelerator service time, so give the
+# deadlines generous slack (the old hand-rolled loop used 30 s deadlines)
+scenario = Scenario.poisson(DEMAND_RPS, duration_s=6.0, warmup_s=1.0,
+                            slo_scale=10.0)
 
-def build_engine(arch_name: str, max_batch: int) -> Engine:
-    arch = ARCHS[arch_name].reduced()
-    model = Model(arch, ShardingPolicy(mesh=None), param_dtype=jnp.float32)
-    params = model.init(jax.random.key(hash(arch_name) % 2**31))
-    return Engine(model, params, EngineConfig(max_batch=max_batch,
-                                              max_seq=96))
-
-
-# --- two tasks, each a model instance with its own batcher ---------------
-classify = Batcher(build_engine("granite-3-2b", max_batch=4),
-                   timeout_ms=30.0, max_new=4)
-caption = Batcher(build_engine("gemma-2b", max_batch=4),
-                  timeout_ms=30.0, max_new=8)
-
-# --- drive a small request stream through the chain -----------------------
-N = 12
 t0 = time.monotonic()
-for i in range(N):
-    vocab = classify.engine.model.arch.vocab_size
-    prompt = rng.integers(0, vocab, size=12).astype(np.int32)
-    classify.submit(ServeRequest(i, prompt, deadline_s=t0 + 30.0,
-                                 submitted_s=time.monotonic()))
-
-completed = 0
-chained = {}
-while completed < N:
-    for r in classify.pump():       # stage 1 done → feed stage 2
-        vocab2 = caption.engine.model.arch.vocab_size
-        follow = np.concatenate([r.result.astype(np.int32) % vocab2,
-                                 rng.integers(0, vocab2, 8,
-                                              dtype=np.int32)])
-        caption.submit(ServeRequest(r.req_id, follow,
-                                    deadline_s=r.deadline_s,
-                                    submitted_s=time.monotonic()))
-        chained[r.req_id] = r.result
-    for r in caption.pump():
-        completed += 1
-        print(f"req {r.req_id:2d}: classify={chained[r.req_id][:4]} "
-              f"caption={r.result[:8]}")
-    time.sleep(0.005)
-
+m = runtime.run(scenario)
 dt = time.monotonic() - t0
-print(f"\nserved {completed} compound requests in {dt:.1f}s "
-      f"({completed/dt:.1f} rps end-to-end), "
-      f"batches: classify={classify.served}, caption={caption.served}, "
-      f"drops={classify.dropped + caption.dropped}")
+
+print(f"\nserved {m.completions} compound requests in {dt:.1f}s wall "
+      f"({m.completions / max(dt, 1e-9):.1f} rps end-to-end), "
+      f"p99={m.p99_ms:.0f}ms, drops={m.dropped}, "
+      f"violation_rate={m.violation_rate * 100:.1f}%")
+for (task, variant), n in sorted(m.traffic.items()):
+    print(f"  {task:9s} {variant:14s} served {n}")

@@ -14,6 +14,7 @@ concrete datapath directly.  The re-plan trigger is the
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass, field
 from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Tuple
@@ -22,10 +23,11 @@ import numpy as np
 
 from repro.core.frontend import Frontend
 from repro.core.milp import FeatureSet, PlanConfig, Planner
-from repro.core.placement import Placement, Placer
+from repro.core.placement import Placement, Placer, make_placer
 from repro.core.profiler import Profiler
 from repro.core.taskgraph import TaskGraph
 from repro.core.trace import DemandTrace, predict_demand
+from repro.hwspec import ClusterSpec
 
 if TYPE_CHECKING:   # pragma: no cover — repro.runtime loads lazily to
     # keep the core/runtime leaf imports cycle-free
@@ -62,13 +64,35 @@ class Controller:
     staleness_ms: float = 20.0
     num_pods: int = 2
     planner_kwargs: dict = field(default_factory=dict)
+    # hardware model (defaults to the profiler's ClusterSpec)
+    cluster: Optional[ClusterSpec] = None
     # control-plane intake + pluggable data plane
     frontend: Optional[Frontend] = None
     backend_factory: Optional[Callable[[], "ExecutionBackend"]] = None
 
     def __post_init__(self):
+        if self.cluster is None:
+            self.cluster = getattr(self.profiler, "cluster", None)
+            # legacy knob: num_pods sizes a single-pool rectangle
+            # deployment's packing capacity (pre-hwspec, place() was
+            # Placer(num_pods)).  Applied only to a profiler-synthesized
+            # (implicit) single-pool torus-style cluster — any cluster a
+            # user passed, here or to the Profiler, is authoritative
+            from repro.hwspec import MigScheme
+            if (self.cluster is not None
+                    and getattr(self.profiler, "cluster_implicit", False)
+                    and len(self.cluster.pools) == 1
+                    and not isinstance(self.cluster.pools[0].scheme,
+                                       MigScheme)):
+                pool = self.cluster.pools[0]
+                shape = getattr(pool.scheme, "pod_shape", (16, 16))
+                want = self.num_pods * shape[0] * shape[1]
+                if pool.count != want:
+                    self.cluster = ClusterSpec(pools=(
+                        dataclasses.replace(pool, count=want),))
         self.planner = Planner(self.graph, self.profiler, self.s_avail,
-                               features=self.features, **self.planner_kwargs)
+                               features=self.features, cluster=self.cluster,
+                               **self.planner_kwargs)
         if self.frontend is None:
             self.frontend = Frontend(self.graph)
         if self.backend_factory is None:
@@ -222,13 +246,36 @@ class Controller:
 
     # ------------------------------------------------------------------
     def place(self) -> Optional[List[Placement]]:
-        """Bin-pack the current config's segments onto pods."""
+        """Pack the current config's slices onto their pools' devices.
+
+        One packer per pool (rectangle packer for torus pools, MIG slice
+        packer for MIG pools); returns the concatenated placements, or
+        None if ANY pool refuses its mix.  Without a multi-pool cluster
+        this is the legacy single-pool rectangle pack."""
         if self._config is None:
             return None
-        segs: List[str] = []
+        by_pool: Dict[str, List[str]] = {}
         for tup, m in self._config.instances():
-            segs.extend([tup.segment] * m)
-        return Placer(self.num_pods).pack(segs)
+            by_pool.setdefault(tup.pool, []).extend([tup.segment] * m)
+        if self.cluster is None:
+            segs = [s for pool_segs in by_pool.values() for s in pool_segs]
+            return Placer(self.num_pods).pack(segs)
+        out: List[Placement] = []
+        base = 0
+        for pool in self.cluster.pools:
+            segs = by_pool.get(pool.name)
+            if not segs:
+                continue
+            pls = make_placer(pool).pack(segs)
+            if pls is None:
+                return None
+            # packers number from 0 within their pool; offset so ids stay
+            # unique across the concatenated multi-pool list
+            out.extend(dataclasses.replace(pl,
+                                           instance_id=pl.instance_id + base)
+                       for pl in pls)
+            base += len(segs)
+        return out
 
     def max_serviceable_demand(self, hi_cap: float = 1e6) -> float:
         """Binary-search the largest plannable demand (Fig. 3 metric)."""

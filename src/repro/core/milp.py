@@ -15,6 +15,13 @@ Feature flags (paper Table 1 / §4.3):
 * ``spatial``             (S) — off: whole-accelerator segments only.
 * ``task_graph_informed`` (T) — off: static per-task latency & resource
   budgets per the paper's Appendix B, solved as independent per-task MILPs.
+
+Hardware model (DESIGN.md §10): the planner is cluster-aware.  Each
+(t,v,s,b) tuple carries the pool its slice belongs to; Eq. 8 becomes one
+capacity row PER POOL (Σ cost·x ≤ pool budget) and the objective prices
+each slice by its pool's ``slice_price``.  A single-pool cluster (the
+default) collapses to the legacy scalar ``s_avail`` formulation
+bit-for-bit, so pre-hwspec plans are reproduced exactly.
 """
 from __future__ import annotations
 
@@ -30,7 +37,8 @@ from repro.core.profiler import ProfileEntry, Profiler
 from repro.core.solver.branch_bound import MILPResult, solve_milp
 from repro.core.solver.simplex import BasisState, BoundedSimplex
 from repro.core.taskgraph import TaskGraph
-from repro.sharding.segments import SegmentType, catalogue
+from repro.hwspec import (ClusterSpec, DEFAULT_POOL, ExplicitScheme,
+                          TorusScheme)
 
 Key = Tuple[str, str, str, int]
 
@@ -100,7 +108,12 @@ class FeatureSet:
 
 @dataclass(frozen=True)
 class TupleVar:
-    """One admissible (t, v, s, b) with its profiled constants."""
+    """One admissible (t, v, s, b) with its profiled constants.
+
+    ``pool`` names the ClusterSpec pool whose capacity row the tuple's
+    cost charges; ``streams`` is the slice's MPS-style multiplicity (the
+    runtime spawns that many execution streams per instance without
+    needing the partition catalogue)."""
     task: str
     variant: str
     segment: str
@@ -109,6 +122,8 @@ class TupleVar:
     throughput: float
     cost: int
     accuracy: float
+    pool: str = DEFAULT_POOL
+    streams: int = 1
 
     @property
     def key(self) -> Key:
@@ -122,12 +137,23 @@ class PlanConfig:
     counts: Dict[Key, int]
     tuples: Dict[Key, TupleVar]
     demand: Dict[str, float]
+    # per-pool capacity the plan was solved against (None = legacy scalar)
+    pool_budgets: Optional[Dict[str, int]] = None
 
     # ------------------------------------------------------------------
     @property
     def slices(self) -> int:
         return sum(self.tuples[k].cost * m for k, m in self.counts.items()
                    if m > 0)
+
+    def pool_slices(self) -> Dict[str, int]:
+        """Capacity units used per pool."""
+        out: Dict[str, int] = {}
+        for k, m in self.counts.items():
+            if m > 0:
+                j = self.tuples[k]
+                out[j.pool] = out.get(j.pool, 0) + j.cost * m
+        return out
 
     def lhat(self, task: str) -> float:
         """L̂(t): latency of the slowest ACTIVE instance (Eq. 2)."""
@@ -161,6 +187,10 @@ class PlanConfig:
                  tol: float = 1e-6) -> bool:
         if self.slices > s_avail:
             return False
+        if self.pool_budgets is not None:
+            for p, used in self.pool_slices().items():
+                if used > self.pool_budgets.get(p, 0):
+                    return False
         for t, r in self.demand.items():
             if self.task_throughput(t) < r - tol:
                 return False
@@ -174,15 +204,18 @@ class PlanConfig:
 
 
 # ---------------------------------------------------------------------------
+_UNOPT_CHIPS_DEFAULT = 8
+
+
 @dataclass
 class Planner:
     graph: TaskGraph
     profiler: Profiler
-    s_avail: int
+    s_avail: int                          # TOTAL capacity units (all pools)
     features: FeatureSet = field(default_factory=FeatureSet)
     alpha: float = 1.0
     beta: Optional[float] = None          # None → alpha / s_avail (paper §4.4)
-    unopt_chips: int = 8                  # the 'whole accelerator' unit
+    unopt_chips: int = _UNOPT_CHIPS_DEFAULT   # the 'whole accelerator' unit
     max_tuples_per_task: int = 120
     bb_nodes: int = 60
     bb_time_s: float = 10.0
@@ -191,10 +224,30 @@ class Planner:
     headroom: float = 0.8
     prune_dominated: bool = True      # drop dominated (t,v,s,b) pre-assembly
     matrix_cache_size: int = 8        # LRU entries of cached MILP matrices
+    # hardware model: defaults to the profiler's cluster.  Single-pool →
+    # legacy scalar-s_avail semantics; multi-pool → per-pool capacity rows
+    # with budgets from the cluster (s_avail caps the total, shrinking the
+    # largest pool first — the dead-capacity path).
+    cluster: Optional[ClusterSpec] = None
 
     def __post_init__(self):
         if self.beta is None:
             self.beta = self.alpha / max(self.s_avail, 1)
+        if self.cluster is None:
+            self.cluster = getattr(self.profiler, "cluster", None)
+        # every profiled tuple's pool must have a capacity row: a planner
+        # cluster whose pool names miss the profiler's would give those
+        # tuples unlimited LP capacity while the repair sees budget 0 —
+        # fail loud at construction instead
+        prof_cl = getattr(self.profiler, "cluster", None)
+        if self.cluster is not None and prof_cl is not None:
+            missing = ({p.name for p in prof_cl.pools}
+                       - {p.name for p in self.cluster.pools})
+            if missing:
+                raise ValueError(
+                    f"planner cluster lacks pools {sorted(missing)} that "
+                    "the profiler's tables were built on — pass a cluster "
+                    "covering the profiler's pools (or none to inherit)")
         self.stats = PlannerStats()
         self._admissible_cache: Dict[str, List[TupleVar]] = {}
         self._matrix_cache: Dict[tuple, _Assembled] = {}
@@ -202,6 +255,63 @@ class Planner:
         self._warm: Dict[Optional[str],
                          Tuple[tuple, Optional[BasisState],
                                Optional[np.ndarray]]] = {}
+
+    # ------------------------------------------------------------------
+    # hardware model helpers
+    # ------------------------------------------------------------------
+    def pool_budgets(self) -> Dict[str, int]:
+        """Per-pool capacity (Eq. 8 rhs), re-derived on every plan() so a
+        controller mutating ``s_avail`` (dead chips) stays effective."""
+        cl = self.cluster
+        if cl is None or len(cl.pools) == 1:
+            name = cl.pools[0].name if cl is not None else DEFAULT_POOL
+            budget = int(self.s_avail)
+            # a user-described (explicit) cluster states PHYSICAL capacity
+            # — cap so plan() never promises slices place() cannot realize.
+            # Profiler-synthesized legacy clusters keep the uncapped
+            # scalar-s_avail semantics (pre-hwspec pinned behavior).
+            if cl is not None and not getattr(self.profiler,
+                                              "cluster_implicit", True):
+                budget = min(budget, cl.pools[0].capacity_units)
+            return {name: budget}
+        budgets = dict(cl.budgets())
+        deficit = sum(budgets.values()) - max(int(self.s_avail), 0)
+        while deficit > 0:
+            p = max(budgets, key=lambda n: budgets[n])
+            cut = min(deficit, budgets[p])
+            if cut <= 0:        # every pool already at 0 (s_avail <= 0)
+                break
+            budgets[p] -= cut
+            deficit -= cut
+        return budgets
+
+    def _price(self, pool: str) -> float:
+        if self.cluster is None:
+            return 1.0
+        try:
+            return self.cluster.pool(pool).slice_price
+        except KeyError:
+            return 1.0
+
+    def _unopt_cost(self, pool: str) -> int:
+        """'Whole accelerator' unit size for spatial=False, per pool.
+        Torus pools keep the legacy ``unopt_chips`` knob — and so do
+        ExplicitScheme pools when the knob was explicitly set (the
+        legacy ``Profiler(segments=...)`` path wraps segments in an
+        ExplicitScheme the caller never sees); otherwise the scheme
+        defines its own whole unit (e.g. the 7g MIG slice)."""
+        if self.cluster is not None:
+            try:
+                scheme = self.cluster.pool(pool).scheme
+            except KeyError:
+                return self.unopt_chips
+            if isinstance(scheme, TorusScheme):
+                return self.unopt_chips
+            if (isinstance(scheme, ExplicitScheme)
+                    and self.unopt_chips != _UNOPT_CHIPS_DEFAULT):
+                return self.unopt_chips
+            return scheme.unopt_cost
+        return self.unopt_chips
 
     # ------------------------------------------------------------------
     # admissible tuples
@@ -227,21 +337,23 @@ class Planner:
             if all(v.name != vn for v in variants):
                 continue
             if not self.features.spatial:
-                if e.chips != self.unopt_chips or e.streams != 1:
+                if e.chips != self._unopt_cost(e.pool) or e.streams != 1:
                     continue
             if 2.0 * e.latency_ms > self.graph.slo_latency_ms:
                 continue  # can never satisfy Eq. 3 even alone
             v = t.variant(vn)
             out.append(TupleVar(task, vn, sn, b, e.latency_ms,
-                                e.throughput_rps, e.chips, v.accuracy))
+                                e.throughput_rps, e.chips, v.accuracy,
+                                e.pool, e.streams))
         out = _pareto_prune(out)
         if len(out) > self.max_tuples_per_task:
-            # round-robin across (variant, segment-size) groups so pruning
-            # never wipes out a whole size class (small segments must stay
-            # available when S_avail is tight)
-            groups: Dict[Tuple[str, int], List[TupleVar]] = {}
+            # round-robin across (variant, pool, segment-size) groups so
+            # pruning never wipes out a whole size class or pool (small
+            # segments must stay available when S_avail is tight, and a
+            # pool must stay reachable when its peer fills up)
+            groups: Dict[Tuple[str, str, int], List[TupleVar]] = {}
             for j in out:
-                groups.setdefault((j.variant, j.cost), []).append(j)
+                groups.setdefault((j.variant, j.pool, j.cost), []).append(j)
             for grp in groups.values():
                 grp.sort(key=lambda j: -j.throughput / j.cost)
             picked: List[TupleVar] = []
@@ -294,7 +406,7 @@ class Planner:
                 tuples.append(j)
         return self._solve(tuples, task_tuples, demand,
                            slo_l=g.slo_latency_ms, slo_a=g.slo_accuracy,
-                           s_avail=self.s_avail)
+                           budgets=self.pool_budgets())
 
     # ------------------------------------------------------------------
     def _plan_static_budgets(self, R: float, fbar) -> Optional[PlanConfig]:
@@ -312,22 +424,25 @@ class Planner:
                        self.profiler.entries_for_task(t).items()
                        if k[1] == v_acc.name
                        and (self.features.spatial
-                            or (e.chips == self.unopt_chips
+                            or (e.chips == self._unopt_cost(e.pool)
                                 and e.streams == 1))]
             if not entries:
                 return None
             best = max(entries, key=lambda ke: ke[1].throughput_rps
                        / ke[1].chips)
             exp_res[t] = demand[t] / best[1].throughput_rps * best[1].chips
-            lmax[t] = max(e.latency_ms for _, e in entries
-                          if 2 * e.latency_ms <= g.slo_latency_ms)
+            lat_ok = [e.latency_ms for _, e in entries
+                      if 2 * e.latency_ms <= g.slo_latency_ms]
+            if not lat_ok:
+                # no admissible tuple of the most accurate variant meets
+                # Eq. 3 even alone — the static split is infeasible
+                return None
+            lmax[t] = max(lat_ok)
         total_res = sum(exp_res.values())
         if total_res <= 0.0:
             # zero demand everywhere: no meaningful static split exists
             # (the joint path handles R=0 as an empty deployment)
             return None
-        res_budget = {t: self.s_avail * exp_res[t] / total_res
-                      for t in g.tasks}
         # per-path latency split in ratio of lmax; task gets min across paths
         lat_budget = {t: math.inf for t in g.tasks}
         for p in g.paths:
@@ -341,6 +456,7 @@ class Planner:
             plen = max(len(p) for p in g.paths if t in p)
             acc_floor[t] = g.slo_accuracy ** (1.0 / plen)
 
+        full_budgets = self.pool_budgets()
         counts: Dict[Key, int] = {}
         tuples: Dict[Key, TupleVar] = {}
         for t in g.tasks:
@@ -348,15 +464,20 @@ class Planner:
                    if 2.0 * j.latency_ms <= lat_budget[t]]
             if not adm:
                 return None
+            # each task gets its demand share of EVERY pool's budget (the
+            # single-pool case reduces to the legacy int(res_budget[t]))
+            sub_budgets = {p: int(b * exp_res[t] / total_res)
+                           for p, b in full_budgets.items()}
             sub = self._solve(
                 adm, {t: list(range(len(adm)))}, {t: demand[t]},
                 slo_l=2.0 * lat_budget[t], slo_a=acc_floor[t],
-                s_avail=int(res_budget[t]), single_task=t)
+                budgets=sub_budgets, single_task=t)
             if sub is None:
                 return None
             counts.update(sub.counts)
             tuples.update(sub.tuples)
-        cfg = PlanConfig(g, counts, tuples, demand)
+        cfg = PlanConfig(g, counts, tuples, demand,
+                         pool_budgets=dict(full_budgets))
         if not cfg.feasible(g.slo_latency_ms, g.slo_accuracy, self.s_avail):
             return None
         return cfg
@@ -366,7 +487,7 @@ class Planner:
     # ------------------------------------------------------------------
     def _assemble(self, tuples: List[TupleVar],
                   task_tuples: Dict[str, List[int]], caps: np.ndarray,
-                  *, slo_l: float, slo_a: float, s_avail: int,
+                  *, slo_l: float, slo_a: float, budgets: Dict[str, int],
                   single_task: Optional[str]) -> _Assembled:
         """Build the demand-independent MILP matrices (throughput rhs is a
         template patched per solve)."""
@@ -415,9 +536,14 @@ class Planner:
             tput_rows[t] = len(rows)
             add({ix_x[i]: -tuples[i].throughput for i in task_tuples[t]},
                 0.0)
-        # Eq.8 resources
-        add({ix_x[i]: float(tuples[i].cost) for i in range(nj)},
-            float(s_avail))
+        # Eq.8 resources: one capacity row per pool (slices charge their
+        # pool's budget; a single-pool cluster yields the legacy one row)
+        for pname, bud in budgets.items():
+            idxs = [i for i in range(nj) if tuples[i].pool == pname]
+            if not idxs and len(budgets) > 1:
+                continue    # no admissible tuples in this pool
+            add({ix_x[i]: float(tuples[i].cost) for i in idxs},
+                float(bud))
         # accuracy grid: z selects a floor g_k ⇒ Σ x H (A_j - g_k) >= -M(1-z)
         bigM_a = {t: sum(caps[i] * tuples[i].throughput
                          for i in task_tuples[t]) for t in tasks}
@@ -439,10 +565,12 @@ class Planner:
             eq_rows.append({ix_z[(t, k)]: 1.0 for k in range(nz[t])})
             eq_rhs.append(1.0)
 
-        # objective (min): β Σ cost x − (α/amax) Σ w_t g_tk z_tk
+        # objective (min): β Σ price·x − (α/amax) Σ w_t g_tk z_tk, where
+        # price = cost × the pool's slice_price (1.0 → legacy β Σ cost x)
         c = np.zeros(nvar)
         for i in range(nj):
-            c[ix_x[i]] = self.beta * tuples[i].cost
+            c[ix_x[i]] = (self.beta * tuples[i].cost
+                          * self._price(tuples[i].pool))
         for t in tasks:
             for k in range(nz[t]):
                 c[ix_z[(t, k)]] = -self.alpha * w[t] * grid[t][k] / amax
@@ -487,7 +615,7 @@ class Planner:
     def _solve(self, tuples: List[TupleVar],
                task_tuples: Dict[str, List[int]],
                demand: Dict[str, float], *, slo_l: float, slo_a: float,
-               s_avail: int, single_task: Optional[str] = None
+               budgets: Dict[str, int], single_task: Optional[str] = None
                ) -> Optional[PlanConfig]:
         g = self.graph
         if self.prune_dominated:
@@ -504,12 +632,13 @@ class Planner:
 
         cache_key = (single_task, tuple(tuples),
                      tuple(int(cp) for cp in caps),
-                     round(slo_l, 9), round(slo_a, 12), int(s_avail))
+                     round(slo_l, 9), round(slo_a, 12),
+                     tuple(sorted(budgets.items())))
         asm = self._matrix_cache.pop(cache_key, None)
         if asm is None:
             self.stats.matrix_cache_misses += 1
             asm = self._assemble(tuples, task_tuples, caps,
-                                 slo_l=slo_l, slo_a=slo_a, s_avail=s_avail,
+                                 slo_l=slo_l, slo_a=slo_a, budgets=budgets,
                                  single_task=single_task)
         else:
             self.stats.matrix_cache_hits += 1
@@ -530,11 +659,11 @@ class Planner:
         def make_cfg(counts: Dict[Key, int]) -> PlanConfig:
             return PlanConfig(g, counts,
                               {j.key: j for j in tuples},
-                              dict(demand))
+                              dict(demand), pool_budgets=dict(budgets))
 
         def repair(xfrac: np.ndarray) -> Optional[np.ndarray]:
             counts = self._repair(xfrac[ix_x], tuples, task_tuples, demand,
-                                  slo_l, slo_a, s_avail, grid, w, amax,
+                                  slo_l, slo_a, budgets, grid, w, amax,
                                   single_task)
             if counts is None:
                 return None
@@ -575,7 +704,7 @@ class Planner:
 
     # ------------------------------------------------------------------
     def _repair(self, x: np.ndarray, tuples, task_tuples, demand,
-                slo_l, slo_a, s_avail, grid, w, amax, single_task
+                slo_l, slo_a, budgets, grid, w, amax, single_task
                 ) -> Optional[Dict[Key, int]]:
         """LP point → integer-feasible counts (exact-semantics greedy).
 
@@ -583,16 +712,32 @@ class Planner:
         latency-budget-aware (each task only uses tuples that fit the slack
         the OTHER tasks leave on its tightest path), then fix the accuracy
         floor, then trim.  If LP-guided fill fails, rebuild from scratch
-        with a delete-worst latency loop."""
+        with a delete-worst latency loop.  Capacity is tracked per pool
+        (``budgets``) so the greedy never overfills one pool while its
+        peer has room."""
         tasks = list(task_tuples)
         paths = ([(single_task,)] if single_task is not None
                  else self.graph.paths)
 
         def attempt(seed: Dict[int, int]) -> Optional[Dict[int, int]]:
             counts = dict(seed)
+            # per-pool capacity used, maintained incrementally: every
+            # counts mutation goes through bump() (the greedy's hot loops
+            # must not re-aggregate counts per iteration)
+            used: Dict[str, int] = {}
+            for i, m in counts.items():
+                p = tuples[i].pool
+                used[p] = used.get(p, 0) + tuples[i].cost * m
 
-            def slices():
-                return sum(tuples[i].cost * m for i, m in counts.items())
+            def bump(i: int, d: int):
+                counts[i] = counts.get(i, 0) + d
+                p = tuples[i].pool
+                used[p] = used.get(p, 0) + tuples[i].cost * d
+                if counts[i] == 0:
+                    del counts[i]
+
+            def room(p: str) -> int:
+                return budgets.get(p, 0) - used.get(p, 0)
 
             def tput(t):
                 return sum(tuples[i].throughput * m
@@ -642,10 +787,9 @@ class Planner:
                 while tput(t) < demand[t] - 1e-9 and guard < 100000:
                     guard += 1
                     bud = budget(t)
-                    room = s_avail - slices()
                     cand = [i for i in task_tuples[t]
                             if 2.0 * tuples[i].latency_ms <= bud + 1e-9
-                            and tuples[i].cost <= room]
+                            and tuples[i].cost <= room(tuples[i].pool)]
                     if not cand:
                         return None
                     # close the whole deficit with the single best type
@@ -655,8 +799,9 @@ class Planner:
                             deficit / tuples[i].throughput),
                         tuples[i].cost))
                     n_add = max(1, int(deficit // tuples[best].throughput))
-                    n_add = min(n_add, max(1, room // tuples[best].cost))
-                    counts[best] = counts.get(best, 0) + n_add
+                    n_add = min(n_add, max(1, room(tuples[best].pool)
+                                           // tuples[best].cost))
+                    bump(best, n_add)
                 if tput(t) < demand[t] - 1e-9:
                     return None
 
@@ -673,23 +818,28 @@ class Planner:
                     return None
                 bud = budget(worst)
                 # room may transiently borrow the cost of the low-accuracy
-                # instance we are about to drop (final slices check guards)
-                droppable = [tuples[i].cost for i, mm in counts.items()
-                             if mm > 0 and tuples[i].task == worst
-                             and tuples[i].accuracy
-                             < grid[worst][-1] - 1e-12]
-                room = s_avail - slices() + (max(droppable) if droppable
-                                             else 0)
+                # instance we are about to drop IN THE SAME POOL (the final
+                # per-pool capacity check guards)
+                drop_by_pool: Dict[str, int] = {}
+                for i, mm in counts.items():
+                    if (mm > 0 and tuples[i].task == worst
+                            and tuples[i].accuracy
+                            < grid[worst][-1] - 1e-12):
+                        p = tuples[i].pool
+                        drop_by_pool[p] = max(drop_by_pool.get(p, 0),
+                                              tuples[i].cost)
                 cand = [i for i in task_tuples[worst]
                         if tuples[i].accuracy >= grid[worst][-1] - 1e-12
                         and 2.0 * tuples[i].latency_ms <= bud + 1e-9
-                        and tuples[i].cost <= room]
+                        and tuples[i].cost <= (room(tuples[i].pool)
+                                               + drop_by_pool.get(
+                                                   tuples[i].pool, 0))]
                 if not cand:
                     return None
                 best = min(cand, key=lambda i: (tuples[i].cost
                            / max(tuples[i].throughput, 1e-9),
                            tuples[i].cost))
-                counts[best] = counts.get(best, 0) + 1
+                bump(best, 1)
                 # drop low-accuracy instances while throughput allows
                 low = sorted([i for i, m in counts.items() if m > 0
                               and tuples[i].task == worst
@@ -697,12 +847,10 @@ class Planner:
                               < grid[worst][-1] - 1e-12],
                              key=lambda i: tuples[i].accuracy)
                 for i in low:
-                    counts[i] -= 1
+                    bump(i, -1)
                     if tput(worst) >= demand[worst] - 1e-9:
-                        if counts[i] == 0:
-                            del counts[i]
                         break
-                    counts[i] += 1
+                    bump(i, 1)
             if not acc_lb_ok():
                 return None
 
@@ -711,19 +859,17 @@ class Planner:
                            key=lambda i: -tuples[i].cost)
             for i in order:
                 while counts.get(i, 0) > 0:
-                    counts[i] -= 1
+                    bump(i, -1)
                     t = tuples[i].task
                     if (tput(t) >= demand[t] - 1e-9 and path_ok()
                             and acc_lb_ok()):
-                        if counts[i] == 0:
-                            del counts[i]
-                            break
                         continue
-                    counts[i] += 1
+                    bump(i, 1)
                     break
 
-            if sum(tuples[i].cost * m for i, m in counts.items()) > s_avail:
-                return None
+            for p, u in used.items():
+                if u > budgets.get(p, 0):
+                    return None
             return counts
 
         # try LP-guided seed first
@@ -805,7 +951,8 @@ def _nondominated_mask(group: List[TupleVar]) -> List[bool]:
         for b, i in enumerate(group):
             if a == b or not keep[b]:
                 continue
-            if (i.accuracy >= j.accuracy
+            if (i.pool == j.pool
+                    and i.accuracy >= j.accuracy
                     and i.latency_ms <= j.latency_ms
                     and i.throughput >= j.throughput
                     and i.cost <= j.cost
@@ -819,14 +966,19 @@ def _nondominated_mask(group: List[TupleVar]) -> List[bool]:
 
 
 def _pareto_prune(tuples: List[TupleVar]) -> List[TupleVar]:
-    """Drop (t,v,s,b) tuples dominated on (latency, throughput, cost)."""
+    """Drop (t,v,s,b) tuples dominated on (latency, throughput, cost).
+
+    Domination is only meaningful WITHIN a pool: costs are pool-local
+    capacity units, and a cross-pool 'dominated' tuple may still be the
+    only way to use its pool once the dominator's pool fills up."""
     out = []
     for j in tuples:
         dominated = False
         for i in tuples:
             if i is j:
                 continue
-            if (i.accuracy >= j.accuracy
+            if (i.pool == j.pool
+                    and i.accuracy >= j.accuracy
                     and i.latency_ms <= j.latency_ms
                     and i.throughput >= j.throughput
                     and i.cost <= j.cost

@@ -1,0 +1,34 @@
+"""First-class hardware model (DESIGN.md §10).
+
+``repro.hwspec`` makes the accelerator pluggable instead of a bag of
+module-level TPU v5e constants:
+
+* :class:`DeviceSpec` — one accelerator's roofs (peak FLOPS per dtype,
+  HBM bytes/bandwidth, interconnect bandwidth) plus the serving-stack
+  efficiency calibration.
+* :class:`Slice` / :class:`PartitionScheme` — a pluggable partition
+  catalogue.  :class:`TorusScheme` is the existing contiguous-rectangle
+  catalogue on a chip torus; :class:`MigScheme` is a MIG-style named-slice
+  catalogue (1g/2g/3g/4g/7g with per-slice memory and NVIDIA-style start
+  alignment rules).  Both carry MPS-style stream multiplicity.
+* :class:`Pool` / :class:`ClusterSpec` — named heterogeneous pools, each
+  ``DeviceSpec × device count × PartitionScheme`` with a relative slice
+  price; every layer (profiler tables, MILP capacity rows, packers,
+  runtime capacity events) keys on this.
+
+``repro.core.hw`` remains a thin shim over :data:`TPU_V5E` so existing
+imports keep working.
+"""
+from repro.hwspec.cluster import (ClusterSpec, Pool, default_cluster,
+                                  hetero_cluster, tight_hetero_cluster)
+from repro.hwspec.device import A100_40GB, DEFAULT_POOL, TPU_V5E, DeviceSpec
+from repro.hwspec.partition import (ExplicitScheme, MigScheme,
+                                    PartitionScheme, Slice, TorusScheme,
+                                    slice_from_segment)
+
+__all__ = [
+    "A100_40GB", "ClusterSpec", "DEFAULT_POOL", "DeviceSpec",
+    "ExplicitScheme", "MigScheme", "PartitionScheme", "Pool", "Slice",
+    "TorusScheme", "TPU_V5E", "default_cluster", "hetero_cluster",
+    "slice_from_segment", "tight_hetero_cluster",
+]

@@ -1,0 +1,120 @@
+"""ClusterSpec: named heterogeneous pools of partitionable devices.
+
+A :class:`Pool` is ``DeviceSpec × device count × PartitionScheme`` plus a
+relative ``slice_price`` (what one capacity unit of this pool costs in the
+MILP objective — a MIG g-unit and a v5e chip need not cost the same).
+A :class:`ClusterSpec` is an ordered set of pools with globally unique
+slice names, so a profiler key's slice name alone identifies its pool.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import cached_property
+from typing import Dict, Tuple
+
+from repro.hwspec.device import A100_40GB, DEFAULT_POOL, TPU_V5E, DeviceSpec
+from repro.hwspec.partition import (MigScheme, PartitionScheme, Slice,
+                                    TorusScheme)
+
+
+@dataclass(frozen=True)
+class Pool:
+    """One homogeneous pool: N identical devices under one scheme."""
+    name: str
+    device: DeviceSpec
+    count: int                    # devices (chips for a torus pool)
+    scheme: PartitionScheme
+    slice_price: float = 1.0      # objective $/capacity-unit, relative
+
+    @property
+    def capacity_units(self) -> int:
+        """Total MILP capacity units (Σ s_n budget) this pool offers."""
+        return self.count * self.scheme.units_per_device
+
+
+@dataclass(frozen=True)
+class ClusterSpec:
+    pools: Tuple[Pool, ...]
+
+    def __post_init__(self):
+        names = [p.name for p in self.pools]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate pool names: {names}")
+        seen: Dict[str, str] = {}
+        for p in self.pools:
+            for s in p.scheme.slices():
+                if s.name in seen:
+                    raise ValueError(
+                        f"slice name {s.name!r} appears in both pool "
+                        f"{seen[s.name]!r} and pool {p.name!r} — slice "
+                        "names must be cluster-unique")
+                seen[s.name] = p.name
+
+    # ------------------------------------------------------------------
+    @cached_property
+    def _slice_index(self) -> Dict[str, Tuple[Pool, Slice]]:
+        return {s.name: (p, s) for p in self.pools
+                for s in p.scheme.slices()}
+
+    def pool(self, name: str) -> Pool:
+        for p in self.pools:
+            if p.name == name:
+                return p
+        raise KeyError(f"no pool {name!r} (have {[p.name for p in self.pools]})")
+
+    def find_slice(self, slice_name: str) -> Tuple[Pool, Slice]:
+        try:
+            return self._slice_index[slice_name]
+        except KeyError:
+            raise KeyError(f"no slice {slice_name!r} in any pool") from None
+
+    @property
+    def total_units(self) -> int:
+        return sum(p.capacity_units for p in self.pools)
+
+    def budgets(self) -> Dict[str, int]:
+        return {p.name: p.capacity_units for p in self.pools}
+
+    def prices(self) -> Dict[str, float]:
+        return {p.name: p.slice_price for p in self.pools}
+
+
+# ---------------------------------------------------------------------------
+# presets
+# ---------------------------------------------------------------------------
+def default_cluster(num_pods: int = 2) -> ClusterSpec:
+    """The historical single-pool deployment: ``num_pods`` 16×16 v5e pods
+    with the legacy rectangle catalogue (slice names, costs and profiles
+    identical to the pre-hwspec ``sharding.segments.catalogue()``)."""
+    scheme = TorusScheme()
+    chips_per_pod = scheme.pod_shape[0] * scheme.pod_shape[1]
+    return ClusterSpec(pools=(
+        Pool(DEFAULT_POOL, TPU_V5E, num_pods * chips_per_pod, scheme),))
+
+
+def hetero_cluster(v5e_pods: int = 1, mig_devices: int = 8, *,
+                   mig_price: float = 1.0,
+                   v5e_price: float = 1.0) -> ClusterSpec:
+    """Two-pool heterogeneous cluster: a v5e torus pod pool plus a
+    MIG-sliced A100 pool (the ISSUE-3 end-to-end scenario)."""
+    torus = TorusScheme()
+    chips_per_pod = torus.pod_shape[0] * torus.pod_shape[1]
+    return ClusterSpec(pools=(
+        Pool(DEFAULT_POOL, TPU_V5E, v5e_pods * chips_per_pod, torus,
+             slice_price=v5e_price),
+        Pool("mig", A100_40GB, mig_devices, MigScheme(),
+             slice_price=mig_price),
+    ))
+
+
+def tight_hetero_cluster() -> ClusterSpec:
+    """The capacity-pressure two-pool scenario: 8 v5e chips + 2 MIG
+    devices (14 g) — small enough that a few hundred rps forces the
+    planner to spill into both pools.  ONE definition shared by the
+    acceptance tests (tests/test_hetero.py) and the CI-regressed
+    benchmark (benchmarks/bench_hetero.py), so the pinned numbers and
+    the tested scenario cannot drift apart."""
+    return ClusterSpec(pools=(
+        Pool(DEFAULT_POOL, TPU_V5E, 8, TorusScheme(max_chips=4)),
+        Pool("mig", A100_40GB, 2, MigScheme()),
+    ))

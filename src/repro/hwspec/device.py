@@ -1,0 +1,72 @@
+"""DeviceSpec: one accelerator model's roofs + serving calibration.
+
+The values feeding the closed-form roofline profiler and the dry-run
+roofline used to be module-level constants in ``repro.core.hw``; that
+module is now a thin shim over :data:`TPU_V5E` so the two stay consistent
+by construction while other accelerators (e.g. a MIG-sliced A100 pool)
+become expressible.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Mapping
+
+DEFAULT_POOL = "v5e"
+
+
+@dataclass(frozen=True)
+class DeviceSpec:
+    """Peak roofs of ONE device (a TPU chip, a whole GPU, ...).
+
+    ``peak_flops`` maps dtype → FLOP/s; dtypes absent from the map fall
+    back to the ``"bf16"`` entry (the dense-math default).  The efficiency
+    fields calibrate the closed-form serving profile (roofline fractions a
+    well-tuned serving stack achieves; folded into L/H identically so the
+    MILP's *relative* choices are calibration-invariant).
+    """
+    name: str
+    peak_flops: Mapping[str, float]      # dtype -> FLOP/s
+    hbm_bytes: int                       # per device
+    hbm_bw: float                        # B/s per device
+    ici_bw_per_link: float               # B/s per interconnect link
+    hbm_usable_fraction: float = 0.9
+    flops_efficiency: float = 0.55
+    hbm_efficiency: float = 0.80
+    ici_efficiency: float = 0.75
+
+    def peak(self, quant: str) -> float:
+        try:
+            return self.peak_flops[quant]
+        except KeyError:
+            return self.peak_flops["bf16"]
+
+    def param_bytes(self, quant: str) -> int:
+        return 1 if quant == "int8" else 2
+
+    @property
+    def usable_hbm_bytes(self) -> float:
+        return self.hbm_bytes * self.hbm_usable_fraction
+
+
+# ---------------------------------------------------------------------------
+# presets
+# ---------------------------------------------------------------------------
+#: The assignment-specified TPU v5e chip (the historical ``core.hw``
+#: constants, verbatim).
+TPU_V5E = DeviceSpec(
+    name="tpu-v5e",
+    peak_flops={"bf16": 197e12, "int8": 394e12},  # int8 MXU rate = 2x bf16
+    hbm_bytes=16 * 2 ** 30,
+    hbm_bw=819e9,
+    ici_bw_per_link=50e9,
+)
+
+#: A MIG-capable datacenter GPU (A100-40GB-class roofs) for the
+#: heterogeneous-pool scenarios (ParvaGPU / Lee et al. 2024 style slices).
+A100_40GB = DeviceSpec(
+    name="a100-40gb",
+    peak_flops={"bf16": 312e12, "int8": 624e12},
+    hbm_bytes=40 * 10 ** 9,
+    hbm_bw=1555e9,
+    ici_bw_per_link=600e9,               # NVLink aggregate
+)

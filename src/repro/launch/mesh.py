@@ -13,11 +13,24 @@ import jax
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.hwspec import default_cluster
+
+
+def production_geometry() -> Tuple[int, Tuple[int, int]]:
+    """(num_pods, pod_shape) of the default cluster's torus pool — the
+    single source the production mesh shapes derive from (no more
+    hardcoded ``(16, 16)`` / ``(2, 16, 16)`` literals)."""
+    pool = default_cluster().pools[0]
+    pod_shape = pool.scheme.pod_shape
+    return pool.count // (pod_shape[0] * pod_shape[1]), pod_shape
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
-    """The assignment's production mesh: 16x16 chips per pod ('data','model'),
-    or 2 pods = 512 chips ('pod','data','model')."""
-    shape = (2, 16, 16) if multi_pod else (16, 16)
+    """The assignment's production mesh: one pod as ('data','model'), or
+    all pods as ('pod','data','model') — shapes from the default
+    :class:`~repro.hwspec.cluster.ClusterSpec`."""
+    num_pods, pod_shape = production_geometry()
+    shape = (num_pods,) + pod_shape if multi_pod else pod_shape
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
 

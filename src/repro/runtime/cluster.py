@@ -30,7 +30,6 @@ from repro.core.taskgraph import TaskGraph
 from repro.runtime.backend import ExecutionBackend, SimBackend
 from repro.runtime.metrics import Server, SimMetrics
 from repro.runtime.scenario import CapacityEvent, FailureEvent, Scenario
-from repro.sharding.segments import by_name
 
 __all__ = ["ClusterRuntime", "Server", "SimMetrics"]
 
@@ -49,8 +48,9 @@ class ClusterRuntime:
         self.time_base_s = time_base_s
         self.servers: List[Server] = []
         for tup, m in config.instances():
-            streams = by_name(tup.segment).streams
-            for _ in range(m * streams):
+            # the tuple carries its slice's stream multiplicity, so the
+            # runtime needs no partition-catalogue lookup (pool-agnostic)
+            for _ in range(m * tup.streams):
                 self.servers.append(Server(tup, len(self.servers)))
         self._next_idx = len(self.servers)
         self.by_task: Dict[str, List[Server]] = {}
@@ -104,14 +104,20 @@ class ClusterRuntime:
         self._fastest = self._fastest_remaining()
         self.backend.on_capacity_change(self.servers)
 
-    def add_instances(self, task: str, count: int, now: float = 0.0):
+    def add_instances(self, task: str, count: int, now: float = 0.0,
+                      pool: Optional[str] = None):
         """Elasticity: clone ``count`` extra streams of ``task``'s first
-        deployed tuple (a pod joined / capacity was restored)."""
-        pool = self.by_task.get(task)
-        if not pool:
-            raise RuntimeError(f"task {task!r} has no live instance to clone")
+        deployed tuple (a pod joined / capacity was restored).  ``pool``
+        restricts the clone template to instances of that cluster pool."""
+        servers = self.by_task.get(task) or []
+        if pool is not None:
+            servers = [s for s in servers if s.tup.pool == pool]
+        if not servers:
+            where = f" in pool {pool!r}" if pool is not None else ""
+            raise RuntimeError(
+                f"task {task!r} has no live instance{where} to clone")
         for _ in range(count):
-            s = Server(pool[0].tup, self._next_idx, busy_until=now)
+            s = Server(servers[0].tup, self._next_idx, busy_until=now)
             self._next_idx += 1
             self.servers.append(s)
             self.by_task[task].append(s)
@@ -129,9 +135,18 @@ class ClusterRuntime:
 
     def _apply_capacity(self, ev: CapacityEvent, now: float):
         if ev.delta >= 0:
-            self.add_instances(ev.task, ev.delta, now)
+            self.add_instances(ev.task, ev.delta, now, pool=ev.pool)
         else:
-            victims = [s.idx for s in self.by_task.get(ev.task, [])[:-ev.delta]]
+            pool = self.by_task.get(ev.task, [])
+            if ev.pool is not None:
+                pool = [s for s in pool if s.tup.pool == ev.pool]
+                if not pool:
+                    # fail as loud as the add path does — a pool-scoped
+                    # retire that matches nothing is a scenario bug
+                    raise RuntimeError(
+                        f"task {ev.task!r} has no instances in pool "
+                        f"{ev.pool!r} to retire")
+            victims = [s.idx for s in pool[:-ev.delta]]
             if victims:
                 self.fail_instances(victims)
 

@@ -96,10 +96,15 @@ class FailureEvent:
 @dataclass(frozen=True)
 class CapacityEvent:
     """Elasticity: at ``at_s`` add (``delta > 0``) or retire (``delta < 0``)
-    ``|delta|`` execution streams of ``task``, cloning an existing tuple."""
+    ``|delta|`` execution streams of ``task``, cloning an existing tuple.
+
+    ``pool`` restricts the event to instances deployed in that
+    ClusterSpec pool (None = any pool) — capacity joins/retires are
+    per-pool events in a heterogeneous cluster."""
     at_s: float
     task: str
     delta: int
+    pool: Optional[str] = None
 
 
 # ---------------------------------------------------------------------------

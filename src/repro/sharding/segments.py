@@ -10,6 +10,7 @@ expensive as 2×2 because sub-meshes must be contiguous rectangles).
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import lru_cache
 from typing import Dict, List, Tuple
 
 
@@ -38,6 +39,20 @@ SEGMENT_SHAPES: Dict[int, Tuple[int, int]] = {
 MAX_STREAMS = 4  # paper: up to 4 MPS processes per MIG instance
 
 
+@lru_cache(maxsize=None)
+def _catalogue(max_chips: int, max_streams: int, spatial: bool,
+               unopt_chips: int) -> Tuple[SegmentType, ...]:
+    if not spatial:
+        return (SegmentType(unopt_chips, 1, SEGMENT_SHAPES[unopt_chips]),)
+    out = []
+    for chips, shape in SEGMENT_SHAPES.items():
+        if chips > max_chips:
+            continue
+        for k in range(1, max_streams + 1):
+            out.append(SegmentType(chips, k, shape))
+    return tuple(out)
+
+
 def catalogue(max_chips: int = 64, max_streams: int = MAX_STREAMS,
               spatial: bool = True, unopt_chips: int = 8
               ) -> List[SegmentType]:
@@ -47,18 +62,15 @@ def catalogue(max_chips: int = 64, max_streams: int = MAX_STREAMS,
     whole-accelerator unit (``unopt_chips`` — the 'one H100' analogue in
     our scale mapping, see DESIGN.md §2) with a single stream.
     """
-    if not spatial:
-        return [SegmentType(unopt_chips, 1, SEGMENT_SHAPES[unopt_chips])]
-    out = []
-    for chips, shape in SEGMENT_SHAPES.items():
-        if chips > max_chips:
-            continue
-        for k in range(1, max_streams + 1):
-            out.append(SegmentType(chips, k, shape))
-    return out
+    return list(_catalogue(max_chips, max_streams, spatial, unopt_chips))
 
 
+@lru_cache(maxsize=None)
 def by_name(name: str) -> SegmentType:
+    """Memoized name lookup — this sits in the packer hot loop, so it must
+    not rebuild the catalogue per call (frozen SegmentTypes are shareable).
+    Resolves against ``catalogue()``'s own defaults so the two can never
+    drift apart."""
     for s in catalogue():
         if s.name == name:
             return s

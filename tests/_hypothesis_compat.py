@@ -49,6 +49,11 @@ except ImportError:
                 return [elements.example(rng) for _ in range(size)]
             return _Strategy(draw)
 
+        @staticmethod
+        def tuples(*elements):
+            return _Strategy(
+                lambda rng: tuple(e.example(rng) for e in elements))
+
     st = _strategies
 
     def settings(max_examples=20, **_kwargs):

@@ -1,0 +1,279 @@
+"""Hardware model: DeviceSpec/PartitionScheme/ClusterSpec invariants, the
+hw.py shim, and the single-pool regression pins (plans must stay
+objective-identical to the pre-hwspec implementation)."""
+import pytest
+
+from repro.core import hw
+from repro.core.apps import get_app
+from repro.core.milp import Planner
+from repro.core.profiler import Profiler
+from repro.hwspec import (A100_40GB, ClusterSpec, MigScheme, Pool,
+                          TorusScheme, TPU_V5E, default_cluster,
+                          hetero_cluster)
+from repro.sharding.segments import catalogue
+
+
+# ---------------------------------------------------------------------------
+# DeviceSpec + hw shim
+# ---------------------------------------------------------------------------
+def test_hw_shim_matches_device_spec():
+    assert hw.PEAK_FLOPS_BF16 == TPU_V5E.peak_flops["bf16"] == 197e12
+    assert hw.PEAK_FLOPS_INT8 == TPU_V5E.peak_flops["int8"] == 394e12
+    assert hw.HBM_BYTES == TPU_V5E.hbm_bytes == 16 * 2 ** 30
+    assert hw.HBM_BW == TPU_V5E.hbm_bw
+    assert hw.ICI_BW_PER_LINK == TPU_V5E.ici_bw_per_link
+    assert hw.peak_flops("int8") == TPU_V5E.peak("int8")
+    assert hw.peak_flops("bf16") == TPU_V5E.peak("bf16")
+    assert hw.param_bytes("int8") == 1 and hw.param_bytes("bf16") == 2
+
+
+def test_unknown_dtype_falls_back_to_bf16():
+    assert A100_40GB.peak("fp8") == A100_40GB.peak_flops["bf16"]
+
+
+# ---------------------------------------------------------------------------
+# schemes
+# ---------------------------------------------------------------------------
+def test_torus_scheme_reproduces_legacy_catalogue():
+    """The default TorusScheme slice set is name/cost/stream-identical to
+    the legacy segment catalogue (that is what keeps old tables valid)."""
+    legacy = catalogue()
+    slices = TorusScheme().slices()
+    assert [s.name for s in slices] == [s.name for s in legacy]
+    assert [s.cost for s in slices] == [s.chips for s in legacy]
+    assert [s.streams for s in slices] == [s.streams for s in legacy]
+    assert all(s.devices == s.cost for s in slices)
+
+
+def test_mig_scheme_slices():
+    sch = MigScheme()
+    names = {s.name for s in sch.slices()}
+    assert "1g.5gb.s1" in names and "7g.40gb.s4" in names
+    s7 = sch.slice("7g.40gb.s1")
+    assert s7.cost == 7 and s7.devices == 1
+    assert s7.compute_fraction == pytest.approx(1.0)
+    assert s7.memory_fraction == pytest.approx(1.0)
+    s1 = sch.slice("1g.5gb.s2")
+    assert s1.cost == 1 and s1.streams == 2
+    assert s1.memory_fraction == pytest.approx(1 / 8)
+    assert sch.units_per_device == 7 and sch.unopt_cost == 7
+
+
+def test_cluster_rejects_duplicate_slice_names():
+    with pytest.raises(ValueError, match="cluster-unique"):
+        ClusterSpec(pools=(
+            Pool("a", TPU_V5E, 16, TorusScheme()),
+            Pool("b", TPU_V5E, 16, TorusScheme()),
+        ))
+
+
+def test_default_cluster_geometry():
+    cl = default_cluster()
+    assert len(cl.pools) == 1
+    assert cl.pools[0].count == 512            # 2 pods x 16x16
+    assert cl.total_units == 512
+    pool, sl = cl.find_slice("4x4s2")
+    assert pool.name == "v5e" and sl.cost == 16 and sl.streams == 2
+
+
+def test_hetero_cluster_budgets():
+    cl = hetero_cluster(v5e_pods=1, mig_devices=8)
+    assert cl.budgets() == {"v5e": 256, "mig": 56}
+    pool, sl = cl.find_slice("3g.20gb.s1")
+    assert pool.name == "mig" and sl.cost == 3
+
+
+def test_production_mesh_geometry_derives_from_cluster():
+    from repro.launch.mesh import production_geometry
+    assert production_geometry() == (2, (16, 16))
+
+
+# ---------------------------------------------------------------------------
+# profiler: per-pool tables
+# ---------------------------------------------------------------------------
+def test_default_profiler_single_pool(traffic_profiler):
+    _, prof = traffic_profiler
+    assert {e.pool for e in prof.table.values()} == {"v5e"}
+    assert prof.pool_of("1x1s1") == "v5e"
+
+
+def test_profiler_rejects_cluster_and_segments(traffic_profiler):
+    g, _ = traffic_profiler
+    with pytest.raises(ValueError):
+        Profiler(g, segments=catalogue(), cluster=default_cluster())
+
+
+def test_mig_slices_have_no_ici_term(social_profiler):
+    """A MIG slice is intra-device: its 7g roofline must beat or match a
+    multi-chip v5e slice of comparable compute on the collective-bound
+    ICI term — concretely, the entry exists and records pool 'mig'."""
+    g, _ = social_profiler
+    cl = hetero_cluster(v5e_pods=1, mig_devices=2)
+    prof = Profiler(g, cluster=cl)
+    pools = {e.pool for e in prof.table.values()}
+    assert pools == {"v5e", "mig"}
+    e = prof.get("caption", "gemma-2b", "7g.40gb.s1", 8)
+    assert e is not None and e.pool == "mig" and e.chips == 7
+
+
+# ---------------------------------------------------------------------------
+# single-pool regression pins: the hwspec refactor must not move the
+# default plans (values captured on the pre-hwspec implementation)
+# ---------------------------------------------------------------------------
+PINNED = {
+    ("social_media", 10.0): (4, 0.995313415349),
+    ("social_media", 60.0): (4, 0.951376684241),
+    ("traffic_analysis", 10.0): (34, 0.970279720280),
+    ("traffic_analysis", 60.0): (3, 0.941241685144),
+}
+
+
+def test_pool_budgets_terminate_on_dead_capacity():
+    """Regression: budgets must terminate (all-zero) when dead capacity
+    drives s_avail to/below zero on a multi-pool cluster."""
+    g = get_app("social_media")
+    cl = hetero_cluster(v5e_pods=1, mig_devices=2)
+    prof = Profiler(g, cluster=cl)
+    planner = Planner(g, prof, s_avail=cl.total_units)
+    for dead in (cl.total_units, cl.total_units + 5):
+        planner.s_avail = cl.total_units - dead
+        budgets = planner.pool_budgets()
+        assert all(b == 0 for b in budgets.values())
+    planner.s_avail = cl.total_units - 10
+    assert sum(planner.pool_budgets().values()) == cl.total_units - 10
+
+
+def test_single_pool_mig_controller_places():
+    """Regression: a single-pool MIG cluster must place through the MIG
+    packer, not the legacy rectangle packer."""
+    from repro.core.controller import Controller
+    from repro.hwspec import A100_40GB, MigScheme, Pool
+    g = get_app("social_media")
+    cl = ClusterSpec(pools=(Pool("mig", A100_40GB, 8, MigScheme()),))
+    prof = Profiler(g, cluster=cl)
+    ctl = Controller(g, prof, s_avail=cl.total_units,
+                     planner_kwargs=dict(max_tuples_per_task=32,
+                                         bb_nodes=4, bb_time_s=1.0))
+    ctl.step(0, 20.0, sim_seconds=1.0)
+    pls = ctl.place()
+    assert pls is not None and all(p.pool == "mig" for p in pls)
+
+
+def test_explicit_scheme_unopt_honored():
+    """Regression: ExplicitScheme.unopt is the pool's whole unit under
+    spatial=False (not the planner's torus unopt_chips knob)."""
+    from repro.core.milp import FeatureSet
+    from repro.hwspec import ExplicitScheme, Pool, slice_from_segment
+    from repro.sharding.segments import SegmentType, SEGMENT_SHAPES
+    g = get_app("social_media")
+    slices = tuple(slice_from_segment(SegmentType(c, 1, SEGMENT_SHAPES[c]))
+                   for c in (1, 2, 4))
+    cl = ClusterSpec(pools=(Pool("v5e", TPU_V5E, 64,
+                                 ExplicitScheme(slices, unopt=4)),))
+    prof = Profiler(g, cluster=cl)
+    planner = Planner(g, prof, s_avail=64,
+                      features=FeatureSet(True, False, True),
+                      max_tuples_per_task=32, bb_nodes=4, bb_time_s=1.0)
+    cfg = planner.plan(5.0)
+    assert cfg is not None
+    for (t, v, s, b), m in cfg.counts.items():
+        if m > 0:
+            assert cl.find_slice(s)[1].cost == 4
+
+
+def test_planner_rejects_pool_name_mismatch(traffic_profiler):
+    """A planner cluster missing the profiler's pools would give those
+    tuples unlimited LP capacity — must fail loud at construction."""
+    g, prof = traffic_profiler
+    other = ClusterSpec(pools=(Pool("tpu", TPU_V5E, 64, TorusScheme()),))
+    with pytest.raises(ValueError, match="lacks pools"):
+        Planner(g, prof, s_avail=64, cluster=other)
+
+
+def test_legacy_unopt_chips_knob_wins_on_explicit_scheme(traffic_profiler):
+    """Profiler(segments=...) wraps segments in an ExplicitScheme the
+    caller never sees; an explicitly-set Planner.unopt_chips must keep
+    governing spatial=False there (pre-hwspec behavior)."""
+    from repro.core.milp import FeatureSet
+    g, _ = traffic_profiler
+    prof = Profiler(g, segments=catalogue())
+    planner = Planner(g, prof, s_avail=128, unopt_chips=16,
+                      features=FeatureSet(True, False, True),
+                      max_tuples_per_task=32, bb_nodes=4, bb_time_s=1.0)
+    cfg = planner.plan(10.0)
+    assert cfg is not None
+    for (t, v, s, b), m in cfg.counts.items():
+        if m > 0:
+            assert prof.cluster.find_slice(s)[1].cost == 16
+
+
+def test_num_pods_honored_for_inherited_segments_cluster():
+    """Regression: Controller(num_pods=1) with a Profiler(segments=...)
+    (inherited ExplicitScheme cluster) must expose exactly one pod of
+    packing capacity, as the legacy Placer(num_pods) did."""
+    from repro.core.controller import Controller
+    g = get_app("social_media")
+    prof = Profiler(g, segments=catalogue())
+    ctl = Controller(g, prof, s_avail=512, num_pods=1,
+                     planner_kwargs=dict(max_tuples_per_task=32,
+                                         bb_nodes=4, bb_time_s=1.0))
+    assert ctl.cluster.pools[0].count == 256
+    from repro.core.placement import make_placer
+    assert make_placer(ctl.cluster.pools[0]).pack(["8x8s1"] * 5) is None
+
+
+def test_multi_pool_place_ids_unique():
+    """Regression: concatenated multi-pool placements keep unique ids."""
+    from repro.core.controller import Controller
+    from repro.hwspec import A100_40GB, MigScheme, Pool, TorusScheme
+    g = get_app("social_media")
+    cl = ClusterSpec(pools=(
+        Pool("v5e", TPU_V5E, 8, TorusScheme(max_chips=4)),
+        Pool("mig", A100_40GB, 2, MigScheme()),
+    ))
+    prof = Profiler(g, cluster=cl)
+    ctl = Controller(g, prof, s_avail=cl.total_units, cluster=cl,
+                     planner_kwargs=dict(max_tuples_per_task=48,
+                                         bb_nodes=8, bb_time_s=2.0))
+    ctl.step(0, 300.0, sim_seconds=1.0)
+    pls = ctl.place()
+    assert pls is not None and len(pls) > 1
+    ids = [p.instance_id for p in pls]
+    assert len(set(ids)) == len(ids)
+    assert {p.pool for p in pls} == {"v5e", "mig"}
+
+
+def test_explicit_single_pool_budget_capped_at_capacity():
+    """Regression: an explicit single-pool cluster caps the MILP budget at
+    physical capacity (plan() must not promise slices place() can't
+    realize); implicit legacy clusters keep uncapped s_avail."""
+    from repro.hwspec import A100_40GB, MigScheme
+    g = get_app("social_media")
+    cl = ClusterSpec(pools=(Pool("mig", A100_40GB, 8, MigScheme()),))
+    planner = Planner(g, Profiler(g, cluster=cl), s_avail=60)
+    assert planner.pool_budgets() == {"mig": 56}      # 8 devices x 7g
+    legacy = Planner(g, Profiler(g), s_avail=600)
+    assert legacy.pool_budgets() == {"v5e": 600}      # implicit: uncapped
+
+
+def test_rectangle_packer_rejects_shapeless_slice():
+    from repro.core.placement import RectanglePlacer
+    from repro.hwspec import Slice
+    placer = RectanglePlacer(num_pods=1,
+                             slices=[Slice(name="a", streams=1, cost=1)])
+    with pytest.raises(ValueError, match="no rectangle shape"):
+        placer.pack(["a"])
+
+
+@pytest.mark.parametrize("app,R", sorted(PINNED))
+def test_default_plan_objective_identical_to_pre_hwspec(
+        app, R, social_profiler, traffic_profiler):
+    g, prof = (social_profiler if app == "social_media"
+               else traffic_profiler)
+    planner = Planner(g, prof, s_avail=128, max_tuples_per_task=32,
+                      bb_nodes=4, bb_time_s=1.0)
+    cfg = planner.plan(R)
+    assert cfg is not None
+    slices, a_obj = PINNED[(app, R)]
+    assert cfg.slices == slices
+    assert cfg.exact_a_obj() == pytest.approx(a_obj, abs=1e-9)

@@ -1,10 +1,15 @@
-"""Rectangle bin-packing: no overlap, in-bounds, capacity refusal, and a
-hypothesis sweep over random segment mixes."""
+"""Packer properties behind the Placer protocol: the 2-D rectangle packer
+(no overlap, in-bounds, dead-host avoidance, capacity refusal) and the MIG
+slice packer (placement-rule alignment, per-device g-budget conservation),
+each with a hypothesis sweep over random mixes."""
 import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core.placement import POD_SHAPE, Placer
+from repro.core.placement import (MigSlicePacker, POD_SHAPE, Placer,
+                                  PlacerProtocol, RectanglePlacer,
+                                  make_placer)
+from repro.hwspec import (A100_40GB, MigScheme, Pool, TorusScheme, TPU_V5E)
 from repro.sharding.segments import SEGMENT_SHAPES, SegmentType, catalogue
 
 
@@ -102,3 +107,140 @@ def test_power_of_two_packing_is_tight():
         placer = Placer(num_pods=1)
         # sort-desc first-fit on aligned anchors must succeed
         assert placer.pack([seg_name(c) for c in chips]) is not None
+
+
+# ---------------------------------------------------------------------------
+# protocol + hypothesis properties over BOTH packers (ISSUE 3 satellite)
+# ---------------------------------------------------------------------------
+def test_placer_protocol_conformance():
+    assert isinstance(RectanglePlacer(num_pods=1), PlacerProtocol)
+    assert isinstance(MigSlicePacker(1, MigScheme()), PlacerProtocol)
+    assert Placer is RectanglePlacer      # historical alias
+
+
+def test_make_placer_dispatches_on_scheme():
+    rect = make_placer(Pool("v5e", TPU_V5E, 512, TorusScheme()))
+    assert isinstance(rect, RectanglePlacer) and rect.num_pods == 2
+    mig = make_placer(Pool("mig", A100_40GB, 4, MigScheme()))
+    assert isinstance(mig, MigSlicePacker) and mig.num_devices == 4
+
+
+def test_make_placer_masks_partial_pod():
+    """A torus pool smaller than one pod only exposes its own chips: the
+    packer must pack exactly up to pool.count and refuse beyond it."""
+    pool = Pool("v5e", TPU_V5E, 8, TorusScheme(max_chips=4))
+    pls = make_placer(pool).pack([seg_name(4), seg_name(4)])   # 8 chips
+    assert pls is not None
+    validate(pls, 1)
+    assert make_placer(pool).pack([seg_name(4)] * 3) is None   # 12 > 8
+    # power-of-two counts keep an aligned rectangle free: 2x2s pack tight
+    pls = make_placer(pool).pack([seg_name(1)] * 8)
+    assert pls is not None and len(pls) == 8
+    # non-power-of-two counts keep a rectangle too (12 -> 2x6), so the
+    # multi-row slices the MILP budgets remain placeable
+    pool12 = Pool("v5e", TPU_V5E, 12, TorusScheme(max_chips=4))
+    pls = make_placer(pool12).pack([seg_name(4)] * 3)          # 12 chips
+    assert pls is not None
+    validate(pls, 1)
+    assert make_placer(pool12).pack([seg_name(4)] * 4) is None  # 16 > 12
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.sampled_from(sorted(SEGMENT_SHAPES)), min_size=1,
+                max_size=30),
+       st.lists(st.tuples(st.integers(0, 15), st.integers(0, 15)),
+                max_size=6))
+def test_rectangles_route_around_dead_hosts(chip_list, dead_cells):
+    """Any successful packing avoids every dead chip (and stays overlap-
+    free / in-bounds) regardless of where the failures landed."""
+    dead = [(0, r, c) for (r, c) in set(dead_cells)]
+    placer = Placer(num_pods=1, dead_hosts=dead)
+    pls = placer.pack([seg_name(c) for c in chip_list])
+    if pls is None:
+        return
+    validate(pls, 1)
+    for pl in pls:
+        for (p, r, c) in dead:
+            inside = (pl.pod == p and pl.row <= r < pl.row + pl.rows
+                      and pl.col <= c < pl.col + pl.cols)
+            assert not inside, (pl, (r, c))
+
+
+MIG_SCHEME = MigScheme()
+MIG_NAMES = sorted({s.name for s in MIG_SCHEME.slices()})
+
+
+def validate_mig(placements, num_devices, dead=()):
+    scheme = MIG_SCHEME
+    slots = [np.zeros(scheme.total_mem_slots, dtype=int)
+             for _ in range(num_devices)]
+    g_used = [0] * num_devices
+    for pl in placements:
+        sl = scheme.slice(pl.segment)
+        assert 0 <= pl.pod < num_devices
+        assert pl.pod not in dead, "placed on a dead device"
+        assert pl.row in sl.starts, "start offset violates placement rule"
+        assert pl.row + sl.mem_slots <= scheme.total_mem_slots
+        slots[pl.pod][pl.row:pl.row + sl.mem_slots] += 1
+        g_used[pl.pod] += sl.cost
+    for arr in slots:
+        assert arr.max(initial=0) <= 1, "overlapping memory slots"
+    for gu in g_used:
+        assert gu <= scheme.total_g, "per-device g budget exceeded"
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.sampled_from(MIG_NAMES), min_size=1, max_size=24),
+       st.integers(1, 4),
+       st.lists(st.integers(0, 3), max_size=2))
+def test_mig_random_mixes_valid_or_refused(names, num_devices, dead_list):
+    dead = {d for d in dead_list if d < num_devices}
+    if len(dead) == num_devices:
+        dead.pop()                      # keep at least one live device
+    packer = MigSlicePacker(num_devices, MIG_SCHEME, dead_hosts=dead)
+    pls = packer.pack(list(names))
+    if pls is None:
+        # refusal is only legitimate when the mix cannot fit the live
+        # compute budget exactly-fragmentation-free is NOT guaranteed for
+        # MIG (alignment holes are real on A100s too), so only assert the
+        # trivial-fit direction: a single small slice always packs
+        assert len(names) > 1 or MIG_SCHEME.slice(names[0]).cost > 7
+        return
+    assert len(pls) == len(names)
+    validate_mig(pls, num_devices, dead)
+
+
+def test_mig_budget_refusal():
+    packer = MigSlicePacker(1, MIG_SCHEME)
+    assert packer.pack(["4g.20gb.s1", "4g.20gb.s1"]) is None  # 8g > 7g
+    packer = MigSlicePacker(1, MIG_SCHEME)
+    assert packer.pack(["7g.40gb.s1"] * 2) is None
+
+
+def test_mig_placement_rules_enforced():
+    """3g+3g fills both aligned halves; a further 1g must be refused even
+    though 1 g-unit of compute remains (memory slots are exhausted)."""
+    packer = MigSlicePacker(1, MIG_SCHEME)
+    pls = packer.pack(["3g.20gb.s1", "3g.20gb.s1"])
+    assert pls is not None
+    assert sorted(pl.row for pl in pls) == [0, 4]
+    assert packer.pack(["1g.5gb.s1"]) is None
+
+
+def test_mig_dead_devices_avoided():
+    packer = MigSlicePacker(3, MIG_SCHEME, dead_hosts=[1])
+    pls = packer.pack(["7g.40gb.s1", "7g.40gb.s1"])
+    assert pls is not None
+    assert sorted(pl.pod for pl in pls) == [0, 2]
+    validate_mig(pls, 3, dead={1})
+
+
+def test_mig_streams_share_one_slice():
+    """Stream multiplicity is concurrency on ONE slice, not extra slices:
+    7 single-stream 1g instances fill a device exactly, regardless of s."""
+    for suffix in ("s1", "s4"):
+        packer = MigSlicePacker(1, MIG_SCHEME)
+        pls = packer.pack([f"1g.5gb.{suffix}"] * 7)
+        assert pls is not None and packer.g_used[0] == 7
+        packer2 = MigSlicePacker(1, MIG_SCHEME)
+        assert packer2.pack([f"1g.5gb.{suffix}"] * 8) is None
