@@ -7,12 +7,14 @@ runtime (batching, early-drop, controller loop, placement).
 """
 import importlib
 
-from repro.core.taskgraph import Task, TaskGraph, Variant
-from repro.core.milp import FeatureSet, PlanConfig, Planner
+from repro.core.taskgraph import Task, TaskGraph, Variant, qualify, \
+    split_qualified
+from repro.core.milp import (AppSpec, FeatureSet, JointPlan, JointPlanner,
+                             PlanConfig, Planner)
 from repro.core.profiler import Profiler
 from repro.core.registry import Registration, RegistrationError, register
 from repro.core.frontend import Frontend
-from repro.core.controller import Controller
+from repro.core.controller import Controller, MultiAppController
 from repro.core.simulator import SimMetrics, Simulator
 
 # runtime re-exports resolve lazily (PEP 562): repro.runtime and
@@ -35,9 +37,11 @@ def __getattr__(name):
 
 
 __all__ = [
-    "Task", "TaskGraph", "Variant", "FeatureSet", "PlanConfig", "Planner",
+    "AppSpec", "Task", "TaskGraph", "Variant", "FeatureSet", "JointPlan",
+    "JointPlanner", "PlanConfig", "Planner",
     "Profiler", "Registration", "RegistrationError", "register",
-    "Controller", "Frontend", "SimMetrics", "Simulator",
+    "Controller", "Frontend", "MultiAppController", "SimMetrics",
+    "Simulator", "qualify", "split_qualified",
     "ClusterRuntime", "ExecutionBackend", "SimBackend", "EngineBackend",
     "Scenario",
 ]

@@ -11,6 +11,11 @@ The controller is pure control plane: each bin it builds (or receives) a
 :class:`~repro.runtime.backend.ExecutionBackend` — it never touches a
 concrete datapath directly.  The re-plan trigger is the
 :class:`~repro.core.frontend.Frontend`'s single implementation.
+
+:class:`MultiAppController` is the multi-app variant (DESIGN.md §11):
+one JOINT plan per bin across all co-located apps (shared pools, per-app
+SLOs), re-planned as soon as ANY app's frontend trigger fires, served on
+one shared ``ClusterRuntime.multi`` event loop.
 """
 from __future__ import annotations
 
@@ -22,7 +27,8 @@ from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.frontend import Frontend
-from repro.core.milp import FeatureSet, PlanConfig, Planner
+from repro.core.milp import (AppSpec, FeatureSet, JointPlan, PlanConfig,
+                             Planner, JointPlanner)
 from repro.core.placement import Placement, Placer, make_placer
 from repro.core.profiler import Profiler
 from repro.core.taskgraph import TaskGraph
@@ -257,27 +263,240 @@ class Controller:
         by_pool: Dict[str, List[str]] = {}
         for tup, m in self._config.instances():
             by_pool.setdefault(tup.pool, []).extend([tup.segment] * m)
-        if self.cluster is None:
-            segs = [s for pool_segs in by_pool.values() for s in pool_segs]
-            return Placer(self.num_pods).pack(segs)
-        out: List[Placement] = []
-        base = 0
-        for pool in self.cluster.pools:
-            segs = by_pool.get(pool.name)
-            if not segs:
-                continue
-            pls = make_placer(pool).pack(segs)
-            if pls is None:
-                return None
-            # packers number from 0 within their pool; offset so ids stay
-            # unique across the concatenated multi-pool list
-            out.extend(dataclasses.replace(pl,
-                                           instance_id=pl.instance_id + base)
-                       for pl in pls)
-            base += len(segs)
-        return out
+        return _pack_pools(self.cluster, by_pool, self.num_pods)
 
     def max_serviceable_demand(self, hi_cap: float = 1e6) -> float:
         """Binary-search the largest plannable demand (Fig. 3 metric)."""
         _, demand = self._search_max_demand(hi_cap)
         return demand
+
+
+# ---------------------------------------------------------------------------
+def _pack_pools(cluster: Optional[ClusterSpec],
+                by_pool: Dict[str, List[str]],
+                num_pods: int) -> Optional[List[Placement]]:
+    """Pack segments pool by pool with each pool's own packer, offsetting
+    instance ids so they stay unique across the concatenated list; the
+    no-cluster legacy path is a single ``num_pods``-pod rectangle pack.
+    Returns None if ANY pool refuses its mix."""
+    if cluster is None:
+        segs = [s for pool_segs in by_pool.values() for s in pool_segs]
+        return Placer(num_pods).pack(segs)
+    out: List[Placement] = []
+    base = 0
+    for pool in cluster.pools:
+        segs = by_pool.get(pool.name)
+        if not segs:
+            continue
+        pls = make_placer(pool).pack(segs)
+        if pls is None:
+            return None
+        out.extend(dataclasses.replace(pl, instance_id=pl.instance_id + base)
+                   for pl in pls)
+        base += len(segs)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Multi-app co-location (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+@dataclass
+class AppBinReport:
+    """One app's share of a multi-app bin (see :class:`MultiBinReport`)."""
+    app: str
+    demand_actual: float
+    demand_predicted: float
+    slices_used: int
+    violation_rate: float
+    accuracy_drop_pct: float      # vs this app's A_max, in percent
+    completions: int
+    p99_ms: float
+
+
+@dataclass
+class MultiBinReport:
+    """Outcome of one multi-app controller bin: joint-plan stats plus a
+    separately-attributed :class:`AppBinReport` per co-located app."""
+    bin_idx: int
+    replanned: bool
+    milp_ms: float
+    slices_used: int              # total across apps (shared cluster)
+    warm_replan: bool
+    milp_nodes: int
+    per_app: Dict[str, AppBinReport]
+
+
+@dataclass
+class MultiAppController:
+    """The controller loop for several co-located apps on ONE cluster.
+
+    Mirrors :class:`Controller` bin-by-bin, but plans ALL apps in one
+    :class:`~repro.core.milp.JointPlanner` solve (shared per-pool Eq. 8
+    capacity rows, per-app SLO rows) and serves them on one
+    ``ClusterRuntime.multi`` event loop with per-app arrival processes.
+    Each app keeps its own :class:`Frontend` (demand bins, violation
+    window, deadline stamping with its own SLO); a bin re-plans JOINTLY
+    as soon as ANY app's ``should_replan`` fires — capacity freed by a
+    cooling app is immediately re-offered to the others.
+
+    ``graphs`` and ``profilers`` map the app name to its task graph and
+    to a profiler built on the SHARED :class:`ClusterSpec`.
+    """
+    graphs: Dict[str, TaskGraph]
+    profilers: Dict[str, Profiler]
+    s_avail: int
+    features: FeatureSet = field(default_factory=FeatureSet)
+    slack: float = 0.05                   # paper §4.4
+    replan_threshold: float = 0.10
+    violation_trigger: float = 0.05
+    staleness_ms: float = 20.0
+    num_pods: int = 2             # legacy no-cluster placement knob
+    planner_kwargs: dict = field(default_factory=dict)
+    cluster: Optional[ClusterSpec] = None
+    backend_factory: Optional[Callable[[], "ExecutionBackend"]] = None
+
+    def __post_init__(self):
+        if set(self.graphs) != set(self.profilers):
+            raise ValueError("graphs and profilers must name the same apps")
+        if self.cluster is None:
+            self.cluster = getattr(next(iter(self.profilers.values())),
+                                   "cluster", None)
+        self.planner = JointPlanner(
+            [AppSpec(n, g, self.profilers[n])
+             for n, g in self.graphs.items()],
+            self.s_avail, features=self.features, cluster=self.cluster,
+            **self.planner_kwargs)
+        self.frontends: Dict[str, Frontend] = {
+            n: Frontend(g, app=n) for n, g in self.graphs.items()}
+        if self.backend_factory is None:
+            from repro.runtime.backend import SimBackend
+            self.backend_factory = SimBackend
+        self._backend: Optional["ExecutionBackend"] = None
+        self._plan: Optional[JointPlan] = None
+        self._planned_for: Dict[str, float] = {}
+        self._history: Dict[str, List[float]] = {n: [] for n in self.graphs}
+        self.milp_times_ms: List[float] = []
+
+    # ------------------------------------------------------------------
+    @property
+    def backend(self) -> "ExecutionBackend":
+        """The shared data plane, built once across bins."""
+        if self._backend is None:
+            self._backend = self.backend_factory()
+        return self._backend
+
+    @property
+    def joint_plan(self) -> Optional[JointPlan]:
+        return self._plan
+
+    # ------------------------------------------------------------------
+    def step(self, bin_idx: int, demands: Dict[str, float], *,
+             sim_seconds: float = 12.0, seed: int = 0,
+             dead_chips: int = 0,
+             scenario: Optional["Scenario"] = None) -> MultiBinReport:
+        """One demand bin: per-app predict → ONE joint (re)plan → serve.
+
+        ``demands`` maps app name → this bin's actual entry demand (rps).
+        ``scenario`` defaults to independent Poisson arrivals per app at
+        the actual demands."""
+        predicted: Dict[str, float] = {}
+        for n in self.graphs:
+            d = float(demands[n])
+            hist = self._history[n]
+            predicted[n] = (predict_demand(hist + [d], self.slack)
+                            if hist else d * (1 + self.slack))
+            hist.append(d)
+
+        # ANY app's trigger forces a JOINT re-plan: the solve re-divides
+        # the shared pools across all apps, not just the one that fired
+        need = (self._plan is None
+                or any(self.frontends[n].should_replan(
+                    self._planned_for.get(n, -1.0),
+                    threshold=self.replan_threshold,
+                    violation_trigger=self.violation_trigger,
+                    demand_rps=predicted[n]) for n in self.graphs))
+        for fe in self.frontends.values():
+            fe.reset_bin()
+        replanned = False
+        milp_ms = 0.0
+        warm_replan = False
+        milp_nodes = 0
+        s_now = self.s_avail - dead_chips
+        if need:
+            t0 = time.monotonic()
+            warm0 = self.planner.stats.warm_basis_hits
+            nodes0 = self.planner.stats.nodes
+            self.planner.s_avail = s_now
+            plan = self.planner.plan_joint(predicted)
+            if plan is not None:
+                self._plan = plan
+                self._planned_for = dict(predicted)
+                replanned = True
+            elif self._plan is None:
+                # fall back to the largest jointly-plannable scale of the
+                # SAME demand mix (paper §5's highest-demand config,
+                # generalized to the multi-app simplex direction)
+                plan, _ = self.planner.max_total_scale(
+                    {n: max(r, 1e-9) for n, r in predicted.items()})
+                if plan is None:
+                    raise RuntimeError(
+                        "no feasible joint config at any demand")
+                self._plan = plan
+                self._planned_for = dict(predicted)
+                replanned = True
+            milp_ms = (time.monotonic() - t0) * 1e3
+            warm_replan = self.planner.stats.warm_basis_hits > warm0
+            milp_nodes = self.planner.stats.nodes - nodes0
+            self.milp_times_ms.append(milp_ms)
+
+        if scenario is None:
+            from repro.runtime.scenario import PoissonArrivals, Scenario
+            scenario = Scenario.multi(
+                {n: PoissonArrivals(float(demands[n]))
+                 for n in self.graphs},
+                duration_s=sim_seconds,
+                warmup_s=min(3.0, sim_seconds / 4))
+        from repro.runtime.cluster import ClusterRuntime
+        bin_seconds = next(iter(self.frontends.values())).bin_seconds
+        runtime = ClusterRuntime.multi(
+            {n: (g, self._plan.plans[n]) for n, g in self.graphs.items()},
+            self.backend, seed=seed, staleness_ms=self.staleness_ms,
+            frontends=self.frontends,
+            time_base_s=bin_idx * bin_seconds)
+        metrics = runtime.run(scenario)
+        per_app: Dict[str, AppBinReport] = {}
+        for n, g in self.graphs.items():
+            self.frontends[n].extrapolate_bin(bin_idx, scenario.duration_s)
+            mm = metrics.app(n)
+            per_app[n] = AppBinReport(
+                app=n,
+                demand_actual=float(demands[n]),
+                demand_predicted=predicted[n],
+                slices_used=self._plan.plans[n].slices,
+                violation_rate=mm.violation_rate,
+                accuracy_drop_pct=(1.0 - mm.realized_a_obj(g)) * 100.0,
+                completions=mm.completions,
+                p99_ms=mm.p99_ms,
+            )
+        return MultiBinReport(
+            bin_idx=bin_idx,
+            replanned=replanned,
+            milp_ms=milp_ms,
+            slices_used=self._plan.slices,
+            warm_replan=warm_replan,
+            milp_nodes=milp_nodes,
+            per_app=per_app,
+        )
+
+    # ------------------------------------------------------------------
+    def place(self) -> Optional[List[Placement]]:
+        """Pack ALL apps' slices onto the shared pools' devices — the
+        apps' instances are interleaved per pool exactly as they compete
+        in the MILP.  Returns None if any pool refuses its mix."""
+        if self._plan is None:
+            return None
+        by_pool: Dict[str, List[str]] = {}
+        for cfg in self._plan.plans.values():
+            for tup, m in cfg.instances():
+                by_pool.setdefault(tup.pool, []).extend([tup.segment] * m)
+        return _pack_pools(self.cluster, by_pool, self.num_pods)

@@ -19,16 +19,25 @@ from repro.core.taskgraph import TaskGraph
 
 @dataclass
 class RequestMeta:
+    """Stamped intake metadata: the id/deadline pair the runtime attaches
+    to every root request, tagged with the owning app ("" single-app)."""
     req_id: int
     arrival_s: float
     deadline_s: float
+    app: str = ""
 
 
 @dataclass
 class Frontend:
+    """One app's intake.  A multi-app deployment runs one Frontend per
+    co-located app (the ``app`` tag rides on every stamped
+    :class:`RequestMeta`), each owning that app's demand bins, violation
+    window and re-plan trigger — the controller re-plans JOINTLY when any
+    of them fires (see ``repro.core.controller.MultiAppController``)."""
     graph: TaskGraph
     bin_seconds: float = 300.0
     comm_hop_ms: float = 10.0     # paper §4.4: per-hop communication latency
+    app: str = ""                 # owning app tag (multi-app deployments)
 
     def __post_init__(self):
         self._ids = itertools.count()
@@ -57,7 +66,7 @@ class Frontend:
             self._bin_counts.append(0)
         self._bin_counts[b] += 1
         return RequestMeta(next(self._ids), now_s,
-                           now_s + self.effective_slo_ms / 1e3)
+                           now_s + self.effective_slo_ms / 1e3, self.app)
 
     def record_bin_outcome(self, requests: int, violations: int):
         """Fold a bin's datapath outcome into the trigger state — always

@@ -22,6 +22,12 @@ capacity row PER POOL (Σ cost·x ≤ pool budget) and the objective prices
 each slice by its pool's ``slice_price``.  A single-pool cluster (the
 default) collapses to the legacy scalar ``s_avail`` formulation
 bit-for-bit, so pre-hwspec plans are reproduced exactly.
+
+Multi-app co-location (DESIGN.md §11): :class:`JointPlanner` plans
+SEVERAL compound apps in one solve.  Task variables are namespaced
+``app::task``; latency (Eq. 3) and accuracy (Eq. 9-13) rows stay per
+app, the per-pool Eq. 8 capacity rows are shared, and the result is a
+:class:`JointPlan` holding one ordinary :class:`PlanConfig` per app.
 """
 from __future__ import annotations
 
@@ -36,11 +42,12 @@ from repro.core import accuracy as acc_mod
 from repro.core.profiler import ProfileEntry, Profiler
 from repro.core.solver.branch_bound import MILPResult, solve_milp
 from repro.core.solver.simplex import BasisState, BoundedSimplex
-from repro.core.taskgraph import TaskGraph
+from repro.core.taskgraph import TaskGraph, qualify, split_qualified
 from repro.hwspec import (ClusterSpec, DEFAULT_POOL, ExplicitScheme,
                           TorusScheme)
 
 Key = Tuple[str, str, str, int]
+Path = Tuple[str, ...]
 
 # geometric grid for instance-cap quantization: caps (and with them the
 # whole constraint matrix) stay identical while demand moves within one
@@ -88,6 +95,29 @@ class _Assembled:
     ix_L: Dict[str, int]
     ix_z: Dict[Tuple[str, int], int]
     nvar: int
+
+
+@dataclass
+class _AppBlock:
+    """Per-app constraint block of one (possibly joint) solve.
+
+    A solve takes a LIST of blocks: the single-app planner passes one,
+    the :class:`JointPlanner` one per co-located app.  Task names inside
+    ``paths``/``w`` are qualified (``app::task`` — see
+    ``taskgraph.qualify``); capacity rows are NOT in the block because
+    pools are shared across apps (DESIGN.md §11)."""
+    app: str                       # "" = the legacy single-app namespace
+    paths: Tuple[Path, ...]        # request paths over qualified tasks
+    slo_l: float                   # this app's latency SLO (Eq. 3 rhs)
+    slo_a: float                   # this app's accuracy SLO (Eq. 13 rhs)
+    amax: float                    # this app's A_max normalizer
+    w: Dict[str, float]            # qualified task -> path weight (Eq. 12)
+
+    @property
+    def sig(self) -> tuple:
+        """Hashable identity for the matrix-cache key (paths/w/amax are
+        functions of the app's graph, fixed for a planner's lifetime)."""
+        return (self.app, round(self.slo_l, 9), round(self.slo_a, 12))
 
 
 @dataclass(frozen=True)
@@ -404,8 +434,10 @@ class Planner:
             for j in adm:
                 task_tuples[t].append(len(tuples))
                 tuples.append(j)
-        return self._solve(tuples, task_tuples, demand,
-                           slo_l=g.slo_latency_ms, slo_a=g.slo_accuracy,
+        w, paths, amax = self._weights(tasks, None)
+        block = _AppBlock("", tuple(paths), g.slo_latency_ms,
+                          g.slo_accuracy, amax, w)
+        return self._solve(tuples, task_tuples, demand, blocks=[block],
                            budgets=self.pool_budgets())
 
     # ------------------------------------------------------------------
@@ -468,10 +500,12 @@ class Planner:
             # single-pool case reduces to the legacy int(res_budget[t]))
             sub_budgets = {p: int(b * exp_res[t] / total_res)
                            for p, b in full_budgets.items()}
+            w1, paths1, amax1 = self._weights([t], t)
+            block = _AppBlock("", tuple(paths1), 2.0 * lat_budget[t],
+                              acc_floor[t], amax1, w1)
             sub = self._solve(
                 adm, {t: list(range(len(adm)))}, {t: demand[t]},
-                slo_l=2.0 * lat_budget[t], slo_a=acc_floor[t],
-                budgets=sub_budgets, single_task=t)
+                blocks=[block], budgets=sub_budgets, single_task=t)
             if sub is None:
                 return None
             counts.update(sub.counts)
@@ -487,12 +521,18 @@ class Planner:
     # ------------------------------------------------------------------
     def _assemble(self, tuples: List[TupleVar],
                   task_tuples: Dict[str, List[int]], caps: np.ndarray,
-                  *, slo_l: float, slo_a: float, budgets: Dict[str, int],
+                  *, blocks: Sequence[_AppBlock], budgets: Dict[str, int],
                   single_task: Optional[str]) -> _Assembled:
         """Build the demand-independent MILP matrices (throughput rhs is a
-        template patched per solve)."""
-        g = self.graph
+        template patched per solve).
+
+        ``blocks`` carries the per-app rows: latency paths (Eq. 3),
+        accuracy bound (Eq. 12-13) and objective accuracy weights are
+        emitted per block, while the Eq. 8 capacity rows are shared —
+        that sharing is what makes a multi-block solve a JOINT plan."""
         tasks = list(task_tuples)
+        # per-task app attribution (tasks are disjoint across blocks)
+        blk_of: Dict[str, _AppBlock] = {t: b for b in blocks for t in b.w}
         nj = len(tuples)
         # accuracy grid per task: distinct variant accuracies (floors)
         grid = {t: sorted({j.accuracy for i in task_tuples[t]
@@ -511,8 +551,6 @@ class Planner:
                 z_off += 1
         nvar = z_off
 
-        w, paths, amax = self._weights(tasks, single_task)
-
         rows, rhs = [], []
 
         def add(row: Dict[int, float], b: float):
@@ -527,9 +565,10 @@ class Planner:
         for t in tasks:
             for i in task_tuples[t]:
                 add({ix_y[i]: tuples[i].latency_ms, ix_L[t]: -1.0}, 0.0)
-        # Eq.3 per path: Σ 2*Lhat <= SLO_l
-        for p in paths:
-            add({ix_L[t]: 2.0 for t in p if t in ix_L}, slo_l)
+        # Eq.3 per app per path: Σ 2*Lhat <= that app's SLO_l
+        for blk in blocks:
+            for p in blk.paths:
+                add({ix_L[t]: 2.0 for t in p if t in ix_L}, blk.slo_l)
         # Eq.6 throughput: -Σ x*H <= -R̂(t)  (rhs patched with live demand)
         tput_rows = {}
         for t in tasks:
@@ -553,11 +592,13 @@ class Planner:
                        * tuples[i].throughput for i in task_tuples[t]}
                 row[ix_z[(t, k)]] = bigM_a[t]
                 add(row, bigM_a[t])
-        # Weierstrass path bound (Eq.12-13 linearized):
+        # Weierstrass path bound (Eq.12-13 linearized), one row PER APP:
         # Σ_t w_t Σ_k g_tk z_tk >= slo_a*amax - 1 + Σ w_t
-        row = {ix_z[(t, k)]: -w[t] * grid[t][k]
-               for t in tasks for k in range(nz[t])}
-        add(row, 1.0 - sum(w.values()) - slo_a * amax)
+        for blk in blocks:
+            row = {ix_z[(t, k)]: -blk.w[t] * grid[t][k]
+                   for t in tasks if blk_of[t] is blk
+                   for k in range(nz[t])}
+            add(row, 1.0 - sum(blk.w.values()) - blk.slo_a * blk.amax)
 
         # equalities: Σ_k z_tk = 1
         eq_rows, eq_rhs = [], []
@@ -565,21 +606,23 @@ class Planner:
             eq_rows.append({ix_z[(t, k)]: 1.0 for k in range(nz[t])})
             eq_rhs.append(1.0)
 
-        # objective (min): β Σ price·x − (α/amax) Σ w_t g_tk z_tk, where
+        # objective (min): β Σ price·x − Σ_apps (α/amax) Σ w_t g_tk z_tk,
         # price = cost × the pool's slice_price (1.0 → legacy β Σ cost x)
         c = np.zeros(nvar)
         for i in range(nj):
             c[ix_x[i]] = (self.beta * tuples[i].cost
                           * self._price(tuples[i].pool))
         for t in tasks:
+            blk = blk_of[t]
             for k in range(nz[t]):
-                c[ix_z[(t, k)]] = -self.alpha * w[t] * grid[t][k] / amax
+                c[ix_z[(t, k)]] = (-self.alpha * blk.w[t] * grid[t][k]
+                                   / blk.amax)
 
         ub = np.full(nvar, np.inf)
         ub[ix_x] = caps
         ub[ix_y] = 1.0
         for t in tasks:
-            ub[ix_L[t]] = slo_l / 2.0
+            ub[ix_L[t]] = blk_of[t].slo_l / 2.0
             for k in range(nz[t]):
                 ub[ix_z[(t, k)]] = 1.0
 
@@ -614,10 +657,9 @@ class Planner:
 
     def _solve(self, tuples: List[TupleVar],
                task_tuples: Dict[str, List[int]],
-               demand: Dict[str, float], *, slo_l: float, slo_a: float,
+               demand: Dict[str, float], *, blocks: Sequence[_AppBlock],
                budgets: Dict[str, int], single_task: Optional[str] = None
-               ) -> Optional[PlanConfig]:
-        g = self.graph
+               ) -> Optional["PlanConfig"]:
         if self.prune_dominated:
             tuples, task_tuples = _prune_dominated(tuples, task_tuples)
         tasks = list(task_tuples)
@@ -632,13 +674,13 @@ class Planner:
 
         cache_key = (single_task, tuple(tuples),
                      tuple(int(cp) for cp in caps),
-                     round(slo_l, 9), round(slo_a, 12),
+                     tuple(b.sig for b in blocks),
                      tuple(sorted(budgets.items())))
         asm = self._matrix_cache.pop(cache_key, None)
         if asm is None:
             self.stats.matrix_cache_misses += 1
             asm = self._assemble(tuples, task_tuples, caps,
-                                 slo_l=slo_l, slo_a=slo_a, budgets=budgets,
+                                 blocks=blocks, budgets=budgets,
                                  single_task=single_task)
         else:
             self.stats.matrix_cache_hits += 1
@@ -651,20 +693,13 @@ class Planner:
         for t in tasks:
             b_ub[asm.tput_rows[t]] = -demand[t]
 
-        w, _, amax = self._weights(tasks, single_task)
         grid = asm.grid
         ix_x, ix_y, ix_L, ix_z = asm.ix_x, asm.ix_y, asm.ix_L, asm.ix_z
         nvar = asm.nvar
 
-        def make_cfg(counts: Dict[Key, int]) -> PlanConfig:
-            return PlanConfig(g, counts,
-                              {j.key: j for j in tuples},
-                              dict(demand), pool_budgets=dict(budgets))
-
         def repair(xfrac: np.ndarray) -> Optional[np.ndarray]:
             counts = self._repair(xfrac[ix_x], tuples, task_tuples, demand,
-                                  slo_l, slo_a, budgets, grid, w, amax,
-                                  single_task)
+                                  blocks, budgets, grid)
             if counts is None:
                 return None
             return self._lift(counts, tuples, task_tuples, grid, nvar,
@@ -695,16 +730,27 @@ class Planner:
             return None
         counts = {tuples[i].key: int(round(res.x[ix_x[i]]))
                   for i in range(nj) if res.x[ix_x[i]] > 0.5}
-        cfg = make_cfg(counts)
+        return self._package(counts, tuples, demand, budgets, blocks,
+                             single_task)
+
+    # ------------------------------------------------------------------
+    def _package(self, counts: Dict[Key, int], tuples: List[TupleVar],
+                 demand: Dict[str, float], budgets: Dict[str, int],
+                 blocks: Sequence[_AppBlock],
+                 single_task: Optional[str]) -> Optional["PlanConfig"]:
+        """Integer solution → validated result (JointPlanner overrides
+        this to split the namespaced counts into per-app plans)."""
+        cfg = PlanConfig(self.graph, counts, {j.key: j for j in tuples},
+                         dict(demand), pool_budgets=dict(budgets))
         # exact re-validation (one-sided bound ⇒ should always pass)
-        if single_task is None and not cfg.feasible(slo_l, slo_a,
-                                                    self.s_avail):
+        if single_task is None and not cfg.feasible(
+                blocks[0].slo_l, blocks[0].slo_a, self.s_avail):
             return None
         return cfg
 
     # ------------------------------------------------------------------
     def _repair(self, x: np.ndarray, tuples, task_tuples, demand,
-                slo_l, slo_a, budgets, grid, w, amax, single_task
+                blocks: Sequence[_AppBlock], budgets, grid
                 ) -> Optional[Dict[Key, int]]:
         """LP point → integer-feasible counts (exact-semantics greedy).
 
@@ -714,10 +760,10 @@ class Planner:
         floor, then trim.  If LP-guided fill fails, rebuild from scratch
         with a delete-worst latency loop.  Capacity is tracked per pool
         (``budgets``) so the greedy never overfills one pool while its
-        peer has room."""
+        peer has room; latency and accuracy targets are tracked per app
+        block (a task only competes on its own app's paths and SLOs)."""
         tasks = list(task_tuples)
-        paths = ([(single_task,)] if single_task is not None
-                 else self.graph.paths)
+        blk_of: Dict[str, _AppBlock] = {t: b for b in blocks for t in b.w}
 
         def attempt(seed: Dict[int, int]) -> Optional[Dict[int, int]]:
             counts = dict(seed)
@@ -750,17 +796,18 @@ class Planner:
                 return max(ls) if ls else 0.0
 
             def path_ok():
-                return all(sum(2.0 * lhat(t) for t in p) <= slo_l + 1e-9
-                           for p in paths)
+                return all(sum(2.0 * lhat(t) for t in p) <= blk.slo_l + 1e-9
+                           for blk in blocks for p in blk.paths)
 
             def budget(t):
                 """Max 2·L a new tuple of task t may have, given others."""
+                blk = blk_of[t]
                 b = math.inf
-                for p in paths:
+                for p in blk.paths:
                     if t not in p:
                         continue
                     used = sum(2.0 * lhat(t2) for t2 in p if t2 != t)
-                    b = min(b, slo_l - used)
+                    b = min(b, blk.slo_l - used)
                 return max(b, 2.0 * lhat(t))  # existing lhat already charged
 
             def floor_acc(t):
@@ -774,9 +821,81 @@ class Planner:
                 lv = [gk for gk in grid[t] if gk <= a + 1e-9]
                 return lv[-1] if lv else 0.0
 
+            def acc_block_ok(blk):
+                tot = sum(blk.w[t] * floor_acc(t) for t in blk.w)
+                return (tot >= blk.slo_a * blk.amax - 1.0
+                        + sum(blk.w.values()) - 1e-9)
+
+            def failing_block():
+                for blk in blocks:
+                    if not acc_block_ok(blk):
+                        return blk
+                return None
+
             def acc_lb_ok():
-                tot = sum(w[t] * floor_acc(t) for t in w)
-                return tot >= slo_a * amax - 1.0 + sum(w.values()) - 1e-9
+                return failing_block() is None
+
+            def reshape_mates(worst: str) -> bool:
+                """Free latency budget for ``worst``'s accuracy swap by
+                speeding up its slowest path mate: replace that task's
+                deployment with a faster tuple type of >= its current
+                accuracy floor.  The one coupled move the greedy needs —
+                without it, a slow-but-cheap mate deployment can make the
+                only affordable top-accuracy tuples of ``worst`` look
+                latency-infeasible forever."""
+                blk = blk_of[worst]
+                mates = {t2 for p in blk.paths if worst in p
+                         for t2 in p if t2 != worst and lhat(t2) > 0.0}
+                for t2 in sorted(mates, key=lambda t2: -lhat(t2)):
+                    cur = [i for i, mm in counts.items()
+                           if mm > 0 and tuples[i].task == t2]
+                    freed: Dict[str, int] = {}
+                    for i in cur:
+                        freed[tuples[i].pool] = (freed.get(tuples[i].pool,
+                                                           0)
+                                                 + tuples[i].cost
+                                                 * counts[i])
+                    floor_now = floor_acc(t2)
+                    best = None
+                    for j in task_tuples[t2]:
+                        jt = tuples[j]
+                        if (jt.latency_ms >= lhat(t2) - 1e-9
+                                or jt.accuracy < floor_now - 1e-12):
+                            continue
+                        n = max(1, math.ceil(demand[t2]
+                                             / max(jt.throughput, 1e-9)))
+                        if n * jt.cost > (room(jt.pool)
+                                          + freed.get(jt.pool, 0)):
+                            continue
+                        rank = (n * jt.cost, jt.latency_ms)
+                        if best is None or rank < best[0]:
+                            best = (rank, j, n)
+                    if best is None:
+                        continue
+                    _, j, n = best
+                    for i in cur:
+                        bump(i, -counts[i])
+                    bump(j, n)
+                    return True
+                return False
+
+            def shed_low_acc() -> bool:
+                """Drop low-accuracy instances that throughput no longer
+                needs (LP-node seeds can arrive bloated): monotone — only
+                frees pool room and can only raise accuracy floors."""
+                freed = False
+                for i in sorted(list(counts), key=lambda i: -tuples[i].cost):
+                    t = tuples[i].task
+                    if tuples[i].accuracy >= grid[t][-1] - 1e-12:
+                        continue
+                    while counts.get(i, 0) > 0:
+                        bump(i, -1)
+                        if tput(t) >= demand[t] - 1e-9:
+                            freed = True
+                            continue
+                        bump(i, 1)
+                        break
+                return freed
 
             if not path_ok():
                 return None
@@ -805,13 +924,13 @@ class Planner:
                 if tput(t) < demand[t] - 1e-9:
                     return None
 
-            # 2. fix the accuracy lower bound
+            # 2. fix the accuracy lower bound (per failing app block)
             guard = 0
-            while not acc_lb_ok() and guard < 500:
+            while (blk := failing_block()) is not None and guard < 500:
                 guard += 1
                 worst, gain = None, 0.0
-                for t in w:
-                    gp = (grid[t][-1] - floor_acc(t)) * w[t]
+                for t in blk.w:
+                    gp = (grid[t][-1] - floor_acc(t)) * blk.w[t]
                     if gp > gain:
                         worst, gain = t, gp
                 if worst is None:
@@ -835,6 +954,12 @@ class Planner:
                                                + drop_by_pool.get(
                                                    tuples[i].pool, 0))]
                 if not cand:
+                    # no top-accuracy tuple fits the latency budget or the
+                    # pool room — free latency budget (reshape a path
+                    # mate) or pool room (shed bloated low-accuracy
+                    # excess) and retry, bounded by the loop guard
+                    if reshape_mates(worst) or shed_low_acc():
+                        continue
                     return None
                 best = min(cand, key=lambda i: (tuples[i].cost
                            / max(tuples[i].throughput, 1e-9),
@@ -872,6 +997,17 @@ class Planner:
                     return None
             return counts
 
+        def attempt_restricted(keep: Dict[str, List[int]]
+                               ) -> Optional[Dict[int, int]]:
+            saved = dict(task_tuples)
+            try:
+                for t in tasks:
+                    task_tuples[t] = keep[t]
+                return attempt({})
+            finally:
+                for t in tasks:
+                    task_tuples[t] = saved[t]
+
         # try LP-guided seed first
         seed = {i: int(math.floor(x[i] + 1e-6)) for i in range(len(tuples))
                 if x[i] > 1e-6}
@@ -879,24 +1015,101 @@ class Planner:
         if counts is None and seed:
             counts = attempt({})
         if counts is None:
+            # accuracy-first: restrict every task to its top-accuracy
+            # variants, making the fill accuracy-feasible by construction
+            # and free to spill across pools.  (The step-2 accuracy swap
+            # can strand itself when co-located tasks have already filled
+            # the only pool whose top-accuracy tuples fit the latency
+            # budget — a joint-plan load pattern.)
+            counts = attempt_restricted({
+                t: ([i for i in task_tuples[t]
+                     if tuples[i].accuracy >= grid[t][-1] - 1e-12]
+                    or task_tuples[t])
+                for t in tasks})
+        if counts is None:
             # delete-worst: start empty, but pre-restrict each task to its
             # fastest half of tuples and retry (handles tight joint SLOs)
-            restricted = {}
-            for t in tasks:
-                idxs = sorted(task_tuples[t],
-                              key=lambda i: tuples[i].latency_ms)
-                restricted[t] = idxs[: max(1, len(idxs) // 2)]
-            saved = dict(task_tuples)
-            try:
-                for t in tasks:
-                    task_tuples[t] = restricted[t]
-                counts = attempt({})
-            finally:
-                for t in tasks:
-                    task_tuples[t] = saved[t]
+            counts = attempt_restricted({
+                t: sorted(task_tuples[t],
+                          key=lambda i: tuples[i].latency_ms
+                          )[: max(1, len(task_tuples[t]) // 2)]
+                for t in tasks})
         if counts is None:
+            if len(blocks) > 1:
+                return self._repair_sequential(x, tuples, task_tuples,
+                                               demand, blocks, budgets,
+                                               grid)
             return None
         return {tuples[i].key: m for i, m in counts.items() if m > 0}
+
+    def _repair_sequential(self, x, tuples, task_tuples, demand,
+                           blocks: Sequence[_AppBlock], budgets, grid
+                           ) -> Optional[Dict[Key, int]]:
+        """Joint-repair fallback: repair each app ALONE against a slice
+        of the pool budgets, trying both app orders.  Valid because apps
+        share no constraint rows except the Eq. 8 capacity rows — per-app
+        feasible configs that together fit the budgets are jointly
+        feasible.  The simultaneous greedy can strand a capacity-hungry
+        app when a cheaper co-located app grabbed its latency-critical
+        pool first; sequencing the full single-app ladder per app
+        sidesteps that interaction.
+
+        Each non-final app is first capped at its LP-proportional pool
+        share (root LP usage + an even split of the LP slack) so an
+        early app's cost-greedy cannot exhaust a shared hot pool the
+        later apps need; if the capped pass fails, the uncapped residual
+        pass is tried as well."""
+        by_key = {j.key: j for j in tuples}
+        napp = len(blocks)
+        # per-app fractional pool usage at the LP point
+        lp_use: Dict[str, Dict[str, float]] = {b.app: {} for b in blocks}
+        for blk in blocks:
+            for t in blk.w:
+                for i in task_tuples.get(t, ()):
+                    if x[i] > 1e-9:
+                        d = lp_use[blk.app]
+                        p = tuples[i].pool
+                        d[p] = d.get(p, 0.0) + x[i] * tuples[i].cost
+        slack = {p: budgets[p] - sum(lp_use[b.app].get(p, 0.0)
+                                     for b in blocks) for p in budgets}
+
+        def run(order: Tuple[_AppBlock, ...], capped: bool
+                ) -> Optional[Dict[Key, int]]:
+            remaining = dict(budgets)
+            merged: Dict[Key, int] = {}
+            for k, blk in enumerate(order):
+                if capped and k < napp - 1:
+                    eff = {p: min(remaining[p],
+                                  math.ceil(lp_use[blk.app].get(p, 0.0)
+                                            - 1e-9)
+                                  + max(0, int(slack.get(p, 0.0) // napp)))
+                           for p in remaining}
+                else:
+                    eff = dict(remaining)
+                sub_tt = {t: task_tuples[t] for t in blk.w
+                          if t in task_tuples}
+                # zero the LP seed outside this app so the sub-repair
+                # neither charges nor deploys other apps' tuples
+                xm = np.zeros_like(x)
+                for idxs in sub_tt.values():
+                    xm[idxs] = x[idxs]
+                sub = self._repair(xm, tuples, sub_tt, demand, [blk],
+                                   eff, grid)
+                if sub is None:
+                    return None
+                for key, m in sub.items():
+                    j = by_key[key]
+                    remaining[j.pool] = remaining.get(j.pool, 0) \
+                        - j.cost * m
+                merged.update(sub)
+            return merged
+
+        for capped in (True, False):
+            for order in (tuple(blocks), tuple(reversed(blocks))):
+                merged = run(order, capped)
+                if merged is not None:
+                    return merged
+        return None
 
     # ------------------------------------------------------------------
     def _lift(self, counts: Dict[Key, int], tuples, task_tuples, grid,
@@ -921,6 +1134,223 @@ class Planner:
             ks = [k for k, gk in enumerate(grid[t]) if gk <= a + 1e-9]
             xv[ix_z[(t, ks[-1] if ks else 0)]] = 1.0
         return xv
+
+
+# ---------------------------------------------------------------------------
+# Multi-app co-location (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class AppSpec:
+    """One co-located application: its task graph plus a profiler whose
+    tables were built on the SHARED :class:`ClusterSpec` all the
+    co-located apps compete for."""
+    name: str
+    graph: TaskGraph
+    profiler: Profiler
+
+
+@dataclass
+class JointPlan:
+    """Result of one joint multi-app solve: per-app deployments that were
+    optimized TOGETHER against shared per-pool capacity rows.
+
+    ``plans[app]`` is an ordinary single-app :class:`PlanConfig` (plain
+    task names — runtime and placement consume it unchanged); the joint
+    coupling lives only in how the counts were chosen."""
+    plans: Dict[str, PlanConfig]       # app name -> per-app deployment
+    pool_budgets: Dict[str, int]       # the shared Eq. 8 rhs of the solve
+    demand: Dict[str, float]           # entry-task demand (rps) per app
+
+    @property
+    def slices(self) -> int:
+        return sum(cfg.slices for cfg in self.plans.values())
+
+    def pool_slices(self) -> Dict[str, int]:
+        """COMBINED capacity units used per pool, across all apps."""
+        out: Dict[str, int] = {}
+        for cfg in self.plans.values():
+            for p, u in cfg.pool_slices().items():
+                out[p] = out.get(p, 0) + u
+        return out
+
+    def app(self, name: str) -> PlanConfig:
+        return self.plans[name]
+
+
+class JointPlanner(Planner):
+    """Joint configuration MILP over several co-located apps on ONE
+    cluster (DESIGN.md §11).
+
+    Variables are namespaced per app (``app::task``); Eq. 3 latency
+    paths, the Eq. 9-13 accuracy rows and the objective's accuracy terms
+    are emitted PER APP, while the Eq. 8 capacity rows are SHARED so the
+    apps compete for the same pool slices in a single solve.  Matrix
+    caching and warm starts (DESIGN.md §7) work exactly as in the
+    single-app planner: while every app's quantized demand stays inside
+    its cap band, re-plans hit the cached matrices and warm-start from
+    the previous solve's basis and incumbent.
+
+    Construction takes a sequence of :class:`AppSpec` whose profilers
+    must share one cluster; ``s_avail`` caps the TOTAL capacity across
+    pools exactly as for :class:`Planner`.  Per-solve knobs
+    (``max_tuples_per_task``, ``bb_nodes``, ...) pass through
+    ``planner_kwargs`` to both the joint solve and the per-app
+    admissibility filters.
+    """
+
+    def __init__(self, apps: Sequence[AppSpec], s_avail: int, *,
+                 features: Optional[FeatureSet] = None, alpha: float = 1.0,
+                 beta: Optional[float] = None,
+                 cluster: Optional[ClusterSpec] = None, **planner_kwargs):
+        if not apps:
+            raise ValueError("JointPlanner needs at least one app")
+        names = [a.name for a in apps]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate app names: {names}")
+        if any(not a.name for a in apps):
+            raise ValueError("app names must be non-empty")
+        ref = apps[0].profiler.cluster
+        for a in apps[1:]:
+            if a.profiler.cluster != ref:
+                raise ValueError(
+                    f"app {a.name!r} was profiled on a different cluster "
+                    "— all co-located apps must share one ClusterSpec")
+        features = features if features is not None else FeatureSet()
+        self.apps = tuple(apps)
+        # per-app sub-planners own the admissible-tuple caches (each app
+        # filters against its own latency SLO and variant set)
+        self._subs = {a.name: Planner(a.graph, a.profiler, s_avail,
+                                      features=features, cluster=cluster,
+                                      **planner_kwargs)
+                      for a in apps}
+        super().__init__(apps[0].graph, apps[0].profiler, s_avail,
+                         features=features, alpha=alpha, beta=beta,
+                         cluster=cluster, **planner_kwargs)
+
+    # ------------------------------------------------------------------
+    def invalidate_caches(self) -> None:
+        super().invalidate_caches()
+        for sub in self._subs.values():
+            sub.invalidate_caches()
+
+    def plan(self, demand_rps, fbar=None):
+        raise TypeError("JointPlanner plans several apps at once — call "
+                        "plan_joint({app: rps, ...}) instead of plan()")
+
+    # ------------------------------------------------------------------
+    def plan_joint(self, demands: Mapping[str, float],
+                   fbar: Optional[Mapping[str, Mapping]] = None
+                   ) -> Optional[JointPlan]:
+        """Solve ONE joint configuration MILP at per-app entry demands.
+
+        ``demands`` maps app name → entry-task rps (apps absent from the
+        mapping get zero demand and an empty deployment); ``fbar``
+        optionally maps app name → that app's observed multiplicative
+        factors (paper §3.2).  Returns a :class:`JointPlan`, or None when
+        no configuration serves every app's demand and SLOs inside the
+        shared pool budgets."""
+        tuples: List[TupleVar] = []
+        task_tuples: Dict[str, List[int]] = {}
+        demand: Dict[str, float] = {}
+        blocks: List[_AppBlock] = []
+        for a in self.apps:
+            g = a.graph
+            sub = self._subs[a.name]
+            fb = (fbar or {}).get(a.name)
+            d = {t: r / self.headroom
+                 for t, r in g.demand_at_tasks(
+                     float(demands.get(a.name, 0.0)), fb).items()}
+            for t in g.tasks:
+                adm = sub._admissible(t)
+                if not adm:
+                    return None
+                qt = qualify(a.name, t)
+                demand[qt] = d[t]
+                task_tuples[qt] = []
+                for j in adm:
+                    task_tuples[qt].append(len(tuples))
+                    tuples.append(dataclasses.replace(j, task=qt))
+            w = {qualify(a.name, t):
+                 sum(f for p, f in g.path_fractions.items() if t in p)
+                 for t in g.tasks}
+            paths = tuple(tuple(qualify(a.name, t) for t in p)
+                          for p in g.paths)
+            blocks.append(_AppBlock(a.name, paths, g.slo_latency_ms,
+                                    g.slo_accuracy, acc_mod.a_max(g), w))
+        return self._solve(tuples, task_tuples, demand, blocks=blocks,
+                           budgets=self.pool_budgets())
+
+    # ------------------------------------------------------------------
+    def max_total_scale(self, mix: Mapping[str, float], hi_cap: float = 1e6
+                        ) -> Tuple[Optional[JointPlan], float]:
+        """Largest λ such that demands ``λ·mix`` are jointly plannable
+        (geometric doubling then bisection — the joint analogue of
+        ``Controller._search_max_demand``).  Returns (plan, λ)."""
+        def at(lam: float) -> Optional[JointPlan]:
+            return self.plan_joint({a: lam * r for a, r in mix.items()})
+
+        lo, hi = 0.0, 1.0
+        best: Optional[JointPlan] = None
+        while hi <= hi_cap:
+            p = at(hi)
+            if p is None:
+                break
+            best, lo = p, hi
+            hi *= 2
+        for _ in range(6):
+            mid = (lo + hi) / 2
+            p = at(mid)
+            if p is not None:
+                best, lo = p, mid
+            else:
+                hi = mid
+        return best, lo
+
+    # ------------------------------------------------------------------
+    def _package(self, counts, tuples, demand, budgets, blocks,
+                 single_task) -> Optional[JointPlan]:
+        """Namespaced integer solution → per-app validated JointPlan."""
+        per_counts: Dict[str, Dict[Key, int]] = {a.name: {}
+                                                 for a in self.apps}
+        per_tuples: Dict[str, Dict[Key, TupleVar]] = {a.name: {}
+                                                      for a in self.apps}
+        by_key = {j.key: j for j in tuples}
+        for key, m in counts.items():
+            app, t = split_qualified(key[0])
+            pkey = (t,) + key[1:]
+            per_counts[app][pkey] = m
+            per_tuples[app][pkey] = dataclasses.replace(by_key[key], task=t)
+        plans: Dict[str, PlanConfig] = {}
+        entry_demand: Dict[str, float] = {}
+        for a in self.apps:
+            g = a.graph
+            app_demand = {t: demand[qualify(a.name, t)] for t in g.tasks}
+            cfg = PlanConfig(g, per_counts[a.name], per_tuples[a.name],
+                             app_demand, pool_budgets=dict(budgets))
+            # exact per-app re-validation: latency, throughput and the
+            # exact accuracy evaluator against THIS app's SLOs (an empty
+            # deployment is only acceptable at zero demand)
+            if cfg.counts:
+                if not cfg.feasible(g.slo_latency_ms, g.slo_accuracy,
+                                    self.s_avail):
+                    return None
+            elif any(r > 1e-9 for r in app_demand.values()):
+                return None
+            plans[a.name] = cfg
+            entry_demand[a.name] = (app_demand.get(g.entry, 0.0)
+                                    * self.headroom)
+        # shared capacity: the COMBINED per-pool usage must fit the
+        # budgets the solve shared across apps
+        used: Dict[str, int] = {}
+        for cfg in plans.values():
+            for p, u in cfg.pool_slices().items():
+                used[p] = used.get(p, 0) + u
+        if sum(used.values()) > self.s_avail:
+            return None
+        for p, u in used.items():
+            if u > budgets.get(p, 0):
+                return None
+        return JointPlan(plans, dict(budgets), entry_demand)
 
 
 # ---------------------------------------------------------------------------

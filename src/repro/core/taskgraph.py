@@ -13,6 +13,25 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 Path = Tuple[str, ...]
 
+# Multi-app namespacing (DESIGN.md §11): when several compound apps are
+# planned in one joint MILP or served by one runtime, task names are
+# qualified "app::task" so per-app variables, queues and metrics never
+# collide.  The empty app name ("") is the single-app legacy namespace
+# and qualifies to the bare task name.
+APP_SEP = "::"
+
+
+def qualify(app: str, task: str) -> str:
+    """Namespace ``task`` under ``app`` ("" → the bare task name)."""
+    return f"{app}{APP_SEP}{task}" if app else task
+
+
+def split_qualified(qtask: str) -> Tuple[str, str]:
+    """Inverse of :func:`qualify`: ``"app::task" → (app, task)``;
+    an unqualified name maps to the legacy ("", task) namespace."""
+    app, sep, task = qtask.partition(APP_SEP)
+    return (app, task) if sep else ("", qtask)
+
 
 @dataclass(frozen=True)
 class Variant:

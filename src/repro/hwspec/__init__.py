@@ -16,6 +16,36 @@ module-level TPU v5e constants:
   price; every layer (profiler tables, MILP capacity rows, packers,
   runtime capacity events) keys on this.
 
+Worked example — a MIG pool next to a TPU pod, profiled and planned
+end to end::
+
+    from repro.core import Planner, Profiler
+    from repro.core.apps import get_app
+    from repro.hwspec import (A100_40GB, ClusterSpec, MigScheme, Pool,
+                              TorusScheme, TPU_V5E)
+
+    cluster = ClusterSpec(pools=(
+        # 16 v5e chips, legacy power-of-two rectangle slices (1 capacity
+        # unit per chip -> 16 units)
+        Pool("v5e", TPU_V5E, 16, TorusScheme(max_chips=8)),
+        # 2 MIG-capable A100s: each carves into 1g/2g/3g/4g/7g slices
+        # with per-slice memory + NVIDIA start-offset placement rules
+        # (7 g-units per device -> 14 units), priced 20% cheaper
+        Pool("mig", A100_40GB, 2, MigScheme(), slice_price=0.8),
+    ))
+    graph = get_app("social_media")
+    prof = Profiler(graph, cluster=cluster)       # per-(pool, slice) L/H
+    planner = Planner(graph, prof, s_avail=cluster.total_units)
+    cfg = planner.plan(120.0)                     # Eq. 8 row PER POOL
+    print(cfg.pool_slices())                      # {'v5e': 6} — mig is
+    # cheaper but slower here; shrink the v5e pool (or raise demand) and
+    # the plan spills into the MIG slices
+
+Slice names are cluster-unique (``"2x2s4"`` can only live in one pool),
+so a profiler key's slice name alone identifies its pool; plans record
+``pool_budgets`` and placement uses one packer per pool
+(``repro.core.placement.make_placer``).
+
 ``repro.core.hw`` remains a thin shim over :data:`TPU_V5E` so existing
 imports keep working.
 """

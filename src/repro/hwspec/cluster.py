@@ -19,7 +19,21 @@ from repro.hwspec.partition import (MigScheme, PartitionScheme, Slice,
 
 @dataclass(frozen=True)
 class Pool:
-    """One homogeneous pool: N identical devices under one scheme."""
+    """One homogeneous pool: N identical devices under one scheme.
+
+    Arguments:
+        name: cluster-unique pool name — profiler entries, MILP capacity
+            rows, placements and runtime capacity events all key on it.
+        device: the :class:`DeviceSpec` every device in the pool shares.
+        count: devices in the pool (chips for a torus pool, whole GPUs
+            for a MIG pool).
+        scheme: the :class:`PartitionScheme` carving each device into
+            slices; it defines the pool's capacity unit
+            (``units_per_device``).
+        slice_price: relative objective cost of one capacity unit — lets
+            the MILP prefer e.g. spot/MIG capacity (< 1.0) over reserved
+            chips without touching the constraint rows.
+    """
     name: str
     device: DeviceSpec
     count: int                    # devices (chips for a torus pool)
@@ -34,6 +48,14 @@ class Pool:
 
 @dataclass(frozen=True)
 class ClusterSpec:
+    """An ordered set of named pools with cluster-unique slice names.
+
+    The single hardware input every layer shares: the profiler builds
+    L/H tables per (pool, slice), the planner emits one Eq. 8 capacity
+    row per pool (budgets from :meth:`budgets`), placement packs each
+    pool with its own packer, and the runtime scopes capacity events by
+    pool name.  Slice-name uniqueness across pools is enforced here so
+    a profiler key's slice name alone identifies its pool."""
     pools: Tuple[Pool, ...]
 
     def __post_init__(self):

@@ -23,6 +23,20 @@ class DeviceSpec:
     fields calibrate the closed-form serving profile (roofline fractions a
     well-tuned serving stack achieves; folded into L/H identically so the
     MILP's *relative* choices are calibration-invariant).
+
+    Arguments:
+        name: stable identifier (shows up in reports, never parsed).
+        peak_flops: dtype → peak dense FLOP/s of one device.
+        hbm_bytes: HBM capacity per device (bytes).
+        hbm_bw: peak HBM bandwidth per device (bytes/s).
+        ici_bw_per_link: interconnect bandwidth per link (bytes/s) —
+            charged only by slices spanning >1 device (tensor-parallel
+            collectives); MIG slices are intra-device and never pay it.
+        hbm_usable_fraction: share of HBM the serving stack may fill
+            before a config is rejected as OOM (profiler filter).
+        flops_efficiency / hbm_efficiency / ici_efficiency: achieved
+            fraction of each roof; fit these from measured engine runs
+            to calibrate a new device.
     """
     name: str
     peak_flops: Mapping[str, float]      # dtype -> FLOP/s

@@ -33,6 +33,19 @@ class Slice:
     rectangle, always 1 for a MIG slice); the fractions are per spanned
     device, so a slice's absolute compute is
     ``devices * compute_fraction * DeviceSpec.peak(quant)``.
+
+    Arguments:
+        name: cluster-unique slice name (the ``s`` in profiler keys).
+        streams: MPS-style concurrent request streams the slice hosts —
+            the runtime spawns this many execution streams per planned
+            instance.
+        cost: capacity units charged against the pool's Eq. 8 budget.
+        devices: devices spanned (tensor-parallel width on a torus).
+        compute_fraction / memory_fraction: share of one device's
+            compute and HBM (capacity AND bandwidth) the slice owns.
+        shape: torus placement rectangle (rectangle packer input).
+        mem_slots / starts: MIG placement rule — memory slots occupied
+            and the allowed start offsets on the device.
     """
     name: str
     streams: int                 # MPS-style concurrent request streams

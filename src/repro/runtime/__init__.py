@@ -4,16 +4,23 @@
 failure / capacity schedules + SLO scale) against any ``ExecutionBackend``
 — the profiled-latency ``SimBackend`` or the real-engine ``EngineBackend``
 — producing ``SimMetrics`` with an identical schema either way.
+
+Multi-app co-location (DESIGN.md §11): ``ClusterRuntime.multi`` serves
+several apps on ONE event loop with per-app queues/servers (batches
+never cross apps), ``Scenario.multi`` gives each app an independent
+arrival process, and ``SimMetrics.by_app`` reports SLO attainment
+separately per app.
 """
 from repro.runtime.backend import EngineBackend, ExecutionBackend, SimBackend
 from repro.runtime.metrics import Server, SimMetrics
 from repro.runtime.cluster import ClusterRuntime
-from repro.runtime.scenario import (ArrivalProcess, CapacityEvent,
-                                    FailureEvent, PoissonArrivals, Scenario,
+from repro.runtime.scenario import (AppArrivals, ArrivalProcess,
+                                    CapacityEvent, FailureEvent,
+                                    PoissonArrivals, Scenario,
                                     TraceArrivals)
 
 __all__ = [
-    "ArrivalProcess", "CapacityEvent", "ClusterRuntime", "EngineBackend",
-    "ExecutionBackend", "FailureEvent", "PoissonArrivals", "Scenario",
-    "Server", "SimBackend", "SimMetrics", "TraceArrivals",
+    "AppArrivals", "ArrivalProcess", "CapacityEvent", "ClusterRuntime",
+    "EngineBackend", "ExecutionBackend", "FailureEvent", "PoissonArrivals",
+    "Scenario", "Server", "SimBackend", "SimMetrics", "TraceArrivals",
 ]

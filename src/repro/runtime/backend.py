@@ -30,10 +30,20 @@ if TYPE_CHECKING:   # pragma: no cover — typing only, avoids jax at import
 
 @runtime_checkable
 class ExecutionBackend(Protocol):
-    """Data-plane contract consumed by :class:`ClusterRuntime`."""
+    """Data-plane contract consumed by :class:`ClusterRuntime`.
 
-    def bind(self, graph: "TaskGraph", config: "PlanConfig") -> None:
-        """Called once before serving starts (build engines, caches...)."""
+    ``bind`` is called once per served app before the event loop starts
+    — a single-app runtime calls it once with that app's graph/config, a
+    multi-app runtime (``ClusterRuntime.multi``) once per co-located
+    app.  Backends that key state by graph should store it under
+    ``Server.app`` (every ``service_s`` call carries the owning app on
+    its server); see :class:`EngineBackend` for the pattern.
+    """
+
+    def bind(self, graph: "TaskGraph", config: "PlanConfig",
+             app: str = "") -> None:
+        """Called once per app before serving starts (build engines,
+        caches...).  ``app`` is the co-located app's tag ("" single-app)."""
         ...
 
     def service_s(self, server: "Server", batch: Sequence[Any],
@@ -56,7 +66,7 @@ class SimBackend:
     jitter_sigma: float = 0.08
     mu: float = -0.15
 
-    def bind(self, graph, config):
+    def bind(self, graph, config, app=""):
         pass
 
     def service_s(self, server, batch, now_s, rng):
@@ -84,10 +94,12 @@ class EngineBackend:
     max_new: int = 4
     time_scale: float = 1.0
     _engines: Dict[str, Any] = field(default_factory=dict, repr=False)
-    _graph: Any = field(default=None, repr=False)
+    # one graph per bound app ("" = single-app); engines are shared
+    # across apps by arch — co-located apps reuse the same jit'd engine
+    _graphs: Dict[str, Any] = field(default_factory=dict, repr=False)
 
-    def bind(self, graph, config):
-        self._graph = graph
+    def bind(self, graph, config, app=""):
+        self._graphs[app] = graph
 
     # ------------------------------------------------------------------
     def _engine_for(self, arch_name: str):
@@ -116,7 +128,8 @@ class EngineBackend:
         return eng
 
     def service_s(self, server, batch, now_s, rng):
-        task = self._graph.tasks[server.tup.task]
+        graph = self._graphs[getattr(server, "app", "")]
+        task = graph.tasks[server.tup.task]
         arch_name = task.variant(server.tup.variant).arch
         eng = self._engine_for(arch_name)
         vocab = eng.model.arch.vocab_size

@@ -13,20 +13,31 @@ runtime's intake: it stamps request ids and deadlines (effective SLO incl.
 per-hop allowance), accumulates demand bins, and receives violation
 reports — the single source of truth the controller's re-plan trigger
 reads.
+
+Multi-app co-location (DESIGN.md §11): :meth:`ClusterRuntime.multi`
+serves SEVERAL apps on one event loop.  Queues, servers and batch
+formation are keyed per ``app::task`` (``taskgraph.qualify``), so a batch
+is only ever formed from one app's requests on that app's own planned
+instances — apps share the cluster, never a batch.  Each app keeps its
+own Frontend (deadlines from its own SLO), and ``SimMetrics.by_app``
+reports SLO attainment separately per app.  The single-app constructor
+is the one-app special case under the empty app name, bit-identical to
+the pre-multi-app behavior.
 """
 from __future__ import annotations
 
 import heapq
 import itertools
 import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.dispatch import (QueuedRequest, batch_ready, early_drop,
                                  next_poll_time)
-from repro.core.milp import PlanConfig, TupleVar
-from repro.core.taskgraph import TaskGraph
+from repro.core.milp import PlanConfig
+from repro.core.taskgraph import TaskGraph, qualify, split_qualified
 from repro.runtime.backend import ExecutionBackend, SimBackend
 from repro.runtime.metrics import Server, SimMetrics
 from repro.runtime.scenario import CapacityEvent, FailureEvent, Scenario
@@ -34,81 +45,164 @@ from repro.runtime.scenario import CapacityEvent, FailureEvent, Scenario
 __all__ = ["ClusterRuntime", "Server", "SimMetrics"]
 
 
+@dataclass
+class _AppState:
+    """One co-located app's static serving state."""
+    name: str
+    graph: TaskGraph
+    config: PlanConfig
+    frontend: object = None       # Optional[Frontend]
+
+
 class ClusterRuntime:
+    """The shared event loop serving one or several co-located apps.
+
+    Single-app (legacy): ``ClusterRuntime(graph, config, backend, ...)``.
+    Multi-app: ``ClusterRuntime.multi({app: (graph, config)}, ...)``.
+    All queue/served-state dictionaries are keyed by the qualified task
+    name (plain name for the single-app runtime), so external capacity
+    hooks address tasks as ``"app::task"`` in multi-app runtimes.
+    """
+
     def __init__(self, graph: TaskGraph, config: PlanConfig,
                  backend: Optional[ExecutionBackend] = None, *,
                  seed: int = 0, staleness_ms: float = 20.0,
                  frontend=None, time_base_s: float = 0.0):
-        self.graph = graph
-        self.config = config
+        self._setup({"": _AppState("", graph, config, frontend)},
+                    backend, seed=seed, staleness_ms=staleness_ms,
+                    time_base_s=time_base_s)
+
+    @classmethod
+    def multi(cls, apps: Mapping[str, Tuple[TaskGraph, PlanConfig]],
+              backend: Optional[ExecutionBackend] = None, *,
+              seed: int = 0, staleness_ms: float = 20.0,
+              frontends: Optional[Mapping[str, object]] = None,
+              time_base_s: float = 0.0) -> "ClusterRuntime":
+        """Serve several co-located apps on one event loop.
+
+        ``apps`` maps the (non-empty) app name to that app's graph and
+        per-app :class:`PlanConfig` — e.g. the ``plans`` of a
+        :class:`~repro.core.milp.JointPlan`; ``frontends`` optionally
+        maps app name to its :class:`~repro.core.frontend.Frontend`."""
+        if not apps:
+            raise ValueError("need at least one app")
+        if any(not name for name in apps):
+            raise ValueError("multi-app names must be non-empty")
+        rt = cls.__new__(cls)
+        fes = frontends or {}
+        rt._setup({name: _AppState(name, g, cfg, fes.get(name))
+                   for name, (g, cfg) in apps.items()},
+                  backend, seed=seed, staleness_ms=staleness_ms,
+                  time_base_s=time_base_s)
+        return rt
+
+    # ------------------------------------------------------------------
+    def _setup(self, apps: Dict[str, _AppState],
+               backend: Optional[ExecutionBackend], *, seed: int,
+               staleness_ms: float, time_base_s: float):
+        self._apps = apps
+        self._single = apps.get("") if list(apps) == [""] else None
         self.backend = backend if backend is not None else SimBackend()
         self.rng = np.random.default_rng(seed)
         self.staleness_ms = staleness_ms
-        self.frontend = frontend
         self.time_base_s = time_base_s
         self.servers: List[Server] = []
-        for tup, m in config.instances():
-            # the tuple carries its slice's stream multiplicity, so the
-            # runtime needs no partition-catalogue lookup (pool-agnostic)
-            for _ in range(m * tup.streams):
-                self.servers.append(Server(tup, len(self.servers)))
+        for name, st in apps.items():
+            for tup, m in st.config.instances():
+                # the tuple carries its slice's stream multiplicity, so
+                # the runtime needs no partition-catalogue lookup
+                for _ in range(m * tup.streams):
+                    self.servers.append(
+                        Server(tup, len(self.servers), app=name))
         self._next_idx = len(self.servers)
         self.by_task: Dict[str, List[Server]] = {}
         for s in self.servers:
-            self.by_task.setdefault(s.tup.task, []).append(s)
+            self.by_task.setdefault(qualify(s.app, s.tup.task),
+                                    []).append(s)
         self.queues: Dict[str, List[QueuedRequest]] = {
-            t: [] for t in graph.tasks}
+            qualify(name, t): []
+            for name, st in apps.items() for t in st.graph.tasks}
         # root_id -> root arrival time; ids and the map are instance-level
         # so a re-run on a runtime with leftover queued requests still
         # resolves their roots (and never reuses their ids)
         self._ids = itertools.count()
         self._root_t: Dict[int, float] = {}
         self._fastest = self._fastest_remaining()
-        self._timeout = {t: config.lhat(t) for t in graph.tasks}
-        self.backend.bind(graph, config)
+        self._timeout = {qualify(name, t): st.config.lhat(t)
+                         for name, st in apps.items()
+                         for t in st.graph.tasks}
+        if self._single is not None:
+            self.backend.bind(self._single.graph, self._single.config)
+        else:
+            for name, st in apps.items():
+                self.backend.bind(st.graph, st.config, app=name)
+
+    # -- single-app compatibility surface ------------------------------
+    @property
+    def graph(self) -> Optional[TaskGraph]:
+        return self._single.graph if self._single is not None else None
+
+    @property
+    def config(self) -> Optional[PlanConfig]:
+        return self._single.config if self._single is not None else None
+
+    @property
+    def frontend(self):
+        return self._single.frontend if self._single is not None else None
 
     # ------------------------------------------------------------------
     def _fastest_remaining(self) -> Dict[str, float]:
-        fastest_inst = {t: min(s.tup.latency_ms for s in ss)
-                        for t, ss in self.by_task.items() if ss}
         out: Dict[str, float] = {}
+        for name, st in self._apps.items():
+            fastest_inst = {
+                t: min(s.tup.latency_ms
+                       for s in self.by_task[qualify(name, t)])
+                for t in st.graph.tasks
+                if self.by_task.get(qualify(name, t))}
 
-        def rec(t: str) -> float:
-            if t in out:
-                return out[t]
-            tail = max((rec(n) for n in self.graph.successors(t)),
-                       default=0.0)
-            out[t] = fastest_inst.get(t, 0.0) + tail
-            return out[t]
+            def rec(t: str) -> float:
+                qt = qualify(name, t)
+                if qt in out:
+                    return out[qt]
+                tail = max((rec(n) for n in st.graph.successors(t)),
+                           default=0.0)
+                out[qt] = fastest_inst.get(t, 0.0) + tail
+                return out[qt]
 
-        for t in self.graph.tasks:
-            rec(t)
+            for t in st.graph.tasks:
+                rec(t)
         return out
 
     # ------------------------------------------------------------------
     # capacity hooks (failure injection + elasticity)
     # ------------------------------------------------------------------
     def fail_instances(self, indices: Sequence[int]):
-        """Kill servers (node failure). Shared queues mean survivors
-        simply absorb the load; raises if a task loses all capacity."""
+        """Kill servers (node failure).  Indices are global, so one event
+        can model a host dying under SEVERAL co-located apps.  Shared
+        per-app queues mean survivors simply absorb the load; raises if
+        any app's task loses all capacity."""
         dead = set(indices)
         self.servers = [s for s in self.servers if s.idx not in dead]
         self.by_task = {}
         for s in self.servers:
-            self.by_task.setdefault(s.tup.task, []).append(s)
-        for t in self.graph.tasks:
-            if not self.by_task.get(t):
-                raise RuntimeError(
-                    f"task {t!r} lost all instances — controller must "
-                    "re-plan with reduced S_avail")
+            self.by_task.setdefault(qualify(s.app, s.tup.task),
+                                    []).append(s)
+        for name, st in self._apps.items():
+            for t in st.graph.tasks:
+                if not self.by_task.get(qualify(name, t)):
+                    raise RuntimeError(
+                        f"task {qualify(name, t)!r} lost all instances — "
+                        "controller must re-plan with reduced S_avail")
         self._fastest = self._fastest_remaining()
         self.backend.on_capacity_change(self.servers)
 
     def add_instances(self, task: str, count: int, now: float = 0.0,
                       pool: Optional[str] = None):
         """Elasticity: clone ``count`` extra streams of ``task``'s first
-        deployed tuple (a pod joined / capacity was restored).  ``pool``
-        restricts the clone template to instances of that cluster pool."""
+        deployed tuple (a pod joined / capacity was restored).  ``task``
+        is the qualified ``app::task`` name in multi-app runtimes;
+        ``pool`` restricts the clone template to instances of that
+        cluster pool."""
         servers = self.by_task.get(task) or []
         if pool is not None:
             servers = [s for s in servers if s.tup.pool == pool]
@@ -117,7 +211,8 @@ class ClusterRuntime:
             raise RuntimeError(
                 f"task {task!r} has no live instance{where} to clone")
         for _ in range(count):
-            s = Server(servers[0].tup, self._next_idx, busy_until=now)
+            s = Server(servers[0].tup, self._next_idx, busy_until=now,
+                       app=servers[0].app)
             self._next_idx += 1
             self.servers.append(s)
             self.by_task[task].append(s)
@@ -128,23 +223,35 @@ class ClusterRuntime:
         if ev.indices is not None:
             self.fail_instances(ev.indices)
             return
-        task = ev.task or max(self.by_task, key=lambda t: len(self.by_task[t]))
-        victims = [s.idx for s in self.by_task.get(task, [])[:ev.count]]
+        if ev.task is not None:
+            qt = qualify(ev.app, ev.task)
+        else:
+            keys = [k for k in self.by_task
+                    if not ev.app or split_qualified(k)[0] == ev.app]
+            if not keys:
+                # fail as loud as the other capacity hooks — an
+                # app-scoped kill matching nothing is a scenario bug
+                raise RuntimeError(
+                    f"FailureEvent app {ev.app!r} has no live servers "
+                    f"(runtime serves {sorted(self._apps)})")
+            qt = max(keys, key=lambda k: len(self.by_task[k]))
+        victims = [s.idx for s in self.by_task.get(qt, [])[:ev.count]]
         if victims:
             self.fail_instances(victims)
 
     def _apply_capacity(self, ev: CapacityEvent, now: float):
+        qt = qualify(ev.app, ev.task)
         if ev.delta >= 0:
-            self.add_instances(ev.task, ev.delta, now, pool=ev.pool)
+            self.add_instances(qt, ev.delta, now, pool=ev.pool)
         else:
-            pool = self.by_task.get(ev.task, [])
+            pool = self.by_task.get(qt, [])
             if ev.pool is not None:
                 pool = [s for s in pool if s.tup.pool == ev.pool]
                 if not pool:
                     # fail as loud as the add path does — a pool-scoped
                     # retire that matches nothing is a scenario bug
                     raise RuntimeError(
-                        f"task {ev.task!r} has no instances in pool "
+                        f"task {qt!r} has no instances in pool "
                         f"{ev.pool!r} to retire")
             victims = [s.idx for s in pool[:-ev.delta]]
             if victims:
@@ -152,51 +259,81 @@ class ClusterRuntime:
 
     # ------------------------------------------------------------------
     def run(self, scenario: Scenario) -> SimMetrics:
-        g = self.graph
         m = SimMetrics()
         ids = self._ids
         seq = itertools.count()
         events: List[Tuple[float, int, str, object]] = []
         duration_s, warmup_s = scenario.duration_s, scenario.warmup_s
-        slo_s = g.slo_latency_ms / 1e3 * scenario.slo_scale
+        # per-app deadline/drain allowance (each app keeps its own SLO)
+        slo_s = {name: st.graph.slo_latency_ms / 1e3 * scenario.slo_scale
+                 for name, st in self._apps.items()}
         # drain horizon: in-flight work may finish past duration_s; +10 s
         # is the legacy allowance, widened when scaled SLOs exceed it
-        drain_s = duration_s + max(10.0, 2.0 * slo_s)
+        drain_s = duration_s + max(10.0, 2.0 * max(slo_s.values()))
         root_t = self._root_t
 
         def push(t, kind, payload):
             heapq.heappush(events, (t, next(seq), kind, payload))
 
-        for t in scenario.arrivals.times(self.rng, duration_s):
-            if t > drain_s:
-                # past the drain horizon the loop never processes it — an
-                # idle arrival process can overshoot by ~1e9 s, which
-                # would otherwise blow up the frontend's demand bins
-                break
-            if self.frontend is not None:
-                meta = self.frontend.submit(self.time_base_s + t)
-                rid = meta.req_id
-                deadline = t + (meta.deadline_s
-                                - (self.time_base_s + t)) * scenario.slo_scale
-            else:
-                rid = next(ids)
-                deadline = t + slo_s
-            root_t[rid] = t
-            push(t, "arrive", QueuedRequest(rid, rid, g.entry, t, deadline))
+        def sub(app: str) -> SimMetrics:
+            """Per-app metrics bucket (the aggregate itself for the
+            single-app legacy runtime)."""
+            return m if app == "" else m.app(app)
+
+        # -- arrivals: one independent process per app ------------------
+        if scenario.apps:
+            missing = [a.app for a in scenario.apps
+                       if a.app not in self._apps]
+            if missing:
+                raise ValueError(f"scenario names unknown apps {missing} "
+                                 f"(runtime has {list(self._apps)})")
+            workloads = [(a.app, a.arrivals) for a in scenario.apps]
+        else:
+            if self._single is None:
+                raise ValueError("multi-app runtime needs Scenario.multi "
+                                 "(per-app arrival processes)")
+            workloads = [("", scenario.arrivals)]
+        for app, proc in workloads:
+            st = self._apps[app]
+            entry_q = qualify(app, st.graph.entry)
+            for t in proc.times(self.rng, duration_s):
+                if t > drain_s:
+                    # past the drain horizon the loop never processes it —
+                    # an idle arrival process can overshoot by ~1e9 s,
+                    # which would otherwise blow up the demand bins
+                    break
+                if st.frontend is not None:
+                    meta = st.frontend.submit(self.time_base_s + t)
+                    deadline = t + (meta.deadline_s
+                                    - (self.time_base_s + t)
+                                    ) * scenario.slo_scale
+                    # per-app frontends stamp independent id streams; the
+                    # runtime-global id keeps root bookkeeping collision-
+                    # free across apps (single-app: frontend id, legacy)
+                    rid = meta.req_id if self._single is not None \
+                        else next(ids)
+                else:
+                    rid = next(ids)
+                    deadline = t + slo_s[app]
+                root_t[rid] = t
+                push(t, "arrive",
+                     QueuedRequest(rid, rid, entry_q, t, deadline))
         for ev in scenario.failures:
             push(ev.at_s, "fail", ev)
         for ev in scenario.capacity:
             push(ev.at_s, "capacity", ev)
-        for task, q in self.queues.items():
+        for qt, q in self.queues.items():
             if q:                   # leftover work from a prior run
-                push(0.0, "poll", task)
+                push(0.0, "poll", qt)
 
-        def drop_scan(task: str, now: float):
-            """Early-drop pass over the task queue (paper §3.3)."""
-            q = self.queues[task]
+        def drop_scan(qt: str, now: float):
+            """Early-drop pass over one (app, task) queue (paper §3.3)."""
+            app, task = split_qualified(qt)
+            g = self._apps[app].graph
+            q = self.queues[qt]
             keep = []
-            fastest = self._fastest[task]
-            timeout = self._timeout[task]
+            fastest = self._fastest[qt]
+            timeout = self._timeout[qt]
             for req in q:
                 reason = early_drop(req, now, fastest, self.staleness_ms,
                                     timeout)
@@ -207,13 +344,15 @@ class ClusterRuntime:
                         g.factor(task, g.tasks[task].most_accurate.name, t2)
                         for t2 in g.successors(task)) or 1))
                     m.dropped += fan
-            self.queues[task] = keep
+                    if app:
+                        sub(app).dropped += fan
+            self.queues[qt] = keep
 
-        def try_dispatch(task: str, now: float):
-            drop_scan(task, now)
-            q = self.queues[task]
+        def try_dispatch(qt: str, now: float):
+            drop_scan(qt, now)
+            q = self.queues[qt]
             while q:
-                idle = [s for s in self.by_task[task]
+                idle = [s for s in self.by_task[qt]
                         if s.busy_until <= now + 1e-12]
                 if not idle:
                     break
@@ -221,7 +360,7 @@ class ClusterRuntime:
                 # pick the idle server that can drain the most
                 srv = max(idle, key=lambda s: s.tup.batch)
                 if not batch_ready(len(q), srv.tup.batch, head_wait,
-                                   self._timeout[task]):
+                                   self._timeout[qt]):
                     break
                 if len(q) < srv.tup.batch:
                     # partial launch on the smallest-batch idle server
@@ -233,10 +372,10 @@ class ClusterRuntime:
                 push(srv.busy_until, "done", (srv.idx, batch))
             if q:
                 t_poll = next_poll_time(
-                    q[0].enqueue_t, self._timeout[task],
-                    min(s.busy_until for s in self.by_task[task]))
+                    q[0].enqueue_t, self._timeout[qt],
+                    min(s.busy_until for s in self.by_task[qt]))
                 if t_poll > now + 1e-9:
-                    push(t_poll, "poll", task)
+                    push(t_poll, "poll", qt)
 
         srv_by_idx = {s.idx: s for s in self.servers}
 
@@ -257,43 +396,58 @@ class ClusterRuntime:
                 else:
                     self._apply_capacity(payload, now)
                 srv_by_idx = {s.idx: s for s in self.servers}
-                for t2 in self.graph.tasks:
-                    try_dispatch(t2, now)
+                for qt2 in self.queues:
+                    try_dispatch(qt2, now)
             elif kind == "done":
                 idx, batch = payload
                 srv = srv_by_idx.get(idx)
                 if srv is None:
                     continue
+                app, g = srv.app, self._apps[srv.app].graph
                 task, variant = srv.tup.task, srv.tup.variant
+                # qualified names are loop-invariant per batch — build
+                # them once, not per serviced request (hot loop)
+                qt_task = qualify(app, task)
+                agg_key = (qt_task, variant)
+                succ_q = [(t2, qualify(app, t2))
+                          for t2 in g.successors(task)]
                 for req in batch:
                     srv.served += 1
-                    key = (task, variant)
-                    m.traffic[key] = m.traffic.get(key, 0) + 1
-                    succs = self.graph.successors(task)
-                    if not succs:
+                    m.traffic[agg_key] = m.traffic.get(agg_key, 0) + 1
+                    if app:
+                        ms = sub(app)
+                        ms.traffic[(task, variant)] = \
+                            ms.traffic.get((task, variant), 0) + 1
+                    if not succ_q:
                         if root_t[req.root_id] >= warmup_s:
                             lat = (now - root_t[req.root_id]) * 1e3
-                            m.latencies_ms.append(lat)
-                            m.completions += 1
-                            if now > req.deadline + 1e-9:
-                                m.missed += 1
+                            missed = now > req.deadline + 1e-9
+                            for mm in ((m,) if app == ""
+                                       else (m, sub(app))):
+                                mm.latencies_ms.append(lat)
+                                mm.completions += 1
+                                if missed:
+                                    mm.missed += 1
                         continue
-                    for t2 in succs:
-                        fan = self._sample_fanout(
-                            self.graph.factor(task, variant, t2))
+                    for t2, qt2 in succ_q:
+                        fan = self._sample_fanout(g.factor(task, variant,
+                                                           t2))
                         for _ in range(fan):
                             child = QueuedRequest(
-                                next(ids), req.root_id, t2, now,
-                                req.deadline, req.path_done + (task,))
-                            self.queues[t2].append(child)
-                    for t2 in succs:
-                        try_dispatch(t2, now)
-                try_dispatch(task, now)
-        if self.frontend is not None:
-            # report the exact datapath outcome (fan-weighted, leaf-level —
-            # identical accounting to SimMetrics.violation_rate) into the
-            # frontend's re-plan trigger window
-            self.frontend.record_bin_outcome(m.total_requests, m.violations)
+                                next(ids), req.root_id, qt2,
+                                now, req.deadline, req.path_done + (task,))
+                            self.queues[qt2].append(child)
+                    for _, qt2 in succ_q:
+                        try_dispatch(qt2, now)
+                try_dispatch(qt_task, now)
+        for name, st in self._apps.items():
+            if st.frontend is not None:
+                # report the exact datapath outcome (fan-weighted, leaf-
+                # level — identical accounting to SimMetrics.violation_
+                # rate) into each app's own re-plan trigger window
+                ms = sub(name)
+                st.frontend.record_bin_outcome(ms.total_requests,
+                                               ms.violations)
         return m
 
     # ------------------------------------------------------------------

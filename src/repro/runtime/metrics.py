@@ -17,11 +17,27 @@ if TYPE_CHECKING:   # pragma: no cover — typing only
 
 @dataclass
 class SimMetrics:
+    """Serving outcome of one run.
+
+    The top-level counters aggregate the whole run.  A multi-app run
+    (``ClusterRuntime.multi``) additionally files each app's outcome
+    under ``by_app`` — per-app sub-metrics use the app's PLAIN task
+    names in ``traffic`` so ``realized_a_obj(app_graph)`` works
+    unchanged, while the aggregate keys traffic by the qualified
+    ``app::task`` name.  Single-app runs leave ``by_app`` empty."""
     completions: int = 0           # leaf sub-requests serviced
     missed: int = 0                # serviced but past the deadline
     dropped: int = 0               # early-drops, fan-out weighted (§4.5)
     latencies_ms: List[float] = field(default_factory=list)
     traffic: Dict[Tuple[str, str], int] = field(default_factory=dict)
+    by_app: Dict[str, "SimMetrics"] = field(default_factory=dict)
+
+    def app(self, name: str) -> "SimMetrics":
+        """This app's sub-metrics (created on first use)."""
+        sub = self.by_app.get(name)
+        if sub is None:
+            sub = self.by_app[name] = SimMetrics()
+        return sub
 
     @property
     def violations(self) -> int:
@@ -62,8 +78,13 @@ class SimMetrics:
 
 @dataclass
 class Server:
-    """One execution stream of one deployed instance."""
+    """One execution stream of one deployed instance.
+
+    ``app`` tags the co-located application the stream belongs to (""
+    in single-app runtimes): batches are formed per (app, task) queue,
+    so a server only ever serves its own app's requests."""
     tup: "TupleVar"
     idx: int
     busy_until: float = 0.0
     served: int = 0
+    app: str = ""

@@ -8,12 +8,19 @@ and an SLO scale into one declarative object that the
 unmodified against the profiled-latency simulation backend and the real
 ``serving.Engine`` backend — that parity is what makes multi-backend
 evaluation (and the paper's empirical claims) reproducible.
+
+Multi-app scenarios (:meth:`Scenario.multi`) carry one independent
+:class:`ArrivalProcess` per co-located app instead of a single stream;
+``ClusterRuntime.multi`` interleaves them on one event clock.  Failure
+and capacity events gain an ``app`` scope in that setting, while
+index-based failures stay global (a host dying under several apps).
 """
 from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import List, Optional, Protocol, Sequence, Tuple, runtime_checkable
+from typing import (List, Mapping, Optional, Protocol, Sequence, Tuple,
+                    runtime_checkable)
 
 import numpy as np
 
@@ -86,11 +93,18 @@ class TraceArrivals:
 @dataclass(frozen=True)
 class FailureEvent:
     """Kill servers at ``at_s``: explicit ``indices``, or ``count`` servers
-    of ``task`` (``task=None`` → the task with the most servers)."""
+    of ``task`` (``task=None`` → the task with the most servers).
+
+    ``indices`` are global server ids, so an index-based failure models a
+    HOST dying: in a multi-app runtime it can take out streams of several
+    co-located apps at once (shared-capacity failure).  ``app`` scopes a
+    task-based kill to one app's servers (multi-app runtimes; ignored
+    when ``indices`` is given)."""
     at_s: float
     indices: Optional[Tuple[int, ...]] = None
     count: int = 1
     task: Optional[str] = None
+    app: str = ""
 
 
 @dataclass(frozen=True)
@@ -100,24 +114,49 @@ class CapacityEvent:
 
     ``pool`` restricts the event to instances deployed in that
     ClusterSpec pool (None = any pool) — capacity joins/retires are
-    per-pool events in a heterogeneous cluster."""
+    per-pool events in a heterogeneous cluster.  ``app`` scopes the
+    event to one co-located app's servers (multi-app runtimes)."""
     at_s: float
     task: str
     delta: int
     pool: Optional[str] = None
+    app: str = ""
 
 
 # ---------------------------------------------------------------------------
 @dataclass(frozen=True)
-class Scenario:
-    """One declarative serving experiment."""
+class AppArrivals:
+    """One co-located app's independent arrival process (multi-app
+    scenarios — see :meth:`Scenario.multi`)."""
+    app: str
     arrivals: ArrivalProcess
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """One declarative serving experiment.
+
+    Single-app scenarios set ``arrivals``; multi-app scenarios set
+    ``apps`` instead — one independent :class:`ArrivalProcess` per
+    co-located app, interleaved on one event clock by
+    ``ClusterRuntime.multi``.  Exactly one of the two must be given.
+    """
+    arrivals: Optional[ArrivalProcess] = None
     duration_s: float = 20.0
     warmup_s: float = 2.0
     failures: Tuple[FailureEvent, ...] = ()
     capacity: Tuple[CapacityEvent, ...] = ()
     slo_scale: float = 1.0            # deadline = arrival + SLO * slo_scale
     name: str = "scenario"
+    apps: Tuple[AppArrivals, ...] = ()
+
+    def __post_init__(self):
+        if (self.arrivals is None) == (not self.apps):
+            raise ValueError("set exactly one of arrivals= (single-app) "
+                             "or apps= (multi-app)")
+        seen = [a.app for a in self.apps]
+        if len(set(seen)) != len(seen):
+            raise ValueError(f"duplicate app workloads: {seen}")
 
     # -- constructors ---------------------------------------------------
     @classmethod
@@ -149,6 +188,22 @@ class Scenario:
                          period_bins=period_bins, duty=duty)
         return cls(TraceArrivals(tr), duration_s, warmup_s,
                    name=f"burst@{base_rps:g}/{burst_rps:g}rps", **kw)
+
+    @classmethod
+    def multi(cls, workloads: "Mapping[str, ArrivalProcess]",
+              duration_s: float = 20.0, warmup_s: float = 2.0,
+              **kw) -> "Scenario":
+        """Multi-app scenario: ``workloads`` maps app name → that app's
+        independent arrival process, e.g.::
+
+            Scenario.multi({"social": PoissonArrivals(40.0),
+                            "traffic": PoissonArrivals(15.0)},
+                           duration_s=30.0)
+        """
+        return cls(None, duration_s, warmup_s,
+                   apps=tuple(AppArrivals(a, p)
+                              for a, p in workloads.items()),
+                   name="multi:" + "+".join(workloads), **kw)
 
     # -- derived scenarios ----------------------------------------------
     def with_failures(self, *events: FailureEvent) -> "Scenario":

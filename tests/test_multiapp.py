@@ -1,0 +1,256 @@
+"""Multi-app co-location end-to-end (ISSUE 4 acceptance): two compound
+apps share one two-pool ClusterSpec through ONE joint MILP solve (shared
+Eq. 8 capacity rows, per-app SLO rows), serve together on a single
+ClusterRuntime event loop on SimBackend AND EngineBackend with per-app
+SLO attainment reported separately, stay isolated (batches never cross
+apps, app-tagged metrics never mix), survive a shared-capacity failure,
+and the joint plan's max serviceable total demand beats a static 50/50
+cluster split (same comparison as benchmarks/bench_multiapp.py)."""
+import pytest
+
+from benchmarks.bench_multiapp import APPS, KW, MIX, capacity_comparison
+from repro.core.apps import get_app
+from repro.core.controller import MultiAppController
+from repro.core.milp import AppSpec, JointPlanner
+from repro.core.profiler import Profiler
+from repro.core.taskgraph import qualify, split_qualified
+from repro.hwspec import tight_hetero_cluster
+from repro.runtime import (ClusterRuntime, EngineBackend, PoissonArrivals,
+                           Scenario, SimBackend)
+from repro.runtime.scenario import FailureEvent
+
+DEMANDS = {"social_media": 40.0, "traffic_analysis": 20.0}
+
+
+@pytest.fixture(scope="module")
+def joint_setup():
+    cluster = tight_hetero_cluster()
+    graphs = {n: get_app(n) for n in APPS}
+    profs = {n: Profiler(g, cluster=cluster) for n, g in graphs.items()}
+    planner = JointPlanner([AppSpec(n, graphs[n], profs[n]) for n in APPS],
+                           s_avail=cluster.total_units, **KW)
+    before = planner.stats.milp_solves
+    plan = planner.plan_joint(DEMANDS)
+    assert plan is not None, "joint two-app plan must be feasible"
+    assert planner.stats.milp_solves == before + 1, \
+        "both apps must be planned in ONE joint MILP solve"
+    return cluster, graphs, profs, planner, plan
+
+
+def make_runtime(graphs, plan, backend, seed=0):
+    return ClusterRuntime.multi(
+        {n: (graphs[n], plan.plans[n]) for n in APPS}, backend, seed=seed)
+
+
+def serve_scenario(scale=0.8, duration_s=6.0, warmup_s=1.0, **kw):
+    return Scenario.multi(
+        {n: PoissonArrivals(DEMANDS[n] * scale) for n in APPS},
+        duration_s=duration_s, warmup_s=warmup_s, **kw)
+
+
+# ---------------------------------------------------------------------------
+# joint plan structure
+# ---------------------------------------------------------------------------
+def test_joint_plan_covers_both_apps_with_own_slos(joint_setup):
+    cluster, graphs, profs, planner, plan = joint_setup
+    assert set(plan.plans) == set(APPS)
+    for n, cfg in plan.plans.items():
+        g = graphs[n]
+        assert cfg.counts, f"{n}: empty deployment at non-zero demand"
+        # per-app SLOs hold EXACTLY (latency, throughput, accuracy)
+        assert cfg.worst_path_latency() <= g.slo_latency_ms + 1e-6
+        assert cfg.exact_a_obj() >= g.slo_accuracy - 1e-6
+        for t, r in cfg.demand.items():
+            assert cfg.task_throughput(t) >= r - 1e-6, (n, t)
+
+
+def test_shared_pools_never_oversubscribed(joint_setup):
+    cluster, graphs, profs, planner, plan = joint_setup
+    budgets = cluster.budgets()
+    combined = plan.pool_slices()
+    for pool, used in combined.items():
+        assert used <= budgets[pool], (pool, used, budgets)
+    # the per-app plans charge the SAME pools (shared, not partitioned)
+    assert plan.pool_budgets == budgets
+
+
+def test_plans_are_plain_single_app_configs(joint_setup):
+    """Per-app PlanConfigs carry PLAIN task names — runtime/placement
+    consume them with no knowledge of the joint namespacing."""
+    cluster, graphs, profs, planner, plan = joint_setup
+    for n, cfg in plan.plans.items():
+        assert set(k[0] for k in cfg.counts) <= set(graphs[n].tasks)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end serving, per-app attainment
+# ---------------------------------------------------------------------------
+def test_e2e_sim_backend_per_app_attainment(joint_setup):
+    cluster, graphs, profs, planner, plan = joint_setup
+    rt = make_runtime(graphs, plan, SimBackend())
+    m = rt.run(serve_scenario())
+    assert set(m.by_app) == set(APPS)
+    for n in APPS:
+        mm = m.by_app[n]
+        assert mm.completions > 0, f"{n} served nothing"
+        assert mm.violation_rate < 0.2, (n, mm.violation_rate)
+        # per-app realized accuracy evaluates against the app's own graph
+        assert mm.realized_a_obj(graphs[n]) >= 0.8
+
+
+def test_e2e_engine_backend(joint_setup):
+    """The same joint plan drives real jit'd engines (reduced archs, CPU)
+    for BOTH co-located apps through one event loop."""
+    cluster, graphs, profs, planner, plan = joint_setup
+    rt = make_runtime(graphs, plan,
+                      EngineBackend(max_batch=2, max_seq=48,
+                                    prompt_len=4, max_new=2))
+    m = rt.run(Scenario.multi({n: PoissonArrivals(2.0) for n in APPS},
+                              duration_s=2.0, warmup_s=0.0, slo_scale=50.0))
+    for n in APPS:
+        assert m.by_app[n].completions > 0, n
+        assert set(m.by_app[n].traffic), n
+
+
+# ---------------------------------------------------------------------------
+# isolation
+# ---------------------------------------------------------------------------
+class _BatchAuditBackend(SimBackend):
+    """SimBackend that records the (server app, request apps) of every
+    launched batch."""
+
+    def __init__(self):
+        super().__init__()
+        self.mixed = []
+
+    def service_s(self, server, batch, now_s, rng):
+        apps = {split_qualified(req.task)[0] for req in batch}
+        if apps != {server.app}:
+            self.mixed.append((server.app, apps))
+        return super().service_s(server, batch, now_s, rng)
+
+
+def test_batches_never_formed_across_apps(joint_setup):
+    cluster, graphs, profs, planner, plan = joint_setup
+    backend = _BatchAuditBackend()
+    rt = make_runtime(graphs, plan, backend)
+    m = rt.run(serve_scenario(duration_s=8.0))
+    assert m.completions > 0
+    assert not backend.mixed, f"cross-app batches launched: {backend.mixed}"
+
+
+def test_app_tagged_metrics_never_mix(joint_setup):
+    cluster, graphs, profs, planner, plan = joint_setup
+    rt = make_runtime(graphs, plan, SimBackend())
+    m = rt.run(serve_scenario())
+    # per-app sub-metrics only contain the app's own tasks
+    for n in APPS:
+        own = set(graphs[n].tasks)
+        assert {t for (t, v) in m.by_app[n].traffic} <= own, n
+    # aggregate counters are exactly the sum of the per-app buckets
+    assert m.completions == sum(mm.completions for mm in m.by_app.values())
+    assert m.dropped == sum(mm.dropped for mm in m.by_app.values())
+    assert m.missed == sum(mm.missed for mm in m.by_app.values())
+    assert len(m.latencies_ms) == sum(len(mm.latencies_ms)
+                                      for mm in m.by_app.values())
+    # aggregate traffic keys are app-qualified, and each app's total
+    # aggregate traffic equals its own bucket (no leakage either way)
+    for n in APPS:
+        agg = sum(c for (t, v), c in m.traffic.items()
+                  if split_qualified(t)[0] == n)
+        assert agg == sum(m.by_app[n].traffic.values()), n
+
+
+def test_servers_are_app_tagged_and_disjoint(joint_setup):
+    cluster, graphs, profs, planner, plan = joint_setup
+    rt = make_runtime(graphs, plan, SimBackend())
+    by_app = {}
+    for s in rt.servers:
+        by_app.setdefault(s.app, []).append(s)
+    assert set(by_app) == set(APPS)
+    for n in APPS:
+        assert len(by_app[n]) == sum(mm * tup.streams for tup, mm
+                                     in plan.plans[n].instances())
+
+
+# ---------------------------------------------------------------------------
+# shared-capacity failure
+# ---------------------------------------------------------------------------
+def test_shared_failure_degrades_both_apps_without_crashing(joint_setup):
+    """A FailureEvent with global indices models a host dying under BOTH
+    apps at once: each app keeps serving on its survivors and neither
+    queue crashes."""
+    cluster, graphs, profs, planner, plan = joint_setup
+    probe = make_runtime(graphs, plan, SimBackend())
+    victims = []
+    for n in APPS:      # one redundant server of each app
+        for qt, servers in probe.by_task.items():
+            if split_qualified(qt)[0] == n and len(servers) > 1:
+                victims.append(servers[0].idx)
+                break
+    if not victims:
+        pytest.skip("no redundant servers to fail in this plan")
+    rt = make_runtime(graphs, plan, SimBackend())
+    sc = serve_scenario(duration_s=8.0).with_failures(
+        FailureEvent(at_s=2.0, indices=tuple(victims)))
+    m = rt.run(sc)
+    alive = {s.idx for s in rt.servers}
+    assert not (alive & set(victims))
+    for n in APPS:
+        assert m.by_app[n].completions > 0, f"{n} starved after failure"
+
+
+def test_task_scoped_failure_requires_app_tag(joint_setup):
+    """FailureEvent(task=..., app=...) kills only the named app's
+    servers for that task."""
+    cluster, graphs, profs, planner, plan = joint_setup
+    rt = make_runtime(graphs, plan, SimBackend())
+    n = "traffic_analysis"
+    task = next(t for t in graphs[n].tasks
+                if len(rt.by_task[qualify(n, t)]) > 1)
+    before = {a: len([s for s in rt.servers if s.app == a]) for a in APPS}
+    rt.run(serve_scenario(duration_s=2.0).with_failures(
+        FailureEvent(at_s=0.5, count=1, task=task, app=n)))
+    after = {a: len([s for s in rt.servers if s.app == a]) for a in APPS}
+    assert after[n] == before[n] - 1
+    other = next(a for a in APPS if a != n)
+    assert after[other] == before[other]
+
+
+# ---------------------------------------------------------------------------
+# controller: joint re-plan on ANY app's trigger
+# ---------------------------------------------------------------------------
+def test_multiapp_controller_joint_replan(joint_setup):
+    cluster, graphs, profs, planner, plan = joint_setup
+    ctl = MultiAppController(graphs, profs, s_avail=cluster.total_units,
+                             planner_kwargs=dict(KW))
+    r0 = ctl.step(0, dict(DEMANDS), sim_seconds=3.0, seed=0)
+    assert r0.replanned
+    assert set(r0.per_app) == set(APPS)
+    for n, ar in r0.per_app.items():
+        assert ar.completions > 0
+        assert ar.slices_used > 0
+    # steady bin: no app drifted -> no re-plan
+    r1 = ctl.step(1, dict(DEMANDS), sim_seconds=3.0, seed=1)
+    assert not r1.replanned
+    # ONE app drifts >10% -> the whole cluster re-plans JOINTLY
+    bumped = dict(DEMANDS)
+    bumped["traffic_analysis"] *= 1.5
+    r2 = ctl.step(2, bumped, sim_seconds=3.0, seed=2)
+    assert r2.replanned
+
+
+# ---------------------------------------------------------------------------
+# joint vs static 50/50 split (the capacity headline)
+# ---------------------------------------------------------------------------
+def test_joint_beats_static_split(joint_setup):
+    """The joint plan's max serviceable total demand along the benchmark
+    mix strictly beats a static 50/50 cluster split — shared pools let
+    the social-heavy mix use capacity the split strands on the traffic
+    half (same helpers and knobs as benchmarks/bench_multiapp.py)."""
+    cluster, graphs, profs, planner, plan = joint_setup
+    static_total, joint_total = capacity_comparison(cluster, graphs,
+                                                    planner, MIX)
+    assert joint_total > static_total, (joint_total, static_total)
+    # the gain is structural (strands half a pool), not search noise
+    assert joint_total >= 1.2 * static_total, (joint_total, static_total)

@@ -1,0 +1,59 @@
+"""Render the checked-in ``BENCH_*.json`` files as markdown tables.
+
+    python tools/bench_table.py [repo_root]
+
+One table per benchmark file: rows are the benchmark's top-level
+entries, columns the union of their numeric metrics (first few, to stay
+readable).  The README's results section is generated with this script —
+re-run it after ``python -m benchmarks.run`` refreshes the JSON files.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+MAX_COLS = 6
+
+
+def fmt(v) -> str:
+    if isinstance(v, bool):
+        return str(v)
+    if isinstance(v, float):
+        return f"{v:,.3g}"
+    return str(v)
+
+
+def table(name: str, data: dict) -> str:
+    rows = {k: v for k, v in data.items() if isinstance(v, dict)}
+    if not rows:    # flat dict (e.g. BENCH_capacity.json)
+        rows = {k: {"value": v} for k, v in data.items()}
+    cols = []
+    for entry in rows.values():
+        for k, v in entry.items():
+            if isinstance(v, (int, float)) and k not in cols:
+                cols.append(k)
+    cols = cols[:MAX_COLS]
+    out = [f"### {name}", "",
+           "| | " + " | ".join(cols) + " |",
+           "|---" * (len(cols) + 1) + "|"]
+    for rk, entry in rows.items():
+        cells = [fmt(entry[c]) if c in entry else "" for c in cols]
+        out.append(f"| {rk} | " + " | ".join(cells) + " |")
+    return "\n".join(out) + "\n"
+
+
+def main(argv) -> int:
+    root = Path(argv[0]) if argv else Path(__file__).resolve().parents[1]
+    files = sorted(root.glob("BENCH_*.json"))
+    if not files:
+        print(f"no BENCH_*.json under {root}", file=sys.stderr)
+        return 1
+    for f in files:
+        name = f.stem.replace("BENCH_", "")
+        print(table(name, json.loads(f.read_text())))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -1,0 +1,88 @@
+"""Markdown link + anchor checker (no dependencies, offline).
+
+    python tools/check_markdown.py README.md DESIGN.md ROADMAP.md
+
+Checks every ``[text](target)`` link in the given files:
+
+* relative file targets must exist (resolved against the md file's dir);
+* ``#anchor`` / ``file.md#anchor`` targets must match a heading in the
+  target file (GitHub slugification: lowercase, punctuation stripped,
+  spaces → dashes);
+* ``http(s)://`` and ``mailto:`` targets are skipped (offline CI).
+
+Links inside fenced code blocks and inline code spans are ignored.
+Exits non-zero listing every broken link.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+CODE_SPAN_RE = re.compile(r"`[^`]*`")
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug of one heading line."""
+    h = CODE_SPAN_RE.sub(lambda m: m.group(0).strip("`"), heading)
+    h = h.strip().lower()
+    h = re.sub(r"[^\w\- ]", "", h, flags=re.UNICODE)
+    return h.replace(" ", "-")
+
+
+def scan(path: Path):
+    """(links, anchors) of one markdown file, skipping fenced code."""
+    links, anchors = [], set()
+    fenced = False
+    for lineno, line in enumerate(path.read_text().splitlines(), 1):
+        if line.lstrip().startswith("```"):
+            fenced = not fenced
+            continue
+        if fenced:
+            continue
+        m = HEADING_RE.match(line)
+        if m:
+            anchors.add(slugify(m.group(1)))
+        for link in LINK_RE.findall(CODE_SPAN_RE.sub("", line)):
+            links.append((lineno, link))
+    return links, anchors
+
+
+def main(argv) -> int:
+    files = [Path(a) for a in argv] or [Path("README.md")]
+    anchors = {}
+    for f in files:
+        if not f.exists():
+            print(f"MISSING FILE {f}")
+            return 1
+        anchors[f.resolve()] = scan(f)[1]
+    errors = []
+    for f in files:
+        links, _ = scan(f)
+        for lineno, link in links:
+            if link.startswith(EXTERNAL):
+                continue
+            target, _, frag = link.partition("#")
+            dest = (f.parent / target).resolve() if target else f.resolve()
+            if not dest.exists():
+                errors.append(f"{f}:{lineno}: broken path {link!r}")
+                continue
+            if frag and dest.suffix == ".md":
+                if dest not in anchors:
+                    anchors[dest] = scan(dest)[1]
+                if frag.lower() not in anchors[dest]:
+                    errors.append(f"{f}:{lineno}: missing anchor {link!r}")
+    for e in errors:
+        print(e)
+    if errors:
+        print(f"{len(errors)} broken link(s)")
+        return 1
+    print(f"markdown check OK ({len(files)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
