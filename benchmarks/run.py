@@ -15,8 +15,8 @@ import time
 
 from benchmarks import (bench_capacity, bench_configs, bench_empirical,
                         bench_hetero, bench_kernels, bench_milp,
-                        bench_multiapp, bench_perf, bench_roofline,
-                        bench_runtime)
+                        bench_multiapp, bench_perf, bench_reconfig,
+                        bench_roofline, bench_runtime)
 
 ALL = {
     "kernels": bench_kernels,        # kernel vs oracle + TPU roofline
@@ -29,6 +29,7 @@ ALL = {
     "runtime": bench_runtime,        # ClusterRuntime event-loop throughput
     "hetero": bench_hetero,          # two-pool heterogeneous plan + serve
     "multiapp": bench_multiapp,      # joint two-app co-location vs split
+    "reconfig": bench_reconfig,      # staged transitions vs atomic swap
 }
 
 

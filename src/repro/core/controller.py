@@ -22,7 +22,8 @@ from __future__ import annotations
 import dataclasses
 import time
 from dataclasses import dataclass, field
-from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Tuple
+from typing import (TYPE_CHECKING, Callable, Dict, List, Mapping, Optional,
+                    Sequence, Tuple)
 
 import numpy as np
 
@@ -37,6 +38,7 @@ from repro.hwspec import ClusterSpec
 
 if TYPE_CHECKING:   # pragma: no cover — repro.runtime loads lazily to
     # keep the core/runtime leaf imports cycle-free
+    from repro.reconfig.transition import TransitionPlan, TransitionPlanner
     from repro.runtime.backend import ExecutionBackend
     from repro.runtime.cluster import ClusterRuntime
     from repro.runtime.scenario import Scenario
@@ -56,6 +58,11 @@ class BinReport:
     p99_ms: float
     warm_replan: bool = False     # re-plan reused the previous bin's basis
     milp_nodes: int = 0           # B&B nodes spent in this bin's re-plan
+    # live-reconfiguration accounting (DESIGN.md §12; zero when the
+    # controller runs the legacy instantaneous-swap model)
+    transition_s: float = 0.0     # warm-up makespan charged this bin
+    transition_actions: int = 0   # drain + load actions executed
+    window_violation_rate: float = 0.0   # attainment INSIDE the window
 
 
 @dataclass
@@ -75,6 +82,12 @@ class Controller:
     # control-plane intake + pluggable data plane
     frontend: Optional[Frontend] = None
     backend_factory: Optional[Callable[[], "ExecutionBackend"]] = None
+    # live reconfiguration (DESIGN.md §12): a TransitionPlanner makes
+    # plan changes time-consuming staged processes executed on the
+    # runtime; None keeps the legacy instantaneous atomic swap.  Pair
+    # with planner_kwargs=dict(stickiness=...) to make the MILP prefer
+    # cheaply-reachable plans.
+    reconfig: Optional["TransitionPlanner"] = None
 
     def __post_init__(self):
         if self.cluster is None:
@@ -120,8 +133,9 @@ class Controller:
             self._backend = self.backend_factory()
         return self._backend
 
-    def make_runtime(self, *, seed: int = 0,
-                     time_base_s: float = 0.0) -> "ClusterRuntime":
+    def make_runtime(self, *, seed: int = 0, time_base_s: float = 0.0,
+                     transition: Optional["TransitionPlan"] = None
+                     ) -> "ClusterRuntime":
         """Deploy the current config on a fresh runtime (frontend-intaked)."""
         from repro.runtime.cluster import ClusterRuntime
         if self._config is None:
@@ -129,14 +143,24 @@ class Controller:
         return ClusterRuntime(self.graph, self._config, self.backend,
                               seed=seed, staleness_ms=self.staleness_ms,
                               frontend=self.frontend,
-                              time_base_s=time_base_s)
+                              time_base_s=time_base_s,
+                              transition=transition)
 
     # ------------------------------------------------------------------
     def step(self, bin_idx: int, demand_actual: float, *,
              sim_seconds: float = 12.0, seed: int = 0,
              dead_chips: int = 0,
+             dead_units: Optional[Mapping[str, int]] = None,
              scenario: Optional[Scenario] = None) -> BinReport:
-        """One demand-timestamp bin: predict → (re)plan → execute."""
+        """One demand-timestamp bin: predict → (re)plan → execute.
+
+        ``dead_units`` attributes failed capacity to its pool (units per
+        pool name) so the planner shrinks the RIGHT pool's Eq. 8 budget;
+        the scalar ``dead_chips`` remains the unattributed fallback
+        (shrinks the largest pool).  With ``reconfig`` set, a plan
+        change is executed as a staged live transition: the previous
+        bin's instances drain while the new plan's instances warm up,
+        and the bin report carries the transition window's attainment."""
         predicted = predict_demand(self._history + [demand_actual],
                                    self.slack) if self._history else \
             demand_actual * (1 + self.slack)
@@ -155,7 +179,11 @@ class Controller:
                     violation_trigger=self.violation_trigger,
                     demand_rps=predicted))
         self.frontend.reset_bin()   # the runtime records this bin's outcome
+        # dead_units shrinks each named pool's budget inside the planner
+        # (Planner.pool_budgets); only the unattributed dead_chips path
+        # still shrinks the scalar total (largest pool first)
         s_now = self.s_avail - dead_chips
+        incumbent = self._config
         if need:
             t0 = time.monotonic()
             # steady-state bins re-plan from the previous bin's incumbent
@@ -163,7 +191,9 @@ class Controller:
             warm0 = self.planner.stats.warm_basis_hits
             nodes0 = self.planner.stats.nodes
             self.planner.s_avail = s_now
-            cfg = self.planner.plan(predicted, self._fbar or None)
+            self.planner.dead_units = dict(dead_units or {})
+            cfg = self.planner.plan(predicted, self._fbar or None,
+                                    incumbent=incumbent)
             if cfg is not None:
                 self._config = cfg
                 self._planned_for = predicted
@@ -183,13 +213,25 @@ class Controller:
             milp_nodes = self.planner.stats.nodes - nodes0
             self.milp_times_ms.append(milp_ms)
 
+        # live reconfiguration: diff the incumbent against the new plan
+        # and charge the staged transition to this bin's serving window
+        transition: Optional["TransitionPlan"] = None
+        if (self.reconfig is not None and replanned
+                and incumbent is not None
+                and self._config is not incumbent):
+            transition = self.reconfig.plan(incumbent, self._config,
+                                            dead_units=dead_units)
+            if transition.is_empty:
+                transition = None
+
         if scenario is None:
             from repro.runtime.scenario import Scenario
             scenario = Scenario.poisson(
                 demand_actual, duration_s=sim_seconds,
                 warmup_s=min(3.0, sim_seconds / 4))
         runtime = self.make_runtime(
-            seed=seed, time_base_s=bin_idx * self.frontend.bin_seconds)
+            seed=seed, time_base_s=bin_idx * self.frontend.bin_seconds,
+            transition=transition)
         metrics = runtime.run(scenario)
         # two demand views coexist on purpose: _history holds the ground-
         # truth bin demand the predictor consumes (the paper's demand
@@ -212,6 +254,11 @@ class Controller:
             p99_ms=metrics.p99_ms,
             warm_replan=warm_replan,
             milp_nodes=milp_nodes,
+            transition_s=transition.makespan_s if transition else 0.0,
+            transition_actions=(transition.n_actions if transition
+                                else 0),
+            window_violation_rate=(metrics.window.violation_rate
+                                   if metrics.window is not None else 0.0),
         )
 
     # ------------------------------------------------------------------
@@ -251,19 +298,24 @@ class Controller:
         return best
 
     # ------------------------------------------------------------------
-    def place(self) -> Optional[List[Placement]]:
+    def place(self, dead_hosts: Optional[Mapping[str, Sequence]] = None
+              ) -> Optional[List[Placement]]:
         """Pack the current config's slices onto their pools' devices.
 
         One packer per pool (rectangle packer for torus pools, MIG slice
         packer for MIG pools); returns the concatenated placements, or
         None if ANY pool refuses its mix.  Without a multi-pool cluster
-        this is the legacy single-pool rectangle pack."""
+        this is the legacy single-pool rectangle pack.  ``dead_hosts``
+        maps pool name → that pool's packer dead-host list ((pod, row,
+        col) chips for a torus pool, device indices for a MIG pool) so
+        each pool routes around ITS OWN failures."""
         if self._config is None:
             return None
         by_pool: Dict[str, List[str]] = {}
         for tup, m in self._config.instances():
             by_pool.setdefault(tup.pool, []).extend([tup.segment] * m)
-        return _pack_pools(self.cluster, by_pool, self.num_pods)
+        return _pack_pools(self.cluster, by_pool, self.num_pods,
+                           dead_hosts)
 
     def max_serviceable_demand(self, hi_cap: float = 1e6) -> float:
         """Binary-search the largest plannable demand (Fig. 3 metric)."""
@@ -273,22 +325,27 @@ class Controller:
 
 # ---------------------------------------------------------------------------
 def _pack_pools(cluster: Optional[ClusterSpec],
-                by_pool: Dict[str, List[str]],
-                num_pods: int) -> Optional[List[Placement]]:
+                by_pool: Dict[str, List[str]], num_pods: int,
+                dead_hosts: Optional[Mapping[str, Sequence]] = None
+                ) -> Optional[List[Placement]]:
     """Pack segments pool by pool with each pool's own packer, offsetting
     instance ids so they stay unique across the concatenated list; the
     no-cluster legacy path is a single ``num_pods``-pod rectangle pack.
-    Returns None if ANY pool refuses its mix."""
+    ``dead_hosts`` maps pool name → that pool's dead-host list, handed to
+    the pool's own packer.  Returns None if ANY pool refuses its mix."""
+    dead_hosts = dead_hosts or {}
+    from repro.hwspec import DEFAULT_POOL, validate_pool_names
+    validate_pool_names(cluster, dead_hosts, "dead_hosts")
     if cluster is None:
         segs = [s for pool_segs in by_pool.values() for s in pool_segs]
-        return Placer(num_pods).pack(segs)
+        return Placer(num_pods, dead_hosts.get(DEFAULT_POOL)).pack(segs)
     out: List[Placement] = []
     base = 0
     for pool in cluster.pools:
         segs = by_pool.get(pool.name)
         if not segs:
             continue
-        pls = make_placer(pool).pack(segs)
+        pls = make_placer(pool, dead_hosts.get(pool.name)).pack(segs)
         if pls is None:
             return None
         out.extend(dataclasses.replace(pl, instance_id=pl.instance_id + base)
@@ -324,6 +381,10 @@ class MultiBinReport:
     warm_replan: bool
     milp_nodes: int
     per_app: Dict[str, AppBinReport]
+    # live-reconfiguration accounting (DESIGN.md §12)
+    transition_s: float = 0.0
+    transition_actions: int = 0
+    window_violation_rate: float = 0.0
 
 
 @dataclass
@@ -354,6 +415,12 @@ class MultiAppController:
     planner_kwargs: dict = field(default_factory=dict)
     cluster: Optional[ClusterSpec] = None
     backend_factory: Optional[Callable[[], "ExecutionBackend"]] = None
+    # live reconfiguration across the co-located apps (DESIGN.md §12)
+    reconfig: Optional["TransitionPlanner"] = None
+    # runtime profile refinement (paper §3.2): EWMA-blend each app's
+    # OBSERVED multiplicative factors back into the next joint solve
+    fbar_refine: bool = True
+    fbar_ewma: float = 0.3
 
     def __post_init__(self):
         if set(self.graphs) != set(self.profilers):
@@ -375,6 +442,9 @@ class MultiAppController:
         self._plan: Optional[JointPlan] = None
         self._planned_for: Dict[str, float] = {}
         self._history: Dict[str, List[float]] = {n: [] for n in self.graphs}
+        # app -> {(task, succ): observed multiplicative factor} (EWMA)
+        self._fbar: Dict[str, Dict[Tuple[str, str], float]] = {
+            n: {} for n in self.graphs}
         self.milp_times_ms: List[float] = []
 
     # ------------------------------------------------------------------
@@ -393,12 +463,16 @@ class MultiAppController:
     def step(self, bin_idx: int, demands: Dict[str, float], *,
              sim_seconds: float = 12.0, seed: int = 0,
              dead_chips: int = 0,
+             dead_units: Optional[Mapping[str, int]] = None,
              scenario: Optional["Scenario"] = None) -> MultiBinReport:
         """One demand bin: per-app predict → ONE joint (re)plan → serve.
 
         ``demands`` maps app name → this bin's actual entry demand (rps).
         ``scenario`` defaults to independent Poisson arrivals per app at
-        the actual demands."""
+        the actual demands.  ``dead_units`` attributes failed capacity
+        per pool (see :meth:`Controller.step`); with ``reconfig`` set,
+        a joint re-plan executes as a staged live transition across all
+        apps' deployments."""
         predicted: Dict[str, float] = {}
         for n in self.graphs:
             d = float(demands[n])
@@ -421,13 +495,18 @@ class MultiAppController:
         milp_ms = 0.0
         warm_replan = False
         milp_nodes = 0
-        s_now = self.s_avail - dead_chips
+        s_now = self.s_avail - dead_chips   # dead_units shrinks budgets
+        incumbent = self._plan
         if need:
             t0 = time.monotonic()
             warm0 = self.planner.stats.warm_basis_hits
             nodes0 = self.planner.stats.nodes
             self.planner.s_avail = s_now
-            plan = self.planner.plan_joint(predicted)
+            self.planner.dead_units = dict(dead_units or {})
+            fbar = ({n: fb for n, fb in self._fbar.items() if fb}
+                    if self.fbar_refine else {})
+            plan = self.planner.plan_joint(predicted, fbar or None,
+                                           incumbent=incumbent)
             if plan is not None:
                 self._plan = plan
                 self._planned_for = dict(predicted)
@@ -449,6 +528,14 @@ class MultiAppController:
             milp_nodes = self.planner.stats.nodes - nodes0
             self.milp_times_ms.append(milp_ms)
 
+        transition: Optional["TransitionPlan"] = None
+        if (self.reconfig is not None and replanned
+                and incumbent is not None and self._plan is not incumbent):
+            transition = self.reconfig.plan_joint(incumbent, self._plan,
+                                                  dead_units=dead_units)
+            if transition.is_empty:
+                transition = None
+
         if scenario is None:
             from repro.runtime.scenario import PoissonArrivals, Scenario
             scenario = Scenario.multi(
@@ -462,8 +549,11 @@ class MultiAppController:
             {n: (g, self._plan.plans[n]) for n, g in self.graphs.items()},
             self.backend, seed=seed, staleness_ms=self.staleness_ms,
             frontends=self.frontends,
-            time_base_s=bin_idx * bin_seconds)
+            time_base_s=bin_idx * bin_seconds,
+            transition=transition)
         metrics = runtime.run(scenario)
+        if self.fbar_refine:
+            self._refine_fbar(metrics)
         per_app: Dict[str, AppBinReport] = {}
         for n, g in self.graphs.items():
             self.frontends[n].extrapolate_bin(bin_idx, scenario.duration_s)
@@ -486,17 +576,54 @@ class MultiAppController:
             warm_replan=warm_replan,
             milp_nodes=milp_nodes,
             per_app=per_app,
+            transition_s=transition.makespan_s if transition else 0.0,
+            transition_actions=(transition.n_actions if transition
+                                else 0),
+            window_violation_rate=(metrics.window.violation_rate
+                                   if metrics.window is not None else 0.0),
         )
 
     # ------------------------------------------------------------------
-    def place(self) -> Optional[List[Placement]]:
+    def _refine_fbar(self, metrics) -> None:
+        """Fold each app's OBSERVED multiplicative factors back into the
+        planner input (paper §3.2: F̂ is a runtime-refined input, not a
+        constant).  The observation is the served-traffic ratio along
+        each single-predecessor edge — multi-predecessor joins cannot
+        attribute their traffic to one upstream task, so their edges
+        keep the registered factors.  Bins with early drops are skipped:
+        dropped children deflate the served ratio, and feeding that back
+        would under-provision the bottleneck task further (a negative
+        feedback ratchet) — only near-loss-free bins observe F̂."""
+        for n, g in self.graphs.items():
+            mm = metrics.app(n)
+            if mm.dropped > 0.01 * max(mm.total_requests, 1):
+                continue
+            served: Dict[str, int] = {}
+            for (t, _v), c in mm.traffic.items():
+                served[t] = served.get(t, 0) + c
+            fb = self._fbar[n]
+            for (t, t2) in g.edges:
+                if len(g.predecessors(t2)) != 1:
+                    continue
+                if served.get(t, 0) <= 0:
+                    continue
+                obs = served.get(t2, 0) / served[t]
+                prev = fb.get((t, t2))
+                fb[(t, t2)] = obs if prev is None else \
+                    (1 - self.fbar_ewma) * prev + self.fbar_ewma * obs
+
+    # ------------------------------------------------------------------
+    def place(self, dead_hosts: Optional[Mapping[str, Sequence]] = None
+              ) -> Optional[List[Placement]]:
         """Pack ALL apps' slices onto the shared pools' devices — the
         apps' instances are interleaved per pool exactly as they compete
-        in the MILP.  Returns None if any pool refuses its mix."""
+        in the MILP.  ``dead_hosts`` maps pool name → that pool's packer
+        dead-host list.  Returns None if any pool refuses its mix."""
         if self._plan is None:
             return None
         by_pool: Dict[str, List[str]] = {}
         for cfg in self._plan.plans.values():
             for tup, m in cfg.instances():
                 by_pool.setdefault(tup.pool, []).extend([tup.segment] * m)
-        return _pack_pools(self.cluster, by_pool, self.num_pods)
+        return _pack_pools(self.cluster, by_pool, self.num_pods,
+                           dead_hosts)

@@ -44,7 +44,7 @@ from repro.core.solver.branch_bound import MILPResult, solve_milp
 from repro.core.solver.simplex import BasisState, BoundedSimplex
 from repro.core.taskgraph import TaskGraph, qualify, split_qualified
 from repro.hwspec import (ClusterSpec, DEFAULT_POOL, ExplicitScheme,
-                          TorusScheme)
+                          TorusScheme, validate_pool_names)
 
 Key = Tuple[str, str, str, int]
 Path = Tuple[str, ...]
@@ -259,6 +259,17 @@ class Planner:
     # with budgets from the cluster (s_avail caps the total, shrinking the
     # largest pool first — the dead-capacity path).
     cluster: Optional[ClusterSpec] = None
+    # switching-cost awareness (DESIGN.md §12): with an incumbent plan,
+    # activating a tuple TYPE absent from it costs an extra
+    # stickiness × cost × price in the objective (per y variable) — the
+    # solver prefers plans reachable without new weight loads /
+    # repartitions.  0.0 (default) reproduces the history-free objective
+    # bit-for-bit.
+    stickiness: float = 0.0
+    # per-pool dead capacity (failed hosts), subtracted from that pool's
+    # Eq. 8 budget; the scalar s_avail dead-chip path (shrink the largest
+    # pool) remains the fallback when the caller has no pool attribution
+    dead_units: Dict[str, int] = field(default_factory=dict)
 
     def __post_init__(self):
         if self.beta is None:
@@ -291,21 +302,36 @@ class Planner:
     # ------------------------------------------------------------------
     def pool_budgets(self) -> Dict[str, int]:
         """Per-pool capacity (Eq. 8 rhs), re-derived on every plan() so a
-        controller mutating ``s_avail`` (dead chips) stays effective."""
+        controller mutating ``s_avail`` (dead chips) or ``dead_units``
+        (pool-attributed failures) stays effective."""
         cl = self.cluster
+        dead = self.dead_units
+        if dead:
+            # a typo'd pool name would silently model the failure as
+            # zero — fail as loud as the runtime's pool-scoped hooks
+            validate_pool_names(cl, dead, "dead_units")
         if cl is None or len(cl.pools) == 1:
             name = cl.pools[0].name if cl is not None else DEFAULT_POOL
-            budget = int(self.s_avail)
+            # dead capacity shrinks the pool's budget HERE (not via a
+            # caller-side s_avail adjustment), so direct Planner users
+            # and the controller see the same contract
+            budget = int(self.s_avail) - dead.get(name, 0)
             # a user-described (explicit) cluster states PHYSICAL capacity
             # — cap so plan() never promises slices place() cannot realize.
             # Profiler-synthesized legacy clusters keep the uncapped
             # scalar-s_avail semantics (pre-hwspec pinned behavior).
             if cl is not None and not getattr(self.profiler,
                                               "cluster_implicit", True):
-                budget = min(budget, cl.pools[0].capacity_units)
-            return {name: budget}
-        budgets = dict(cl.budgets())
-        deficit = sum(budgets.values()) - max(int(self.s_avail), 0)
+                budget = min(budget,
+                             cl.pools[0].capacity_units - dead.get(name, 0))
+            return {name: max(budget, 0) if dead else budget}
+        budgets = {n: max(0, b - dead.get(n, 0))
+                   for n, b in cl.budgets().items()}
+        # the scalar cap is net of the pool-attributed dead units, so an
+        # ADDITIONAL unattributed dead_chips shrink (s_avail already
+        # reduced by the caller) still bites on top of dead_units
+        deficit = sum(budgets.values()) - max(
+            int(self.s_avail) - sum(dead.values()), 0)
         while deficit > 0:
             p = max(budgets, key=lambda n: budgets[n])
             cut = min(deficit, budgets[p])
@@ -403,24 +429,58 @@ class Planner:
     # public entry
     # ------------------------------------------------------------------
     def plan(self, demand_rps: float,
-             fbar: Optional[Mapping[Tuple[str, str], float]] = None
+             fbar: Optional[Mapping[Tuple[str, str], float]] = None,
+             incumbent: Optional[PlanConfig] = None
              ) -> Optional[PlanConfig]:
-        """Solve for configuration at entry-task demand R (Eq. 14)."""
+        """Solve for configuration at entry-task demand R (Eq. 14).
+
+        ``incumbent`` is the currently-deployed plan; with a non-zero
+        ``stickiness`` the objective penalizes activating tuple types
+        it does not already run (switching-cost awareness, DESIGN.md
+        §12).  With ``stickiness == 0`` the incumbent is ignored and the
+        solve is bit-identical to the history-free formulation."""
+        sticky = self._sticky_keys(incumbent)
         if self.features.task_graph_informed:
-            cfg = self._plan_joint(demand_rps, fbar)
+            cfg = self._plan_joint(demand_rps, fbar, sticky)
             # The T search space is a strict superset of the static split —
             # if the joint heuristics miss, the static solution is still a
-            # member of the space, so fall back (and keep the cheaper one).
-            static = self._plan_static_budgets(demand_rps, fbar)
+            # member of the space, so fall back (and keep the cheaper one,
+            # where 'cheaper' includes the switching cost when an
+            # incumbent is sticky: a smaller-by-slices static plan built
+            # from all-new tuple types must not override a joint plan
+            # that reuses the running fleet).
+            static = self._plan_static_budgets(demand_rps, fbar, sticky)
             if cfg is None:
                 return static
-            if static is not None and static.slices < cfg.slices:
+            if static is not None and \
+                    (static.slices + self._switch_cost(static, sticky)
+                     < cfg.slices + self._switch_cost(cfg, sticky)):
                 return static
             return cfg
-        return self._plan_static_budgets(demand_rps, fbar)
+        return self._plan_static_budgets(demand_rps, fbar, sticky)
+
+    def _sticky_keys(self, incumbent: Optional[PlanConfig]
+                     ) -> Optional[frozenset]:
+        if incumbent is None or self.stickiness <= 0.0:
+            return None
+        return frozenset(k for k, mm in incumbent.counts.items() if mm > 0)
+
+    def _switch_cost(self, cfg: PlanConfig,
+                     sticky: Optional[frozenset]) -> float:
+        """The objective's switching penalty of a plan (0 history-free):
+        stickiness × cost × price per ACTIVE tuple type outside the
+        incumbent — the same term `_assemble` puts on the y variables."""
+        if sticky is None:
+            return 0.0
+        return self.stickiness * sum(
+            j.cost * self._price(j.pool)
+            for k, j in cfg.tuples.items()
+            if cfg.counts.get(k, 0) > 0 and k not in sticky)
 
     # ------------------------------------------------------------------
-    def _plan_joint(self, R: float, fbar) -> Optional[PlanConfig]:
+    def _plan_joint(self, R: float, fbar,
+                    sticky: Optional[frozenset] = None
+                    ) -> Optional[PlanConfig]:
         g = self.graph
         demand = {t: r / self.headroom
                   for t, r in g.demand_at_tasks(R, fbar).items()}
@@ -438,10 +498,12 @@ class Planner:
         block = _AppBlock("", tuple(paths), g.slo_latency_ms,
                           g.slo_accuracy, amax, w)
         return self._solve(tuples, task_tuples, demand, blocks=[block],
-                           budgets=self.pool_budgets())
+                           budgets=self.pool_budgets(), sticky=sticky)
 
     # ------------------------------------------------------------------
-    def _plan_static_budgets(self, R: float, fbar) -> Optional[PlanConfig]:
+    def _plan_static_budgets(self, R: float, fbar,
+                             sticky: Optional[frozenset] = None
+                             ) -> Optional[PlanConfig]:
         """Appendix B: static per-task latency & resource budgets, then
         independent per-task solves."""
         g = self.graph
@@ -505,7 +567,8 @@ class Planner:
                               acc_floor[t], amax1, w1)
             sub = self._solve(
                 adm, {t: list(range(len(adm)))}, {t: demand[t]},
-                blocks=[block], budgets=sub_budgets, single_task=t)
+                blocks=[block], budgets=sub_budgets, single_task=t,
+                sticky=sticky)
             if sub is None:
                 return None
             counts.update(sub.counts)
@@ -522,14 +585,18 @@ class Planner:
     def _assemble(self, tuples: List[TupleVar],
                   task_tuples: Dict[str, List[int]], caps: np.ndarray,
                   *, blocks: Sequence[_AppBlock], budgets: Dict[str, int],
-                  single_task: Optional[str]) -> _Assembled:
+                  single_task: Optional[str],
+                  sticky: Optional[frozenset] = None) -> _Assembled:
         """Build the demand-independent MILP matrices (throughput rhs is a
         template patched per solve).
 
         ``blocks`` carries the per-app rows: latency paths (Eq. 3),
         accuracy bound (Eq. 12-13) and objective accuracy weights are
         emitted per block, while the Eq. 8 capacity rows are shared —
-        that sharing is what makes a multi-block solve a JOINT plan."""
+        that sharing is what makes a multi-block solve a JOINT plan.
+        ``sticky`` (the incumbent's active tuple keys) adds the
+        switching-cost term to the objective: activating a tuple type
+        outside it pays stickiness × cost × price on its y variable."""
         tasks = list(task_tuples)
         # per-task app attribution (tasks are disjoint across blocks)
         blk_of: Dict[str, _AppBlock] = {t: b for b in blocks for t in b.w}
@@ -612,6 +679,16 @@ class Planner:
         for i in range(nj):
             c[ix_x[i]] = (self.beta * tuples[i].cost
                           * self._price(tuples[i].pool))
+        if sticky is not None:
+            # switching cost: a tuple type NOT in the incumbent needs a
+            # weight load (and possibly a repartition) to activate — its
+            # y variable carries the penalty, so any count of an already
+            # running type stays free while the first instance of a new
+            # type pays once
+            for i in range(nj):
+                if tuples[i].key not in sticky:
+                    c[ix_y[i]] += (self.stickiness * tuples[i].cost
+                                   * self._price(tuples[i].pool))
         for t in tasks:
             blk = blk_of[t]
             for k in range(nz[t]):
@@ -658,7 +735,8 @@ class Planner:
     def _solve(self, tuples: List[TupleVar],
                task_tuples: Dict[str, List[int]],
                demand: Dict[str, float], *, blocks: Sequence[_AppBlock],
-               budgets: Dict[str, int], single_task: Optional[str] = None
+               budgets: Dict[str, int], single_task: Optional[str] = None,
+               sticky: Optional[frozenset] = None
                ) -> Optional["PlanConfig"]:
         if self.prune_dominated:
             tuples, task_tuples = _prune_dominated(tuples, task_tuples)
@@ -675,13 +753,17 @@ class Planner:
         cache_key = (single_task, tuple(tuples),
                      tuple(int(cp) for cp in caps),
                      tuple(b.sig for b in blocks),
-                     tuple(sorted(budgets.items())))
+                     tuple(sorted(budgets.items())),
+                     # sticky set changes the objective vector, so it is
+                     # part of the matrix identity (None = history-free)
+                     (round(self.stickiness, 12), sticky)
+                     if sticky is not None else None)
         asm = self._matrix_cache.pop(cache_key, None)
         if asm is None:
             self.stats.matrix_cache_misses += 1
             asm = self._assemble(tuples, task_tuples, caps,
                                  blocks=blocks, budgets=budgets,
-                                 single_task=single_task)
+                                 single_task=single_task, sticky=sticky)
         else:
             self.stats.matrix_cache_hits += 1
         self._matrix_cache[cache_key] = asm       # LRU: re-insert as newest
@@ -1233,22 +1315,32 @@ class JointPlanner(Planner):
         for sub in self._subs.values():
             sub.invalidate_caches()
 
-    def plan(self, demand_rps, fbar=None):
+    def plan(self, demand_rps, fbar=None, incumbent=None):
         raise TypeError("JointPlanner plans several apps at once — call "
                         "plan_joint({app: rps, ...}) instead of plan()")
 
     # ------------------------------------------------------------------
     def plan_joint(self, demands: Mapping[str, float],
-                   fbar: Optional[Mapping[str, Mapping]] = None
+                   fbar: Optional[Mapping[str, Mapping]] = None,
+                   incumbent: Optional[JointPlan] = None
                    ) -> Optional[JointPlan]:
         """Solve ONE joint configuration MILP at per-app entry demands.
 
         ``demands`` maps app name → entry-task rps (apps absent from the
         mapping get zero demand and an empty deployment); ``fbar``
         optionally maps app name → that app's observed multiplicative
-        factors (paper §3.2).  Returns a :class:`JointPlan`, or None when
-        no configuration serves every app's demand and SLOs inside the
-        shared pool budgets."""
+        factors (paper §3.2).  ``incumbent`` is the currently-deployed
+        joint plan — with ``stickiness > 0`` the objective penalizes
+        activating tuple types no app currently runs (see
+        :meth:`Planner.plan`).  Returns a :class:`JointPlan`, or None
+        when no configuration serves every app's demand and SLOs inside
+        the shared pool budgets."""
+        sticky: Optional[frozenset] = None
+        if incumbent is not None and self.stickiness > 0.0:
+            sticky = frozenset(
+                (qualify(app, k[0]),) + k[1:]
+                for app, cfg in incumbent.plans.items()
+                for k, m in cfg.counts.items() if m > 0)
         tuples: List[TupleVar] = []
         task_tuples: Dict[str, List[int]] = {}
         demand: Dict[str, float] = {}
@@ -1278,7 +1370,7 @@ class JointPlanner(Planner):
             blocks.append(_AppBlock(a.name, paths, g.slo_latency_ms,
                                     g.slo_accuracy, acc_mod.a_max(g), w))
         return self._solve(tuples, task_tuples, demand, blocks=blocks,
-                           budgets=self.pool_budgets())
+                           budgets=self.pool_budgets(), sticky=sticky)
 
     # ------------------------------------------------------------------
     def max_total_scale(self, mix: Mapping[str, float], hi_cap: float = 1e6

@@ -50,7 +50,8 @@ so a profiler key's slice name alone identifies its pool; plans record
 imports keep working.
 """
 from repro.hwspec.cluster import (ClusterSpec, Pool, default_cluster,
-                                  hetero_cluster, tight_hetero_cluster)
+                                  hetero_cluster, tight_hetero_cluster,
+                                  validate_pool_names)
 from repro.hwspec.device import A100_40GB, DEFAULT_POOL, TPU_V5E, DeviceSpec
 from repro.hwspec.partition import (ExplicitScheme, MigScheme,
                                     PartitionScheme, Slice, TorusScheme,
@@ -60,5 +61,5 @@ __all__ = [
     "A100_40GB", "ClusterSpec", "DEFAULT_POOL", "DeviceSpec",
     "ExplicitScheme", "MigScheme", "PartitionScheme", "Pool", "Slice",
     "TorusScheme", "TPU_V5E", "default_cluster", "hetero_cluster",
-    "slice_from_segment", "tight_hetero_cluster",
+    "slice_from_segment", "tight_hetero_cluster", "validate_pool_names",
 ]

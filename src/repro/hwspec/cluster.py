@@ -10,7 +10,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import cached_property
-from typing import Dict, Tuple
+from typing import Dict, Iterable, Optional, Tuple
 
 from repro.hwspec.device import A100_40GB, DEFAULT_POOL, TPU_V5E, DeviceSpec
 from repro.hwspec.partition import (MigScheme, PartitionScheme, Slice,
@@ -99,6 +99,21 @@ class ClusterSpec:
 
     def prices(self) -> Dict[str, float]:
         return {p.name: p.slice_price for p in self.pools}
+
+
+# ---------------------------------------------------------------------------
+def validate_pool_names(cluster: Optional[ClusterSpec],
+                        names: Iterable[str], what: str) -> None:
+    """Fail loud when ``names`` references a pool the cluster doesn't
+    have — a typo'd pool name in a per-pool mapping (dead capacity,
+    dead hosts, ...) would otherwise silently model the input as zero.
+    ``cluster=None`` means the legacy single default pool."""
+    known = ({p.name for p in cluster.pools} if cluster is not None
+             else {DEFAULT_POOL})
+    unknown = set(names) - known
+    if unknown:
+        raise ValueError(f"{what} names unknown pools {sorted(unknown)} "
+                         f"(cluster has {sorted(known)})")
 
 
 # ---------------------------------------------------------------------------

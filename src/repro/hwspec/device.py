@@ -9,7 +9,7 @@ become expressible.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Mapping
+from typing import Mapping, Optional
 
 DEFAULT_POOL = "v5e"
 
@@ -37,6 +37,13 @@ class DeviceSpec:
         flops_efficiency / hbm_efficiency / ici_efficiency: achieved
             fraction of each roof; fit these from measured engine runs
             to calibrate a new device.
+        weight_load_bw: checkpoint-staging bandwidth (bytes/s) into one
+            device — the host/NIC/PCIe path weights travel on during a
+            reconfiguration, NOT the on-device HBM roof.  ``None``
+            derives it from the HBM roof as ``hbm_bw / 256`` (a
+            PCIe/NIC-class link is roughly two orders of magnitude below
+            HBM: ~3.2 GB/s on v5e, ~6 GB/s on A100), which is what the
+            reconfiguration engine charges per weight load.
     """
     name: str
     peak_flops: Mapping[str, float]      # dtype -> FLOP/s
@@ -47,6 +54,7 @@ class DeviceSpec:
     flops_efficiency: float = 0.55
     hbm_efficiency: float = 0.80
     ici_efficiency: float = 0.75
+    weight_load_bw: Optional[float] = None   # None -> hbm_bw / 256
 
     def peak(self, quant: str) -> float:
         try:
@@ -60,6 +68,20 @@ class DeviceSpec:
     @property
     def usable_hbm_bytes(self) -> float:
         return self.hbm_bytes * self.hbm_usable_fraction
+
+    @property
+    def staging_bw(self) -> float:
+        """Weight-staging bandwidth into one device (see weight_load_bw)."""
+        return (self.weight_load_bw if self.weight_load_bw is not None
+                else self.hbm_bw / 256.0)
+
+    def weight_load_s(self, nbytes: float,
+                      memory_fraction: float = 1.0) -> float:
+        """Seconds to stage ``nbytes`` of weights into one device (a
+        partition owning ``memory_fraction`` of the device gets the same
+        share of the staging path — MIG slices load proportionally
+        slower)."""
+        return float(nbytes) / max(self.staging_bw * memory_fraction, 1.0)
 
 
 # ---------------------------------------------------------------------------

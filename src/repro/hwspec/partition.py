@@ -79,6 +79,22 @@ class PartitionScheme(Protocol):
         """Slice cost of the 'whole accelerator' unit (spatial=False)."""
         ...
 
+    @property
+    def repartition_delay_s(self) -> float:
+        """Seconds to carve a NEW physical slice that no drained slice
+        already matches (MIG: destroy/create GPU instances; torus: a
+        logical regrouping of chips).  Charged once per carved slice by
+        the reconfiguration engine (``repro.reconfig``)."""
+        ...
+
+    @property
+    def repartition_blocks(self) -> bool:
+        """Whether carving blocks the pool's outgoing capacity: a MIG
+        device being repartitioned cannot keep serving its old slices,
+        while a torus regrouping is a host-side bookkeeping change the
+        old rectangles serve straight through."""
+        ...
+
     def slices(self) -> Tuple[Slice, ...]:
         ...
 
@@ -115,6 +131,8 @@ class TorusScheme(_SchemeBase):
     max_chips: int = 64
     max_streams: int = MAX_STREAMS
     unopt_chips: int = 8          # the 'one H100' analogue (DESIGN.md §2)
+    # regrouping chips into a new rectangle is a host-side change
+    repartition_delay_s: float = 0.25
 
     @property
     def units_per_device(self) -> int:
@@ -123,6 +141,10 @@ class TorusScheme(_SchemeBase):
     @property
     def unopt_cost(self) -> int:
         return self.unopt_chips
+
+    @property
+    def repartition_blocks(self) -> bool:
+        return False              # old rectangles serve through a reshape
 
     def slices(self) -> Tuple[Slice, ...]:
         return self._slices
@@ -161,6 +183,10 @@ class MigScheme(_SchemeBase):
     total_g: int = 7              # compute budget per device
     total_mem_slots: int = 8      # memory slots per device
     max_streams: int = MAX_STREAMS
+    # destroying/creating MIG GPU instances takes the device through a
+    # reconfiguration pause (ParvaGPU: repartitioning overhead is a
+    # first-order cost of spatial GPU sharing)
+    repartition_delay_s: float = 8.0
 
     @property
     def units_per_device(self) -> int:
@@ -169,6 +195,10 @@ class MigScheme(_SchemeBase):
     @property
     def unopt_cost(self) -> int:
         return max(p.g for p in self.profiles)
+
+    @property
+    def repartition_blocks(self) -> bool:
+        return True               # the device pauses while re-carved
 
     def slices(self) -> Tuple[Slice, ...]:
         return self._slices
@@ -193,6 +223,7 @@ class ExplicitScheme(_SchemeBase):
     explicit: Tuple[Slice, ...]
     pod_shape: Tuple[int, int] = (16, 16)
     unopt: int = 8
+    repartition_delay_s: float = 0.0   # ad-hoc catalogues: free reshapes
 
     @property
     def units_per_device(self) -> int:
@@ -201,6 +232,10 @@ class ExplicitScheme(_SchemeBase):
     @property
     def unopt_cost(self) -> int:
         return self.unopt
+
+    @property
+    def repartition_blocks(self) -> bool:
+        return False
 
     def slices(self) -> Tuple[Slice, ...]:
         return self.explicit

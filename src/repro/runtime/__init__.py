@@ -17,10 +17,11 @@ from repro.runtime.cluster import ClusterRuntime
 from repro.runtime.scenario import (AppArrivals, ArrivalProcess,
                                     CapacityEvent, FailureEvent,
                                     PoissonArrivals, Scenario,
-                                    TraceArrivals)
+                                    TraceArrivals, TransitionEvent)
 
 __all__ = [
     "AppArrivals", "ArrivalProcess", "CapacityEvent", "ClusterRuntime",
     "EngineBackend", "ExecutionBackend", "FailureEvent", "PoissonArrivals",
     "Scenario", "Server", "SimBackend", "SimMetrics", "TraceArrivals",
+    "TransitionEvent",
 ]

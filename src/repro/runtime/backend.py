@@ -18,7 +18,8 @@ from __future__ import annotations
 import time
 import zlib
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Protocol, Sequence, TYPE_CHECKING, runtime_checkable
+from typing import (Any, Dict, List, Mapping, Optional, Protocol, Sequence,
+                    TYPE_CHECKING, runtime_checkable)
 
 import numpy as np
 
@@ -87,12 +88,19 @@ class EngineBackend:
     compile is excluded from service times by a warmup generate.  Service
     time is the measured wall-clock of the batched greedy decode, scaled
     by ``time_scale`` (sim-seconds per wall-second).
+
+    ``pool_time_scale`` maps a ClusterSpec pool name to ITS scale so a
+    heterogeneous CPU parity run reflects relative device speeds (e.g.
+    a MIG 2g slice of an A100 is not a v5e rectangle): a server's pool
+    picks its own scale, pools absent from the map fall back to
+    ``time_scale``.
     """
     max_batch: int = 4
     max_seq: int = 64
     prompt_len: int = 8
     max_new: int = 4
     time_scale: float = 1.0
+    pool_time_scale: Optional[Mapping[str, float]] = None
     _engines: Dict[str, Any] = field(default_factory=dict, repr=False)
     # one graph per bound app ("" = single-app); engines are shared
     # across apps by arch — co-located apps reuse the same jit'd engine
@@ -127,6 +135,12 @@ class EngineBackend:
             self._engines[arch_name] = eng
         return eng
 
+    def scale_for(self, pool: str) -> float:
+        """The time scale of one pool (``time_scale`` if unmapped)."""
+        if self.pool_time_scale is not None and pool in self.pool_time_scale:
+            return float(self.pool_time_scale[pool])
+        return self.time_scale
+
     def service_s(self, server, batch, now_s, rng):
         graph = self._graphs[getattr(server, "app", "")]
         task = graph.tasks[server.tup.task]
@@ -141,7 +155,7 @@ class EngineBackend:
         wall = time.monotonic() - t0
         # a fixed-shape engine may need several launches for a big batch
         launches = -(-len(batch) // eng.cfg.max_batch)
-        return wall * launches * self.time_scale
+        return wall * launches * self.scale_for(server.tup.pool)
 
     def on_capacity_change(self, servers):
         pass

@@ -30,7 +30,8 @@ import heapq
 import itertools
 import math
 from dataclasses import dataclass
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import (TYPE_CHECKING, Dict, List, Mapping, Optional, Sequence,
+                    Tuple)
 
 import numpy as np
 
@@ -41,6 +42,10 @@ from repro.core.taskgraph import TaskGraph, qualify, split_qualified
 from repro.runtime.backend import ExecutionBackend, SimBackend
 from repro.runtime.metrics import Server, SimMetrics
 from repro.runtime.scenario import CapacityEvent, FailureEvent, Scenario
+
+if TYPE_CHECKING:   # pragma: no cover — typing only (repro.reconfig
+    # imports the MILP layer; the runtime consumes plans duck-typed)
+    from repro.reconfig.transition import TransitionPlan
 
 __all__ = ["ClusterRuntime", "Server", "SimMetrics"]
 
@@ -67,17 +72,20 @@ class ClusterRuntime:
     def __init__(self, graph: TaskGraph, config: PlanConfig,
                  backend: Optional[ExecutionBackend] = None, *,
                  seed: int = 0, staleness_ms: float = 20.0,
-                 frontend=None, time_base_s: float = 0.0):
+                 frontend=None, time_base_s: float = 0.0,
+                 transition: Optional["TransitionPlan"] = None):
         self._setup({"": _AppState("", graph, config, frontend)},
                     backend, seed=seed, staleness_ms=staleness_ms,
-                    time_base_s=time_base_s)
+                    time_base_s=time_base_s, transition=transition)
 
     @classmethod
     def multi(cls, apps: Mapping[str, Tuple[TaskGraph, PlanConfig]],
               backend: Optional[ExecutionBackend] = None, *,
               seed: int = 0, staleness_ms: float = 20.0,
               frontends: Optional[Mapping[str, object]] = None,
-              time_base_s: float = 0.0) -> "ClusterRuntime":
+              time_base_s: float = 0.0,
+              transition: Optional["TransitionPlan"] = None
+              ) -> "ClusterRuntime":
         """Serve several co-located apps on one event loop.
 
         ``apps`` maps the (non-empty) app name to that app's graph and
@@ -93,27 +101,32 @@ class ClusterRuntime:
         rt._setup({name: _AppState(name, g, cfg, fes.get(name))
                    for name, (g, cfg) in apps.items()},
                   backend, seed=seed, staleness_ms=staleness_ms,
-                  time_base_s=time_base_s)
+                  time_base_s=time_base_s, transition=transition)
         return rt
 
     # ------------------------------------------------------------------
     def _setup(self, apps: Dict[str, _AppState],
                backend: Optional[ExecutionBackend], *, seed: int,
-               staleness_ms: float, time_base_s: float):
+               staleness_ms: float, time_base_s: float,
+               transition: Optional["TransitionPlan"] = None):
         self._apps = apps
         self._single = apps.get("") if list(apps) == [""] else None
         self.backend = backend if backend is not None else SimBackend()
         self.rng = np.random.default_rng(seed)
         self.staleness_ms = staleness_ms
         self.time_base_s = time_base_s
+        self._transition = transition
         self.servers: List[Server] = []
-        for name, st in apps.items():
-            for tup, m in st.config.instances():
-                # the tuple carries its slice's stream multiplicity, so
-                # the runtime needs no partition-catalogue lookup
-                for _ in range(m * tup.streams):
-                    self.servers.append(
-                        Server(tup, len(self.servers), app=name))
+        if transition is None:
+            for name, st in apps.items():
+                for tup, m in st.config.instances():
+                    # the tuple carries its slice's stream multiplicity, so
+                    # the runtime needs no partition-catalogue lookup
+                    for _ in range(m * tup.streams):
+                        self.servers.append(
+                            Server(tup, len(self.servers), app=name))
+        else:
+            self._build_transition_fleet(transition)
         self._next_idx = len(self.servers)
         self.by_task: Dict[str, List[Server]] = {}
         for s in self.servers:
@@ -136,6 +149,52 @@ class ClusterRuntime:
         else:
             for name, st in apps.items():
                 self.backend.bind(st.graph, st.config, app=name)
+
+    # ------------------------------------------------------------------
+    def _build_transition_fleet(self, plan: "TransitionPlan"):
+        """Deploy a mid-transition fleet (DESIGN.md §12): the target
+        config's instances split into warm keeps and loading instances
+        (dispatchable only from ``ready_s``), plus the OUTGOING config's
+        draining instances (serving until ``retire_s``).  Fails loud if
+        the plan's keep+load bookkeeping does not reproduce the deployed
+        config exactly — a transition for the wrong target is a bug."""
+        keep: Dict[Tuple[str, tuple], int] = {}
+        for a in plan.keeps:
+            k = (a.app, a.tup.key)
+            keep[k] = keep.get(k, 0) + a.count
+        loads: Dict[Tuple[str, tuple], List] = {}
+        for a in plan.loads:
+            loads.setdefault((a.app, a.tup.key), []).append(a)
+        for name, st in self._apps.items():
+            for tup, m in st.config.instances():
+                kc = keep.pop((name, tup.key), 0)
+                lds = loads.pop((name, tup.key), [])
+                if kc + sum(a.count for a in lds) != m:
+                    raise ValueError(
+                        f"transition fleet mismatch for app {name!r} "
+                        f"tuple {tup.key}: keep {kc} + load "
+                        f"{sum(a.count for a in lds)} != planned {m}")
+                for _ in range(kc * tup.streams):
+                    self.servers.append(
+                        Server(tup, len(self.servers), app=name))
+                for a in lds:
+                    for _ in range(a.count * tup.streams):
+                        self.servers.append(
+                            Server(tup, len(self.servers),
+                                   busy_until=a.ready_s, app=name))
+        stray = [k for k, c in keep.items() if c] + list(loads)
+        if stray:
+            raise ValueError(
+                f"transition names tuples absent from the deployed "
+                f"config: {sorted(stray)}")
+        for a in plan.drains:
+            if a.app not in self._apps:
+                raise ValueError(
+                    f"transition drains unknown app {a.app!r}")
+            for _ in range(a.count * a.tup.streams):
+                self.servers.append(
+                    Server(a.tup, len(self.servers), app=a.app,
+                           retire_at=a.retire_s))
 
     # -- single-app compatibility surface ------------------------------
     @property
@@ -239,6 +298,65 @@ class ClusterRuntime:
         if victims:
             self.fail_instances(victims)
 
+    def apply_transition(self, plan: "TransitionPlan", now: float):
+        """Execute a reconfiguration LIVE on the running fleet: the
+        current servers must be the plan's incumbent deployment.  Drained
+        instances get their ``retire_at`` stamped (they finish in-flight
+        work and stop accepting batches), incoming instances are created
+        with their warm-up as ``busy_until``, and each app's config /
+        batching timeouts switch to the transition's target."""
+        for a in plan.drains:
+            qt = qualify(a.app, a.tup.task)
+            cand = [s for s in self.by_task.get(qt, [])
+                    if s.tup.key == a.tup.key and s.app == a.app
+                    and s.retire_at == math.inf]
+            need = a.count * a.tup.streams
+            if len(cand) < need:
+                raise RuntimeError(
+                    f"transition drains {need} streams of {a.tup.key} "
+                    f"(app {a.app!r}) but only {len(cand)} are live")
+            for s in cand[:need]:
+                s.retire_at = now + a.retire_s
+        for a in plan.loads:
+            qt = qualify(a.app, a.tup.task)
+            for _ in range(a.count * a.tup.streams):
+                s = Server(a.tup, self._next_idx, app=a.app,
+                           busy_until=now + a.ready_s)
+                self._next_idx += 1
+                self.servers.append(s)
+                self.by_task.setdefault(qt, []).append(s)
+        for app, cfg in plan.target.items():
+            st = self._apps.get(app)
+            if st is None:
+                raise RuntimeError(
+                    f"transition targets unknown app {app!r} "
+                    f"(runtime serves {sorted(self._apps)})")
+            st.config = cfg
+            for t in st.graph.tasks:
+                self._timeout[qualify(app, t)] = cfg.lhat(t)
+        self._fastest = self._fastest_remaining()
+        self.backend.on_capacity_change(self.servers)
+
+    def _sweep_retired(self, now: float):
+        """Remove drained servers that are IDLE past their retire_at —
+        they can never serve again, and leaving them in ``by_task``
+        would fool the lost-all-instances guard, the fastest-remaining
+        map and clone-template lookups.  Runs on the scheduled retire
+        sweeps AND after a retired stream's last batch completes, so
+        early-drop estimates and the backend always see the true fleet
+        in one batched pass."""
+        gone = [s for s in self.servers
+                if s.retire_at <= now + 1e-12
+                and s.busy_until <= now + 1e-12]
+        if not gone:
+            return
+        dead = set(id(s) for s in gone)
+        self.servers = [s for s in self.servers if id(s) not in dead]
+        for qt, peers in self.by_task.items():
+            self.by_task[qt] = [s for s in peers if id(s) not in dead]
+        self._fastest = self._fastest_remaining()
+        self.backend.on_capacity_change(self.servers)
+
     def _apply_capacity(self, ev: CapacityEvent, now: float):
         qt = qualify(ev.app, ev.task)
         if ev.delta >= 0:
@@ -260,6 +378,19 @@ class ClusterRuntime:
     # ------------------------------------------------------------------
     def run(self, scenario: Scenario) -> SimMetrics:
         m = SimMetrics()
+        # transition windows (constructor plan starts at t=0; scheduled
+        # TransitionEvents open theirs when they fire) — requests
+        # ARRIVING inside any window are additionally filed under the
+        # ``m.window`` ledger so the reconfiguration cost stays visible
+        windows: List[Tuple[float, float]] = []
+        if self._transition is not None:
+            windows.append((0.0, self._transition.makespan_s))
+        if self._transition is not None or scenario.transitions:
+            m.window = SimMetrics()
+
+        def in_window(t: float) -> bool:
+            return any(a <= t < b for a, b in windows)
+
         ids = self._ids
         seq = itertools.count()
         events: List[Tuple[float, int, str, object]] = []
@@ -322,6 +453,14 @@ class ClusterRuntime:
             push(ev.at_s, "fail", ev)
         for ev in scenario.capacity:
             push(ev.at_s, "capacity", ev)
+        for ev in scenario.transitions:
+            push(ev.at_s, "transition", ev.plan)
+        if self._transition is not None:
+            # sweep each drain wave out once its hand-over passes — an
+            # idle drained stream gets no 'done' event to retire it
+            for t_r in sorted({a.retire_s
+                               for a in self._transition.drains}):
+                push(t_r, "retire_sweep", None)
         for qt, q in self.queues.items():
             if q:                   # leftover work from a prior run
                 push(0.0, "poll", qt)
@@ -339,21 +478,32 @@ class ClusterRuntime:
                                     timeout)
                 if reason is None:
                     keep.append(req)
-                elif root_t[req.root_id] >= warmup_s:
-                    fan = max(1, round(sum(
-                        g.factor(task, g.tasks[task].most_accurate.name, t2)
-                        for t2 in g.successors(task)) or 1))
-                    m.dropped += fan
-                    if app:
-                        sub(app).dropped += fan
+                else:
+                    rt0 = root_t[req.root_id]
+                    in_main = rt0 >= warmup_s
+                    in_win = m.window is not None and in_window(rt0)
+                    if in_main or in_win:
+                        fan = max(1, round(sum(
+                            g.factor(task,
+                                     g.tasks[task].most_accurate.name, t2)
+                            for t2 in g.successors(task)) or 1))
+                        if in_main:
+                            m.dropped += fan
+                            if app:
+                                sub(app).dropped += fan
+                        if in_win:
+                            m.window.dropped += fan
             self.queues[qt] = keep
 
         def try_dispatch(qt: str, now: float):
             drop_scan(qt, now)
             q = self.queues[qt]
             while q:
+                # a drained (retired) stream takes no NEW batches; an
+                # incoming stream's warm-up is its initial busy_until
                 idle = [s for s in self.by_task[qt]
-                        if s.busy_until <= now + 1e-12]
+                        if s.busy_until <= now + 1e-12
+                        and s.retire_at > now + 1e-12]
                 if not idle:
                     break
                 head_wait = (now - q[0].enqueue_t) * 1e3
@@ -371,9 +521,16 @@ class ClusterRuntime:
                 srv.busy_until = now + service
                 push(srv.busy_until, "done", (srv.idx, batch))
             if q:
+                # retired streams must not feed the poll clock: their
+                # stale busy_until would pin min-busy in the past and
+                # the queue could stall until the next arrival
+                alive = [s for s in self.by_task[qt]
+                         if s.retire_at > now + 1e-12]
+                if not alive:
+                    return
                 t_poll = next_poll_time(
                     q[0].enqueue_t, self._timeout[qt],
-                    min(s.busy_until for s in self.by_task[qt]))
+                    min(s.busy_until for s in alive))
                 if t_poll > now + 1e-9:
                     push(t_poll, "poll", qt)
 
@@ -390,11 +547,19 @@ class ClusterRuntime:
                 try_dispatch(req.task, now)
             elif kind == "poll":
                 try_dispatch(payload, now)
-            elif kind in ("fail", "capacity"):
+            elif kind in ("fail", "capacity", "transition",
+                          "retire_sweep"):
                 if kind == "fail":
                     self._apply_failure(payload)
-                else:
+                elif kind == "capacity":
                     self._apply_capacity(payload, now)
+                elif kind == "transition":
+                    self.apply_transition(payload, now)
+                    windows.append((now, now + payload.makespan_s))
+                    for a in payload.drains:
+                        push(now + a.retire_s, "retire_sweep", None)
+                else:
+                    self._sweep_retired(now)
                 srv_by_idx = {s.idx: s for s in self.servers}
                 for qt2 in self.queues:
                     try_dispatch(qt2, now)
@@ -419,11 +584,16 @@ class ClusterRuntime:
                         ms.traffic[(task, variant)] = \
                             ms.traffic.get((task, variant), 0) + 1
                     if not succ_q:
-                        if root_t[req.root_id] >= warmup_s:
-                            lat = (now - root_t[req.root_id]) * 1e3
+                        rt0 = root_t[req.root_id]
+                        in_win = m.window is not None and in_window(rt0)
+                        if rt0 >= warmup_s or in_win:
+                            lat = (now - rt0) * 1e3
                             missed = now > req.deadline + 1e-9
-                            for mm in ((m,) if app == ""
-                                       else (m, sub(app))):
+                            sinks = (((m,) if app == ""
+                                      else (m, sub(app)))
+                                     if rt0 >= warmup_s else ())
+                            for mm in (sinks + ((m.window,) if in_win
+                                                else ())):
                                 mm.latencies_ms.append(lat)
                                 mm.completions += 1
                                 if missed:
@@ -439,7 +609,18 @@ class ClusterRuntime:
                             self.queues[qt2].append(child)
                     for _, qt2 in succ_q:
                         try_dispatch(qt2, now)
+                if srv.retire_at <= now + 1e-12:
+                    # drained stream went idle past its hand-over point:
+                    # its in-flight batch just completed — retire it
+                    self._sweep_retired(now)
+                    del srv_by_idx[idx]
                 try_dispatch(qt_task, now)
+        # summed span of the UNION of windows (overlaps merged)
+        span, end = 0.0, -math.inf
+        for a, b in sorted(windows):
+            span += max(0.0, b - max(a, end))
+            end = max(end, b)
+        m.transition_window_s = span
         for name, st in self._apps.items():
             if st.frontend is not None:
                 # report the exact datapath outcome (fan-weighted, leaf-

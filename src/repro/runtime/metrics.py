@@ -5,8 +5,9 @@ be loaded from either side of the runtime/core boundary without cycles.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
-from typing import TYPE_CHECKING, Dict, List, Tuple
+from typing import TYPE_CHECKING, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -24,13 +25,22 @@ class SimMetrics:
     under ``by_app`` — per-app sub-metrics use the app's PLAIN task
     names in ``traffic`` so ``realized_a_obj(app_graph)`` works
     unchanged, while the aggregate keys traffic by the qualified
-    ``app::task`` name.  Single-app runs leave ``by_app`` empty."""
+    ``app::task`` name.  Single-app runs leave ``by_app`` empty.
+
+    Runs that execute a live reconfiguration additionally file the
+    outcome of requests ARRIVING inside a transition window under
+    ``window`` (its own ledger, warmup-independent — the switching cost
+    must stay visible even during warm-up), with ``transition_window_s``
+    the summed window span; atomic legacy runs leave both untouched."""
     completions: int = 0           # leaf sub-requests serviced
     missed: int = 0                # serviced but past the deadline
     dropped: int = 0               # early-drops, fan-out weighted (§4.5)
     latencies_ms: List[float] = field(default_factory=list)
     traffic: Dict[Tuple[str, str], int] = field(default_factory=dict)
     by_app: Dict[str, "SimMetrics"] = field(default_factory=dict)
+    # transition-window attainment (repro.reconfig, DESIGN.md §12)
+    window: Optional["SimMetrics"] = None
+    transition_window_s: float = 0.0
 
     def app(self, name: str) -> "SimMetrics":
         """This app's sub-metrics (created on first use)."""
@@ -82,9 +92,16 @@ class Server:
 
     ``app`` tags the co-located application the stream belongs to (""
     in single-app runtimes): batches are formed per (app, task) queue,
-    so a server only ever serves its own app's requests."""
+    so a server only ever serves its own app's requests.
+
+    ``retire_at`` implements transition draining (DESIGN.md §12): past
+    it the stream accepts no new batches (in-flight work still
+    completes, then the runtime removes the server).  An incoming
+    stream's warm-up is expressed through ``busy_until`` — it exists
+    from the start but only becomes dispatchable once ready."""
     tup: "TupleVar"
     idx: int
     busy_until: float = 0.0
     served: int = 0
     app: str = ""
+    retire_at: float = math.inf

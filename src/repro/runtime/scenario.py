@@ -19,12 +19,16 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import (List, Mapping, Optional, Protocol, Sequence, Tuple,
-                    runtime_checkable)
+from typing import (TYPE_CHECKING, List, Mapping, Optional, Protocol,
+                    Sequence, Tuple, runtime_checkable)
 
 import numpy as np
 
 from repro.core.trace import DemandTrace, burst_trace, diurnal_trace
+
+if TYPE_CHECKING:   # pragma: no cover — typing only, keeps the scenario
+    # module import-light (repro.reconfig pulls the MILP layer)
+    from repro.reconfig.transition import TransitionPlan
 
 
 # ---------------------------------------------------------------------------
@@ -123,6 +127,18 @@ class CapacityEvent:
     app: str = ""
 
 
+@dataclass(frozen=True)
+class TransitionEvent:
+    """Live reconfiguration: at ``at_s`` the runtime starts executing
+    ``plan`` (a :class:`~repro.reconfig.TransitionPlan` diffing the
+    CURRENTLY deployed config against its target).  Outgoing instances
+    drain, incoming instances warm up, and the run's
+    ``SimMetrics.window`` ledger records attainment inside the
+    transition window — see DESIGN.md §12."""
+    at_s: float
+    plan: "TransitionPlan"
+
+
 # ---------------------------------------------------------------------------
 @dataclass(frozen=True)
 class AppArrivals:
@@ -149,6 +165,7 @@ class Scenario:
     slo_scale: float = 1.0            # deadline = arrival + SLO * slo_scale
     name: str = "scenario"
     apps: Tuple[AppArrivals, ...] = ()
+    transitions: Tuple[TransitionEvent, ...] = ()
 
     def __post_init__(self):
         if (self.arrivals is None) == (not self.apps):
@@ -190,6 +207,22 @@ class Scenario:
                    name=f"burst@{base_rps:g}/{burst_rps:g}rps", **kw)
 
     @classmethod
+    def step_change(cls, rate0_rps: float, rate1_rps: float,
+                    duration_s: float = 20.0, warmup_s: float = 2.0, *,
+                    switch_frac: float = 0.5, **kw) -> "Scenario":
+        """Demand steps from ``rate0`` to ``rate1`` at ``switch_frac`` of
+        the run — the canonical reconfiguration workload (the plan for
+        rate0 must transition to the plan for rate1 mid-traffic)."""
+        if not 0.0 < switch_frac < 1.0:
+            raise ValueError("switch_frac must be in (0, 1)")
+        bins = 20
+        cut = max(1, min(bins - 1, int(round(bins * switch_frac))))
+        tr = DemandTrace(np.array([float(rate0_rps)] * cut
+                                  + [float(rate1_rps)] * (bins - cut)))
+        return cls(TraceArrivals(tr), duration_s, warmup_s,
+                   name=f"step@{rate0_rps:g}->{rate1_rps:g}rps", **kw)
+
+    @classmethod
     def multi(cls, workloads: "Mapping[str, ArrivalProcess]",
               duration_s: float = 20.0, warmup_s: float = 2.0,
               **kw) -> "Scenario":
@@ -213,6 +246,10 @@ class Scenario:
     def with_capacity(self, *events: CapacityEvent) -> "Scenario":
         return dataclasses.replace(
             self, capacity=self.capacity + tuple(events))
+
+    def with_transitions(self, *events: TransitionEvent) -> "Scenario":
+        return dataclasses.replace(
+            self, transitions=self.transitions + tuple(events))
 
     def slo_sweep(self, scales: Sequence[float]) -> List["Scenario"]:
         """SLO sensitivity sweep: the same workload under tighter/looser

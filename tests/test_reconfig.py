@@ -1,0 +1,429 @@
+"""Live reconfiguration engine (DESIGN.md §12): plan-diff transitions,
+MIG repartition / weight-load delays, staged runtime execution and the
+switching-cost-aware (sticky) MILP objective."""
+import pytest
+
+from repro.core.apps import get_app
+from repro.core.controller import Controller, MultiAppController
+from repro.core.milp import PlanConfig, Planner, TupleVar
+from repro.core.profiler import Profiler
+from repro.core.taskgraph import Task, TaskGraph, Variant
+from repro.hwspec import tight_hetero_cluster
+from repro.reconfig import TransitionAction, TransitionPlan, \
+    TransitionPlanner
+from repro.runtime import (ClusterRuntime, EngineBackend, Scenario,
+                           SimBackend, TransitionEvent)
+
+KW = dict(max_tuples_per_task=32, bb_nodes=8, bb_time_s=3.0)
+
+
+@pytest.fixture(scope="module")
+def cluster():
+    return tight_hetero_cluster()
+
+
+@pytest.fixture(scope="module")
+def social(cluster):
+    g = get_app("social_media")
+    return g, Profiler(g, cluster=cluster)
+
+
+@pytest.fixture(scope="module")
+def lo_hi(cluster, social):
+    """Two plans far enough apart in demand that the deployment changes."""
+    g, prof = social
+    pl = Planner(g, prof, s_avail=cluster.total_units, **KW)
+    cfg_lo = pl.plan(10.0)
+    cfg_hi = pl.plan(90.0)
+    assert cfg_lo is not None and cfg_hi is not None
+    assert cfg_lo.counts != cfg_hi.counts
+    return cfg_lo, cfg_hi
+
+
+def _one_task_graph():
+    return TaskGraph(
+        name="single", tasks={"t": Task("t", (
+            Variant("v", "gemma-2b", accuracy=0.9),))},
+        edges=[], slo_latency_ms=20_000.0, slo_accuracy=0.5)
+
+
+def _cfg(graph, segment, batch, count, pool, latency_ms=200.0,
+         throughput=20.0, cost=1):
+    tup = TupleVar("t", "v", segment, batch, latency_ms, throughput,
+                   cost, 0.9, pool, streams=1)
+    return PlanConfig(graph, {tup.key: count}, {tup.key: tup},
+                      {"t": count * throughput})
+
+
+# ---------------------------------------------------------------------------
+# TransitionPlanner diffs
+# ---------------------------------------------------------------------------
+def test_zero_diff_is_empty(cluster, social, lo_hi):
+    g, _ = social
+    _, cfg_hi = lo_hi
+    tr = TransitionPlanner(cluster, g).plan(cfg_hi, cfg_hi)
+    assert tr.is_empty
+    assert tr.makespan_s == 0.0
+    assert not tr.repartition_pools
+    # every deployed instance is a keep
+    assert sum(a.count for a in tr.keeps) == \
+        sum(m for m in cfg_hi.counts.values() if m > 0)
+
+
+def test_cold_start_has_no_actions(cluster, social, lo_hi):
+    g, _ = social
+    tr = TransitionPlanner(cluster, g).plan(None, lo_hi[1])
+    assert tr.is_empty and tr.makespan_s == 0.0
+
+
+def test_staged_diff_structure_and_delays(cluster, social, lo_hi):
+    g, _ = social
+    cfg_lo, cfg_hi = lo_hi
+    tp = TransitionPlanner(cluster, g)
+    tr = tp.plan(cfg_lo, cfg_hi)
+    assert not tr.is_empty
+    assert tr.makespan_s > 0.0
+    # keep + load reproduces the target exactly
+    got = {}
+    for a in tr.keeps + tr.loads:
+        got[a.tup.key] = got.get(a.tup.key, 0) + a.count
+    assert got == {k: m for k, m in cfg_hi.counts.items() if m > 0}
+    # every load waits for its weights; drains cover until hand-over
+    for a in tr.loads:
+        assert a.ready_s >= tp.weight_load_s("", a.tup) - 1e-9
+    for a in tr.drains:
+        same_task = [x.ready_s for x in tr.loads
+                     if x.tup.task == a.tup.task]
+        if same_task and not tr.blocked_pools:
+            assert a.retire_s == pytest.approx(max(same_task))
+    # delay_scale=0: same structure, instantaneous
+    tr0 = TransitionPlanner(cluster, g, delay_scale=0.0).plan(cfg_lo,
+                                                             cfg_hi)
+    assert tr0.makespan_s == 0.0
+    assert sum(a.count for a in tr0.loads) == \
+        sum(a.count for a in tr.loads)
+
+
+def test_idle_drains_swept_from_fleet(cluster):
+    """A blocked drain that never receives work must not linger as fake
+    capacity: the retire sweep removes it, so the lost-all-instances
+    guard sees the true fleet."""
+    g1 = _one_task_graph()
+    old = _cfg(g1, "1x1s1", 4, 1, "v5e")
+    new = _cfg(g1, "1x1s2", 4, 1, "v5e")
+    key_old = next(iter(old.tuples))
+    tr = TransitionPlan(
+        keeps=(),
+        drains=(TransitionAction("drain", "", old.tuples[key_old], 1,
+                                 retire_s=0.0),),
+        loads=(TransitionAction("load", "", new.tuples[
+            next(iter(new.tuples))], 1, ready_s=1.0),),
+        target={"": new}, makespan_s=1.0,
+        repartition_pools=frozenset(), blocked_pools=frozenset())
+    rt = ClusterRuntime(g1, new, SimBackend(), seed=0, transition=tr)
+    rt.run(Scenario.poisson(5.0, duration_s=4.0, warmup_s=0.0))
+    assert not any(s.tup.key == key_old for s in rt.servers)
+
+
+def test_mig_repartition_blocks_torus_does_not(cluster):
+    g1 = _one_task_graph()
+    tp = TransitionPlanner(cluster, g1)
+    # MIG: 2g -> 3g needs carving a new slice; the device pauses
+    old = _cfg(g1, "2g.10gb.s1", 4, 1, "mig", cost=2)
+    new = _cfg(g1, "3g.20gb.s1", 4, 1, "mig", cost=3)
+    tr = tp.plan(old, new)
+    assert tr.repartition_pools == frozenset({"mig"})
+    assert tr.blocked_pools == frozenset({"mig"})
+    (load,) = tr.loads
+    (drain,) = tr.drains
+    assert load.carved
+    mig = cluster.pool("mig")
+    assert load.ready_s >= mig.scheme.repartition_delay_s
+    assert drain.retire_s == 0.0          # in-flight only: slice blocked
+    # torus: 1 chip -> 2 chips is a host-side regroup; old keeps serving
+    old_t = _cfg(g1, "1x1s1", 4, 1, "v5e")
+    new_t = _cfg(g1, "1x2s1", 4, 1, "v5e", cost=2)
+    tr_t = tp.plan(old_t, new_t)
+    assert tr_t.repartition_pools == frozenset({"v5e"})
+    assert not tr_t.blocked_pools
+    (drain_t,) = tr_t.drains
+    (load_t,) = tr_t.loads
+    assert drain_t.retire_s == pytest.approx(load_t.ready_s)
+    assert drain_t.retire_s > 0.0
+
+
+def test_same_physical_slice_reused_without_carving(cluster):
+    g1 = _one_task_graph()
+    tp = TransitionPlanner(cluster, g1)
+    # 2g.10gb.s1 -> 2g.10gb.s2: streams are software, same physical slice
+    old = _cfg(g1, "2g.10gb.s1", 4, 1, "mig", cost=2)
+    new = _cfg(g1, "2g.10gb.s2", 4, 1, "mig", cost=2)
+    tr = tp.plan(old, new)
+    assert not tr.repartition_pools
+    (load,) = tr.loads
+    assert not load.carved
+    assert load.ready_s == pytest.approx(tp.weight_load_s("", load.tup))
+
+
+def test_removed_app_is_fully_drained(cluster):
+    """An app present in the incumbent but dropped from the target must
+    drain its whole fleet — no zombie servers."""
+    from repro.core.milp import JointPlan
+    g1 = _one_task_graph()
+    cfg_a = _cfg(g1, "1x1s1", 4, 1, "v5e")
+    cfg_b = _cfg(g1, "1x1s2", 4, 2, "v5e")
+    tp = TransitionPlanner(cluster, {"a": g1, "b": g1})
+    old = JointPlan({"a": cfg_a, "b": cfg_b}, {"v5e": 8}, {})
+    new = JointPlan({"a": cfg_a}, {"v5e": 8}, {})
+    tr = tp.plan_joint(old, new)
+    assert sum(a.count for a in tr.drains if a.app == "b") == 2
+    assert not any(a.app == "b" for a in tr.loads)
+    assert "b" not in tr.target
+
+
+def test_atomic_policy_swaps_everything(cluster, social, lo_hi):
+    g, _ = social
+    cfg_lo, cfg_hi = lo_hi
+    tr = TransitionPlanner(cluster, g, policy="atomic").plan(cfg_lo,
+                                                            cfg_hi)
+    assert not tr.keeps
+    assert sum(a.count for a in tr.drains) == \
+        sum(m for m in cfg_lo.counts.values() if m > 0)
+    assert all(a.retire_s == 0.0 for a in tr.drains)
+    # nothing serves before the global makespan
+    assert all(a.ready_s == pytest.approx(tr.makespan_s)
+               for a in tr.loads)
+
+
+# ---------------------------------------------------------------------------
+# runtime execution
+# ---------------------------------------------------------------------------
+def test_drain_preserves_inflight_requests(cluster):
+    """Work dispatched to a draining instance before its hand-over point
+    completes even when service runs past it — and is served long before
+    the replacement warms up."""
+    g1 = _one_task_graph()
+    old = _cfg(g1, "1x1s1", 4, 1, "v5e")
+    new = _cfg(g1, "1x1s2", 4, 1, "v5e")
+    key_old = next(iter(old.tuples))
+    key_new = next(iter(new.tuples))
+    tr = TransitionPlan(
+        keeps=(),
+        drains=(TransitionAction("drain", "", old.tuples[key_old], 1,
+                                 retire_s=0.5),),
+        loads=(TransitionAction("load", "", new.tuples[key_new], 1,
+                                ready_s=5.0),),
+        target={"": new}, makespan_s=5.0,
+        repartition_pools=frozenset(), blocked_pools=frozenset())
+    rt = ClusterRuntime(g1, new, SimBackend(), seed=3, transition=tr)
+    m = rt.run(Scenario.poisson(10.0, duration_s=8.0, warmup_s=0.0))
+    assert m.completions > 0
+    assert m.window is not None
+    assert m.window.completions > 0
+    # the drain served the early arrivals: sub-second latencies exist,
+    # far below the 5 s the loading replacement would impose
+    assert min(m.latencies_ms) < 1000.0
+
+
+def test_staged_beats_atomic_in_transition_window(cluster, social, lo_hi):
+    g, _ = social
+    cfg_lo, cfg_hi = lo_hi
+    staged = TransitionPlanner(cluster, g).plan(cfg_lo, cfg_hi)
+    atomic = TransitionPlanner(cluster, g, policy="atomic").plan(cfg_lo,
+                                                                cfg_hi)
+    sc = Scenario.poisson(90.0, duration_s=10.0, warmup_s=0.0)
+    out = {}
+    for name, tr in (("staged", staged), ("atomic", atomic)):
+        rt = ClusterRuntime(g, cfg_hi, SimBackend(), seed=0,
+                            transition=tr)
+        m = rt.run(sc)
+        assert m.window is not None
+        assert m.transition_window_s == pytest.approx(tr.makespan_s)
+        out[name] = m
+    assert out["staged"].window.violations < \
+        out["atomic"].window.violations
+    assert out["staged"].violations < out["atomic"].violations
+
+
+def test_scheduled_transition_event_mid_run(cluster, social, lo_hi):
+    """A TransitionEvent reconfigures a RUNNING fleet: the old plan
+    serves until the event, then drains while the new plan warms up."""
+    g, _ = social
+    cfg_lo, cfg_hi = lo_hi
+    tr = TransitionPlanner(cluster, g).plan(cfg_lo, cfg_hi)
+    rt = ClusterRuntime(g, cfg_lo, SimBackend(), seed=1)
+    sc = Scenario.step_change(10.0, 90.0, duration_s=12.0, warmup_s=0.0,
+                              switch_frac=0.5).with_transitions(
+        TransitionEvent(at_s=6.0, plan=tr))
+    m = rt.run(sc)
+    assert m.window is not None
+    assert m.transition_window_s == pytest.approx(tr.makespan_s)
+    # the runtime now runs the TARGET config
+    assert rt.config is cfg_hi
+    new_keys = {k for k, mm in cfg_hi.counts.items() if mm > 0}
+    assert {s.tup.key for s in rt.servers} >= new_keys
+    assert m.completions > 0
+
+
+def test_transition_for_wrong_target_fails_loud(cluster, social, lo_hi):
+    g, _ = social
+    cfg_lo, cfg_hi = lo_hi
+    tr = TransitionPlanner(cluster, g).plan(cfg_lo, cfg_hi)
+    with pytest.raises(ValueError, match="transition"):
+        ClusterRuntime(g, cfg_lo, SimBackend(), transition=tr)
+
+
+# ---------------------------------------------------------------------------
+# switching-cost-aware planning
+# ---------------------------------------------------------------------------
+def test_stickiness_zero_is_bit_identical(cluster, social):
+    g, prof = social
+    a = Planner(g, prof, s_avail=cluster.total_units, **KW).plan(40.0)
+    p = Planner(g, prof, s_avail=cluster.total_units, **KW)
+    inc = p.plan(10.0)
+    b = p.plan(40.0, incumbent=inc)     # stickiness defaults to 0
+    assert a.counts == b.counts
+    assert a.exact_a_obj() == b.exact_a_obj()
+    assert a.slices == b.slices
+
+
+def test_stickiness_prefers_incumbent_tuple_types(cluster, social):
+    g, prof = social
+
+    def changed(cfg, inc):
+        ik = {k for k, m in inc.counts.items() if m > 0}
+        return len({k for k, m in cfg.counts.items() if m > 0} - ik)
+
+    ps = Planner(g, prof, s_avail=cluster.total_units, stickiness=2.0,
+                 **KW)
+    inc = ps.plan(10.0)
+    plain = Planner(g, prof, s_avail=cluster.total_units,
+                    **KW).plan(90.0)
+    sticky = ps.plan(90.0, incumbent=inc)
+    assert sticky is not None
+    assert sticky.feasible(g.slo_latency_ms, g.slo_accuracy,
+                           cluster.total_units)
+    assert changed(sticky, inc) <= changed(plain, inc)
+    assert changed(sticky, inc) < sum(
+        1 for m in sticky.counts.values() if m > 0)
+
+
+# ---------------------------------------------------------------------------
+# controller integration + satellites
+# ---------------------------------------------------------------------------
+def test_controller_executes_staged_transitions(cluster, social):
+    g, prof = social
+    ctl = Controller(g, prof, s_avail=cluster.total_units,
+                     planner_kwargs=dict(KW, stickiness=0.25),
+                     reconfig=TransitionPlanner(cluster, g))
+    r0 = ctl.step(0, 10.0, sim_seconds=6.0, seed=0)
+    assert r0.transition_s == 0.0        # cold start: no incumbent
+    r1 = ctl.step(1, 90.0, sim_seconds=6.0, seed=1)
+    assert r1.replanned
+    assert r1.transition_s > 0.0
+    assert r1.transition_actions > 0
+    # steady bin: no plan change, no transition charged
+    r2 = ctl.step(2, 90.0, sim_seconds=6.0, seed=2)
+    assert r2.transition_s == 0.0 or r2.transition_actions >= 0
+
+
+def test_controller_pool_aware_dead_units(cluster, social):
+    g, prof = social
+    ctl = Controller(g, prof, s_avail=cluster.total_units,
+                     planner_kwargs=dict(KW))
+    mig_units = cluster.pool("mig").capacity_units
+    rep = ctl.step(0, 40.0, sim_seconds=4.0,
+                   dead_units={"mig": mig_units})
+    assert rep.violation_rate < 0.2
+    # the whole MIG pool is dead: nothing may be planned there
+    assert "mig" not in ctl._config.pool_slices()
+    assert ctl.planner.pool_budgets()["mig"] == 0
+
+
+def test_planner_dead_units_budgets(cluster, social):
+    g, prof = social
+    p = Planner(g, prof, s_avail=cluster.total_units, **KW)
+    base = p.pool_budgets()
+    p.dead_units = {"v5e": 3}
+    got = p.pool_budgets()
+    assert got["v5e"] == base["v5e"] - 3
+    assert got["mig"] == base["mig"]
+    # direct API on the implicit single-pool cluster: dead units shrink
+    # the ONE pool's budget without any caller-side s_avail adjustment
+    gd, profd = g, Profiler(g)
+    pd = Planner(gd, profd, s_avail=64, **KW)
+    pd.dead_units = {"v5e": 4}
+    assert pd.pool_budgets() == {"v5e": 60}
+    # a typo'd pool name must fail loud, not model the failure as zero
+    pd.dead_units = {"v5e-typo": 4}
+    with pytest.raises(ValueError, match="unknown pools"):
+        pd.pool_budgets()
+
+
+def test_dead_capacity_not_used_for_warmups(cluster):
+    """Spare warm-up headroom excludes dead units: with the pool's free
+    capacity dead, the staged plan must not warm new instances 'next
+    to' the old fleet — it reclaims the drained region instead."""
+    g1 = _one_task_graph()
+    old = _cfg(g1, "1x1s1", 4, 1, "v5e")
+    new = _cfg(g1, "1x2s1", 4, 1, "v5e", cost=2)
+    tp = TransitionPlanner(cluster, g1)
+    free = cluster.pool("v5e").capacity_units - 1   # all-but-used dead
+    tr = tp.plan(old, new, dead_units={"v5e": free})
+    (drain,) = tr.drains
+    assert drain.retire_s == 0.0       # region reclaimed for the carve
+    with_spare = tp.plan(old, new)
+    assert with_spare.drains[0].retire_s > 0.0
+
+
+def test_staged_capacity_honest(cluster, social, lo_hi):
+    """Per pool, concurrently dispatchable capacity (keeps + drains
+    still serving + loads warming on spare) never exceeds the pool's
+    physical units at any point of the transition."""
+    g, _ = social
+    cfg_lo, cfg_hi = lo_hi
+    tr = TransitionPlanner(cluster, g).plan(cfg_lo, cfg_hi)
+
+    def usage_at(t):
+        use = {}
+        for a in tr.keeps:
+            p = a.tup.pool
+            use[p] = use.get(p, 0) + a.tup.cost * a.count
+        for a in tr.drains:
+            if a.retire_s > t:
+                use[a.tup.pool] = use.get(a.tup.pool, 0) \
+                    + a.tup.cost * a.count
+        for a in tr.loads:
+            # a load occupies its slice from the moment staging starts
+            use[a.tup.pool] = use.get(a.tup.pool, 0) \
+                + a.tup.cost * a.count
+        return use
+
+    for t in (0.0, tr.makespan_s / 2, tr.makespan_s):
+        for p, u in usage_at(t).items():
+            assert u <= cluster.pool(p).capacity_units, (t, p, u)
+
+
+def test_engine_backend_per_pool_time_scale():
+    eb = EngineBackend(time_scale=2.0, pool_time_scale={"mig": 0.5})
+    assert eb.scale_for("mig") == 0.5
+    assert eb.scale_for("v5e") == 2.0
+    assert EngineBackend().scale_for("anything") == 1.0
+
+
+def test_multiapp_fbar_refinement(cluster):
+    graphs = {n: get_app(n) for n in ("social_media",
+                                      "traffic_analysis")}
+    profs = {n: Profiler(g, cluster=cluster)
+             for n, g in graphs.items()}
+    ctl = MultiAppController(graphs, profs,
+                             s_avail=cluster.total_units,
+                             planner_kwargs=dict(KW))
+    ctl.step(0, {"social_media": 30.0, "traffic_analysis": 10.0},
+             sim_seconds=6.0, seed=0)
+    # observed factors were fed back per app (single-predecessor edges)
+    fb = ctl._fbar["traffic_analysis"]
+    assert fb, "no observed factors recorded"
+    assert all(v > 0.0 for v in fb.values())
+    g = graphs["traffic_analysis"]
+    assert all(len(g.predecessors(t2)) == 1 for (_t, t2) in fb)
