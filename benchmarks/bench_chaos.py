@@ -1,0 +1,134 @@
+"""Chaos engine benchmark (DESIGN.md §13): correlated failure storms and
+overload surges on the dual-domain ``chaos_cluster``.
+
+Two closed-loop comparisons, each with a CI assertion:
+
+* **failure storm** — plan at 30 rps, rack domain ``r0`` dies 3 s into
+  the run, taking its units in BOTH pools.  Detection-off serves the
+  rest of the bin on the crippled fleet; the ``EmergencyReplanner``
+  detects the violation spike mid-bin and re-plans live through the
+  PR-5 transition machinery.  CI pins the in-window (post-failure)
+  violation rate cut at ≥3x.
+* **overload surge** — plan at 15 rps, 60 rps arrives.  Both arms run
+  the detection-only monitor; one adds the ``DegradationLadder``
+  (admission control → accuracy downshift → proportional shed).  CI
+  pins in-SLO served strictly above hard drops alone.
+
+Persisted as ``BENCH_chaos.json`` by ``benchmarks.run``;
+``tests/test_chaos.py`` asserts both comparisons with the same knobs,
+and ``repro.chaos.fuzz`` hunts for new SLO-breaking scenarios against
+the pinned corpus in ``tests/chaos_pins.json``.
+"""
+from typing import Dict
+
+from repro.chaos import DegradationLadder, EmergencyReplanner
+from repro.core.apps import get_app
+from repro.core.frontend import Frontend
+from repro.core.milp import Planner
+from repro.core.profiler import Profiler
+from repro.hwspec import chaos_cluster
+from repro.reconfig import TransitionPlanner
+from repro.runtime import (ClusterRuntime, DomainFailureEvent, Scenario,
+                           SimBackend)
+
+KW = dict(max_tuples_per_task=32, bb_nodes=8, bb_time_s=3.0)
+STORM_RPS = 30.0      # planned-for rate in the failure storm
+SURGE_PLAN_RPS = 15.0  # planned-for rate in the overload surge
+SURGE_RPS = 60.0       # what actually arrives
+DURATION_S = 16.0
+
+
+def run(csv=print) -> Dict[str, Dict[str, float]]:
+    out: Dict[str, Dict[str, float]] = {}
+    cluster = chaos_cluster()
+    g = get_app("social_media")
+    prof = Profiler(g, cluster=cluster)
+    pl = Planner(g, prof, s_avail=cluster.total_units, **KW)
+
+    # -- failure storm: domain kill, detection off vs mid-bin replan ----
+    cfg_storm = pl.plan(STORM_RPS)
+    assert cfg_storm is not None
+    storm = Scenario.poisson(STORM_RPS, duration_s=DURATION_S,
+                             warmup_s=1.0).with_chaos(
+        DomainFailureEvent(at_s=3.0, domain="r0"))
+
+    m_off = ClusterRuntime(g, cfg_storm, SimBackend(), seed=0,
+                           cluster=cluster).run(storm)
+    epl = Planner(g, prof, s_avail=cluster.total_units,
+                  stickiness=0.05, **KW)
+    mon = EmergencyReplanner(Frontend(g), planner=epl,
+                             reconfig=TransitionPlanner(cluster, g),
+                             planned_for_rps=STORM_RPS)
+    m_on = ClusterRuntime(g, cfg_storm, SimBackend(), seed=0,
+                          cluster=cluster, monitor=mon).run(storm)
+    for arm, m in (("detection_off", m_off), ("midbin_replan", m_on)):
+        dom = m.by_domain["r0"]
+        out[f"storm_{arm}"] = {
+            "in_window_violation_rate": dom.violation_rate,
+            "in_window_completions": float(dom.completions),
+            "completions": float(m.completions),
+            "violation_rate": m.violation_rate,
+            "dropped": float(m.dropped),
+            "replans": float(mon.replans if arm == "midbin_replan"
+                             else 0),
+        }
+        csv(f"chaos,storm_{arm},"
+            f"win_rate={100 * dom.violation_rate:.1f}%,"
+            f"compl={m.completions},dropped={m.dropped}")
+    off = out["storm_detection_off"]["in_window_violation_rate"]
+    on = out["storm_midbin_replan"]["in_window_violation_rate"]
+    if on * 3 > off:
+        raise RuntimeError(
+            f"mid-bin emergency re-planning no longer cuts the "
+            f"post-failure violation rate 3x ({on:.3f} vs {off:.3f}) — "
+            "the closed loop regressed")
+    out["storm_summary"] = {
+        "violation_cut_x": off / max(on, 1e-9),
+        "replans": float(mon.replans),
+        "spikes": float(mon.spikes),
+    }
+
+    # -- overload surge: hard drops vs the degradation ladder -----------
+    cfg_surge = pl.plan(SURGE_PLAN_RPS)
+    assert cfg_surge is not None
+    surge = Scenario.poisson(SURGE_RPS, duration_s=DURATION_S,
+                             warmup_s=1.0)
+    m_hard = ClusterRuntime(
+        g, cfg_surge, SimBackend(), seed=0, cluster=cluster,
+        monitor=EmergencyReplanner(Frontend(g),
+                                   planned_for_rps=SURGE_PLAN_RPS),
+    ).run(surge)
+    ladder = DegradationLadder(profiler=prof)
+    m_lad = ClusterRuntime(
+        g, cfg_surge, SimBackend(), seed=0, cluster=cluster,
+        monitor=EmergencyReplanner(Frontend(g),
+                                   planned_for_rps=SURGE_PLAN_RPS),
+        ladder=ladder,
+    ).run(surge)
+    for arm, m in (("hard_drops", m_hard), ("ladder", m_lad)):
+        out[f"surge_{arm}"] = {
+            "served_in_slo": float(m.completions - m.missed),
+            "completions": float(m.completions),
+            "violation_rate": m.violation_rate,
+            "dropped": float(m.dropped),
+            "degraded_served": float(m.degraded_served),
+            "admission_dropped": float(m.admission_dropped),
+        }
+        csv(f"chaos,surge_{arm},in_slo={m.completions - m.missed},"
+            f"degraded={m.degraded_served},dropped={m.dropped}")
+    hard = out["surge_hard_drops"]["served_in_slo"]
+    lad = out["surge_ladder"]["served_in_slo"]
+    if lad <= hard:
+        raise RuntimeError(
+            f"degradation ladder no longer beats hard drops on in-SLO "
+            f"served ({lad:g} <= {hard:g}) — graceful degradation "
+            "regressed")
+    out["surge_summary"] = {
+        "ladder_extra_in_slo": lad - hard,
+        "final_ladder_level": float(ladder.level),
+    }
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -13,10 +13,10 @@ import json
 import os
 import time
 
-from benchmarks import (bench_capacity, bench_configs, bench_empirical,
-                        bench_hetero, bench_kernels, bench_milp,
-                        bench_multiapp, bench_perf, bench_reconfig,
-                        bench_roofline, bench_runtime)
+from benchmarks import (bench_capacity, bench_chaos, bench_configs,
+                        bench_empirical, bench_hetero, bench_kernels,
+                        bench_milp, bench_multiapp, bench_perf,
+                        bench_reconfig, bench_roofline, bench_runtime)
 
 ALL = {
     "kernels": bench_kernels,        # kernel vs oracle + TPU roofline
@@ -30,6 +30,7 @@ ALL = {
     "hetero": bench_hetero,          # two-pool heterogeneous plan + serve
     "multiapp": bench_multiapp,      # joint two-app co-location vs split
     "reconfig": bench_reconfig,      # staged transitions vs atomic swap
+    "chaos": bench_chaos,            # failure storms + degradation ladder
 }
 
 

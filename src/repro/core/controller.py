@@ -38,10 +38,33 @@ from repro.hwspec import ClusterSpec
 
 if TYPE_CHECKING:   # pragma: no cover — repro.runtime loads lazily to
     # keep the core/runtime leaf imports cycle-free
+    from repro.chaos.degrade import DegradationLadder
+    from repro.chaos.detector import FailureDetector
+    from repro.chaos.emergency import EmergencyReplanner
     from repro.reconfig.transition import TransitionPlan, TransitionPlanner
     from repro.runtime.backend import ExecutionBackend
     from repro.runtime.cluster import ClusterRuntime
     from repro.runtime.scenario import Scenario
+
+
+def _merge_dead_units(detector: Optional["FailureDetector"],
+                      manual: Optional[Mapping[str, int]]
+                      ) -> Dict[str, int]:
+    """Detector-derived dead capacity merged with the manual
+    ``step(dead_units=...)`` override (DESIGN.md §13).  A pool named by
+    BOTH with different values is a conflict — the operator's claim
+    contradicts the observed loss — and fails loud instead of silently
+    preferring either."""
+    derived = detector.dead_units() if detector is not None else {}
+    manual = dict(manual or {})
+    for p in set(derived) & set(manual):
+        if manual[p] != derived[p]:
+            raise ValueError(
+                f"dead_units conflict on pool {p!r}: the detector "
+                f"observed {derived[p]} dead units but step() was "
+                f"passed {manual[p]} — drop the manual override or "
+                "FailureDetector.forget() the pool")
+    return {**derived, **manual}
 
 
 @dataclass
@@ -88,6 +111,15 @@ class Controller:
     # with planner_kwargs=dict(stickiness=...) to make the MILP prefer
     # cheaply-reachable plans.
     reconfig: Optional["TransitionPlanner"] = None
+    # chaos engine (DESIGN.md §13): a FailureDetector closes the failure
+    # loop — each bin's runtime observations accumulate into the derived
+    # per-pool dead capacity the planner subtracts, replacing the manual
+    # ``step(dead_units=...)`` dict (which stays as a fail-loud
+    # override).  ``monitor``/``ladder`` ride on every bin's runtime:
+    # mid-bin emergency re-planning and graceful load-shedding.
+    detector: Optional["FailureDetector"] = None
+    monitor: Optional["EmergencyReplanner"] = None
+    ladder: Optional["DegradationLadder"] = None
 
     def __post_init__(self):
         if self.cluster is None:
@@ -144,7 +176,9 @@ class Controller:
                               seed=seed, staleness_ms=self.staleness_ms,
                               frontend=self.frontend,
                               time_base_s=time_base_s,
-                              transition=transition)
+                              transition=transition,
+                              cluster=self.cluster,
+                              monitor=self.monitor, ladder=self.ladder)
 
     # ------------------------------------------------------------------
     def step(self, bin_idx: int, demand_actual: float, *,
@@ -183,6 +217,9 @@ class Controller:
         # (Planner.pool_budgets); only the unattributed dead_chips path
         # still shrinks the scalar total (largest pool first)
         s_now = self.s_avail - dead_chips
+        # detector-derived dead capacity (chaos loop), manual override
+        # checked for conflicts — both reach the planner as ONE dict
+        dead_merged = _merge_dead_units(self.detector, dead_units)
         incumbent = self._config
         if need:
             t0 = time.monotonic()
@@ -191,7 +228,7 @@ class Controller:
             warm0 = self.planner.stats.warm_basis_hits
             nodes0 = self.planner.stats.nodes
             self.planner.s_avail = s_now
-            self.planner.dead_units = dict(dead_units or {})
+            self.planner.dead_units = dict(dead_merged)
             cfg = self.planner.plan(predicted, self._fbar or None,
                                     incumbent=incumbent)
             if cfg is not None:
@@ -220,7 +257,7 @@ class Controller:
                 and incumbent is not None
                 and self._config is not incumbent):
             transition = self.reconfig.plan(incumbent, self._config,
-                                            dead_units=dead_units)
+                                            dead_units=dead_merged)
             if transition.is_empty:
                 transition = None
 
@@ -229,10 +266,19 @@ class Controller:
             scenario = Scenario.poisson(
                 demand_actual, duration_s=sim_seconds,
                 warmup_s=min(3.0, sim_seconds / 4))
+        if self.monitor is not None:
+            # the mid-bin monitor judges THIS bin's plan and already-
+            # observed dead capacity (chaos loop, DESIGN.md §13)
+            self.monitor.planned_for_rps = self._planned_for
+            self.monitor.base_dead_units = dict(dead_merged)
         runtime = self.make_runtime(
             seed=seed, time_base_s=bin_idx * self.frontend.bin_seconds,
             transition=transition)
         metrics = runtime.run(scenario)
+        if self.detector is not None:
+            # close the loop: this bin's observed kills/preemptions feed
+            # the NEXT bin's planner budgets
+            self.detector.observe(runtime)
         # two demand views coexist on purpose: _history holds the ground-
         # truth bin demand the predictor consumes (the paper's demand
         # timestamps); the frontend's bins hold DATAPATH-observed demand —
@@ -417,6 +463,9 @@ class MultiAppController:
     backend_factory: Optional[Callable[[], "ExecutionBackend"]] = None
     # live reconfiguration across the co-located apps (DESIGN.md §12)
     reconfig: Optional["TransitionPlanner"] = None
+    # chaos loop (DESIGN.md §13): derived per-pool dead capacity, with
+    # the manual step(dead_units=) dict as a fail-loud override
+    detector: Optional["FailureDetector"] = None
     # runtime profile refinement (paper §3.2): EWMA-blend each app's
     # OBSERVED multiplicative factors back into the next joint solve
     fbar_refine: bool = True
@@ -496,13 +545,14 @@ class MultiAppController:
         warm_replan = False
         milp_nodes = 0
         s_now = self.s_avail - dead_chips   # dead_units shrinks budgets
+        dead_merged = _merge_dead_units(self.detector, dead_units)
         incumbent = self._plan
         if need:
             t0 = time.monotonic()
             warm0 = self.planner.stats.warm_basis_hits
             nodes0 = self.planner.stats.nodes
             self.planner.s_avail = s_now
-            self.planner.dead_units = dict(dead_units or {})
+            self.planner.dead_units = dict(dead_merged)
             fbar = ({n: fb for n, fb in self._fbar.items() if fb}
                     if self.fbar_refine else {})
             plan = self.planner.plan_joint(predicted, fbar or None,
@@ -532,7 +582,7 @@ class MultiAppController:
         if (self.reconfig is not None and replanned
                 and incumbent is not None and self._plan is not incumbent):
             transition = self.reconfig.plan_joint(incumbent, self._plan,
-                                                  dead_units=dead_units)
+                                                  dead_units=dead_merged)
             if transition.is_empty:
                 transition = None
 
@@ -550,8 +600,10 @@ class MultiAppController:
             self.backend, seed=seed, staleness_ms=self.staleness_ms,
             frontends=self.frontends,
             time_base_s=bin_idx * bin_seconds,
-            transition=transition)
+            transition=transition, cluster=self.cluster)
         metrics = runtime.run(scenario)
+        if self.detector is not None:
+            self.detector.observe(runtime)
         if self.fbar_refine:
             self._refine_fbar(metrics)
         per_app: Dict[str, AppBinReport] = {}

@@ -99,11 +99,21 @@ class Frontend:
     def should_replan(self, planned_for_rps: float,
                       threshold: float = 0.10,
                       violation_trigger: float = 0.05,
-                      demand_rps: Optional[float] = None) -> bool:
+                      demand_rps: Optional[float] = None,
+                      requests: Optional[int] = None,
+                      violations: Optional[int] = None) -> bool:
         """THE re-plan trigger (single implementation, paper §3.1): demand
         drifted from the planned-for rate, or the last window's violation
         rate spiked.  ``demand_rps`` defaults to the last observed bin; the
-        controller passes its *predicted* demand instead."""
+        controller passes its *predicted* demand instead.
+
+        ``requests``/``violations`` (always together) override the bin
+        counters with an explicit observation window — the chaos
+        engine's mid-bin monitor checks short intervals against the same
+        trigger instead of growing a second implementation (DESIGN.md
+        §13)."""
+        if (requests is None) != (violations is None):
+            raise ValueError("pass requests= and violations= together")
         if demand_rps is None:
             hist = self.observed_demand()
             if not hist:
@@ -111,6 +121,8 @@ class Frontend:
             demand_rps = hist[-1]
         drift = abs(demand_rps - planned_for_rps) > threshold * max(
             planned_for_rps, 1e-9)
-        vrate = (self.violations_this_bin
-                 / max(self.requests_this_bin, 1))
+        if requests is None:
+            requests = self.requests_this_bin
+            violations = self.violations_this_bin
+        vrate = violations / max(requests, 1)
         return drift or vrate > violation_trigger

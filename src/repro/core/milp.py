@@ -292,6 +292,7 @@ class Planner:
         self.stats = PlannerStats()
         self._admissible_cache: Dict[str, List[TupleVar]] = {}
         self._matrix_cache: Dict[tuple, _Assembled] = {}
+        self._ready_s_cache: Dict[Key, float] = {}
         # per-context warm state: last solve's root basis + incumbent
         self._warm: Dict[Optional[str],
                          Tuple[tuple, Optional[BasisState],
@@ -349,6 +350,52 @@ class Planner:
         except KeyError:
             return 1.0
 
+    def _graph_for_task(self, task: str) -> Optional[TaskGraph]:
+        """Graph owning ``task`` (tuple task names are plain here; the
+        JointPlanner's are app-qualified and override this)."""
+        return self.graph if task in self.graph.tasks else None
+
+    def _tuple_ready_s(self, tup: TupleVar) -> float:
+        """Actual activation delay (seconds) of a NEW tuple type: weight
+        staging over the slice devices' staging bandwidth plus the pool
+        scheme's repartition delay — the same physics
+        ``TransitionPlanner.weight_load_s`` charges when the transition
+        executes (DESIGN.md §13).  Falls back to the legacy ``cost``
+        proxy when the cluster / slice / architecture can't resolve
+        (profiler-synthesized clusters, exotic variant names)."""
+        cached = self._ready_s_cache.get(tup.key)
+        if cached is not None:
+            return cached
+        val: Optional[float] = None
+        graph = self._graph_for_task(tup.task)
+        if self.cluster is not None and graph is not None:
+            try:
+                from repro.configs import ARCHS
+                _, plain = split_qualified(tup.task)
+                pool, sl = self.cluster.find_slice(tup.segment)
+                v = graph.tasks[plain].variant(tup.variant)
+                n_total, _ = ARCHS[v.arch].param_count()
+                wb = float(n_total) * pool.device.param_bytes(v.quant)
+                per_dev = wb / max(sl.devices, 1)
+                val = (pool.device.weight_load_s(per_dev,
+                                                 sl.memory_fraction)
+                       + pool.scheme.repartition_delay_s)
+            except (KeyError, AttributeError):
+                val = None
+        if val is None:
+            val = float(tup.cost)
+        self._ready_s_cache[tup.key] = val
+        return val
+
+    def _activation_cost(self, tup: TupleVar) -> float:
+        """Objective units (×stickiness) for activating a tuple type
+        outside the incumbent: price-weighted ACTUAL readiness delay —
+        a type whose weights stage in 0.5 s is cheap to adopt, an 8 s
+        MIG repartition + 70B load is not.  The pre-§13 flat
+        ``cost × price`` penalty falls out as the no-cluster fallback
+        (``_tuple_ready_s`` → ``cost``)."""
+        return self._tuple_ready_s(tup) * self._price(tup.pool)
+
     def _unopt_cost(self, pool: str) -> int:
         """'Whole accelerator' unit size for spatial=False, per pool.
         Torus pools keep the legacy ``unopt_chips`` knob — and so do
@@ -377,6 +424,7 @@ class Planner:
         profiler entries or graph SLOs change)."""
         self._admissible_cache.clear()
         self._matrix_cache.clear()
+        self._ready_s_cache.clear()
         self._warm.clear()
 
     def _admissible(self, task: str) -> List[TupleVar]:
@@ -468,12 +516,12 @@ class Planner:
     def _switch_cost(self, cfg: PlanConfig,
                      sticky: Optional[frozenset]) -> float:
         """The objective's switching penalty of a plan (0 history-free):
-        stickiness × cost × price per ACTIVE tuple type outside the
+        stickiness × price × ready_s per ACTIVE tuple type outside the
         incumbent — the same term `_assemble` puts on the y variables."""
         if sticky is None:
             return 0.0
         return self.stickiness * sum(
-            j.cost * self._price(j.pool)
+            self._activation_cost(j)
             for k, j in cfg.tuples.items()
             if cfg.counts.get(k, 0) > 0 and k not in sticky)
 
@@ -682,13 +730,15 @@ class Planner:
         if sticky is not None:
             # switching cost: a tuple type NOT in the incumbent needs a
             # weight load (and possibly a repartition) to activate — its
-            # y variable carries the penalty, so any count of an already
-            # running type stays free while the first instance of a new
-            # type pays once
+            # y variable carries the penalty, weighted by the type's
+            # ACTUAL readiness delay (weight staging + repartition), so
+            # any count of an already running type stays free while the
+            # first instance of a new type pays once, in proportion to
+            # how long its activation would really take
             for i in range(nj):
                 if tuples[i].key not in sticky:
-                    c[ix_y[i]] += (self.stickiness * tuples[i].cost
-                                   * self._price(tuples[i].pool))
+                    c[ix_y[i]] += (self.stickiness
+                                   * self._activation_cost(tuples[i]))
         for t in tasks:
             blk = blk_of[t]
             for k in range(nz[t]):
@@ -1318,6 +1368,15 @@ class JointPlanner(Planner):
     def plan(self, demand_rps, fbar=None, incumbent=None):
         raise TypeError("JointPlanner plans several apps at once — call "
                         "plan_joint({app: rps, ...}) instead of plan()")
+
+    def _graph_for_task(self, task: str) -> Optional[TaskGraph]:
+        """Joint tuples carry ``app::task`` names — resolve the owning
+        app's graph for the ready_s sticky weighting."""
+        app, plain = split_qualified(task)
+        for a in self.apps:
+            if a.name == app and plain in a.graph.tasks:
+                return a.graph
+        return super()._graph_for_task(task)
 
     # ------------------------------------------------------------------
     def plan_joint(self, demands: Mapping[str, float],

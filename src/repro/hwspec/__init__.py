@@ -49,8 +49,10 @@ so a profiler key's slice name alone identifies its pool; plans record
 ``repro.core.hw`` remains a thin shim over :data:`TPU_V5E` so existing
 imports keep working.
 """
-from repro.hwspec.cluster import (ClusterSpec, Pool, default_cluster,
-                                  hetero_cluster, tight_hetero_cluster,
+from repro.hwspec.cluster import (ClusterSpec, Pool, chaos_cluster,
+                                  default_cluster, hetero_cluster,
+                                  tight_hetero_cluster,
+                                  validate_domain_names,
                                   validate_pool_names)
 from repro.hwspec.device import A100_40GB, DEFAULT_POOL, TPU_V5E, DeviceSpec
 from repro.hwspec.partition import (ExplicitScheme, MigScheme,
@@ -60,6 +62,7 @@ from repro.hwspec.partition import (ExplicitScheme, MigScheme,
 __all__ = [
     "A100_40GB", "ClusterSpec", "DEFAULT_POOL", "DeviceSpec",
     "ExplicitScheme", "MigScheme", "PartitionScheme", "Pool", "Slice",
-    "TorusScheme", "TPU_V5E", "default_cluster", "hetero_cluster",
-    "slice_from_segment", "tight_hetero_cluster", "validate_pool_names",
+    "TorusScheme", "TPU_V5E", "chaos_cluster", "default_cluster",
+    "hetero_cluster", "slice_from_segment", "tight_hetero_cluster",
+    "validate_domain_names", "validate_pool_names",
 ]

@@ -33,17 +33,36 @@ class Pool:
         slice_price: relative objective cost of one capacity unit — lets
             the MILP prefer e.g. spot/MIG capacity (< 1.0) over reserved
             chips without touching the constraint rows.
+        domains: named correlated-failure domains (racks, power groups)
+            the pool's devices are spread over, round-robin by device
+            index (device ``i`` sits in ``domains[i % len(domains)]``).
+            Domain names are CLUSTER-scoped, not pool-scoped: two pools
+            naming the same domain share the blast radius — one
+            ``DomainFailureEvent`` takes capacity from both at once.
+            Empty (default) = the pool has no modeled blast radius.
     """
     name: str
     device: DeviceSpec
     count: int                    # devices (chips for a torus pool)
     scheme: PartitionScheme
     slice_price: float = 1.0      # objective $/capacity-unit, relative
+    domains: Tuple[str, ...] = ()
 
     @property
     def capacity_units(self) -> int:
         """Total MILP capacity units (Σ s_n budget) this pool offers."""
         return self.count * self.scheme.units_per_device
+
+    def domain_units(self) -> Dict[str, int]:
+        """Capacity units of THIS pool per failure domain (devices are
+        spread round-robin over ``domains``; empty → no domains)."""
+        out: Dict[str, int] = {}
+        if not self.domains:
+            return out
+        for i in range(self.count):
+            d = self.domains[i % len(self.domains)]
+            out[d] = out.get(d, 0) + self.scheme.units_per_device
+        return out
 
 
 @dataclass(frozen=True)
@@ -100,6 +119,41 @@ class ClusterSpec:
     def prices(self) -> Dict[str, float]:
         return {p.name: p.slice_price for p in self.pools}
 
+    # -- correlated failure domains ------------------------------------
+    @property
+    def domain_names(self) -> Tuple[str, ...]:
+        """All failure-domain names, in first-appearance pool order."""
+        seen: Dict[str, None] = {}
+        for p in self.pools:
+            for d in p.domains:
+                seen.setdefault(d, None)
+        return tuple(seen)
+
+    def domain_units(self) -> Dict[str, Dict[str, int]]:
+        """Per-domain blast radius: domain name → {pool name → capacity
+        units that domain hosts in that pool}.  A domain spanning
+        several pools (shared rack/power group) appears with one entry
+        per member pool — the correlated-kill surface a
+        ``DomainFailureEvent`` expands into."""
+        out: Dict[str, Dict[str, int]] = {}
+        for p in self.pools:
+            for d, u in p.domain_units().items():
+                out.setdefault(d, {})[p.name] = u
+        return out
+
+
+# ---------------------------------------------------------------------------
+def validate_domain_names(cluster: Optional[ClusterSpec],
+                          names: Iterable[str], what: str) -> None:
+    """Fail loud when ``names`` references a failure domain no pool
+    declares — a typo'd domain in a chaos schedule would otherwise
+    silently kill nothing."""
+    known = set(cluster.domain_names) if cluster is not None else set()
+    unknown = set(names) - known
+    if unknown:
+        raise ValueError(f"{what} names unknown failure domains "
+                         f"{sorted(unknown)} (cluster has {sorted(known)})")
+
 
 # ---------------------------------------------------------------------------
 def validate_pool_names(cluster: Optional[ClusterSpec],
@@ -154,4 +208,23 @@ def tight_hetero_cluster() -> ClusterSpec:
     return ClusterSpec(pools=(
         Pool(DEFAULT_POOL, TPU_V5E, 8, TorusScheme(max_chips=4)),
         Pool("mig", A100_40GB, 2, MigScheme()),
+    ))
+
+
+def chaos_cluster() -> ClusterSpec:
+    """The chaos-engineering scenario cluster (DESIGN.md §13): the
+    tight two-pool capacity shape of :func:`tight_hetero_cluster` with
+    failure domains layered on top — 8 reserved v5e chips split over
+    racks ``r0``/``r1``, plus 2 discounted spot MIG devices (one per
+    rack, ``slice_price=0.4``) that a :class:`~repro.runtime.scenario.
+    PreemptionEvent` can reclaim.  A ``DomainFailureEvent("r0")`` takes
+    half the v5e pool AND one spot device at once (a shared rack dying
+    under both pools).  ONE definition shared by tests/test_chaos.py,
+    benchmarks/bench_chaos.py and the fuzzer, so pinned chaos numbers
+    and the tested topology cannot drift apart."""
+    return ClusterSpec(pools=(
+        Pool(DEFAULT_POOL, TPU_V5E, 8, TorusScheme(max_chips=4),
+             domains=("r0", "r1")),
+        Pool("spot", A100_40GB, 2, MigScheme(), slice_price=0.4,
+             domains=("r0", "r1")),
     ))

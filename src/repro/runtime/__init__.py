@@ -15,13 +15,15 @@ from repro.runtime.backend import EngineBackend, ExecutionBackend, SimBackend
 from repro.runtime.metrics import Server, SimMetrics
 from repro.runtime.cluster import ClusterRuntime
 from repro.runtime.scenario import (AppArrivals, ArrivalProcess,
-                                    CapacityEvent, FailureEvent,
-                                    PoissonArrivals, Scenario,
+                                    CapacityEvent, DomainFailureEvent,
+                                    FailureEvent, PoissonArrivals,
+                                    PreemptionEvent, Scenario,
                                     TraceArrivals, TransitionEvent)
 
 __all__ = [
     "AppArrivals", "ArrivalProcess", "CapacityEvent", "ClusterRuntime",
-    "EngineBackend", "ExecutionBackend", "FailureEvent", "PoissonArrivals",
-    "Scenario", "Server", "SimBackend", "SimMetrics", "TraceArrivals",
+    "DomainFailureEvent", "EngineBackend", "ExecutionBackend",
+    "FailureEvent", "PoissonArrivals", "PreemptionEvent", "Scenario",
+    "Server", "SimBackend", "SimMetrics", "TraceArrivals",
     "TransitionEvent",
 ]

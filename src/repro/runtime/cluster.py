@@ -41,11 +41,18 @@ from repro.core.milp import PlanConfig
 from repro.core.taskgraph import TaskGraph, qualify, split_qualified
 from repro.runtime.backend import ExecutionBackend, SimBackend
 from repro.runtime.metrics import Server, SimMetrics
-from repro.runtime.scenario import CapacityEvent, FailureEvent, Scenario
+from repro.runtime.scenario import (CapacityEvent, DomainFailureEvent,
+                                    FailureEvent, PreemptionEvent, Scenario)
 
 if TYPE_CHECKING:   # pragma: no cover — typing only (repro.reconfig
     # imports the MILP layer; the runtime consumes plans duck-typed)
+    from repro.hwspec import ClusterSpec
     from repro.reconfig.transition import TransitionPlan
+
+# queue sweep cadence while chaos events are in play: dead-task queues
+# get no poll events, so without a periodic scan their requests would
+# never be counted as dropped (accounting hole, not a serving change)
+_CHAOS_SCAN_S = 0.5
 
 __all__ = ["ClusterRuntime", "Server", "SimMetrics"]
 
@@ -73,10 +80,13 @@ class ClusterRuntime:
                  backend: Optional[ExecutionBackend] = None, *,
                  seed: int = 0, staleness_ms: float = 20.0,
                  frontend=None, time_base_s: float = 0.0,
-                 transition: Optional["TransitionPlan"] = None):
+                 transition: Optional["TransitionPlan"] = None,
+                 cluster: Optional["ClusterSpec"] = None,
+                 monitor=None, ladder=None):
         self._setup({"": _AppState("", graph, config, frontend)},
                     backend, seed=seed, staleness_ms=staleness_ms,
-                    time_base_s=time_base_s, transition=transition)
+                    time_base_s=time_base_s, transition=transition,
+                    cluster=cluster, monitor=monitor, ladder=ladder)
 
     @classmethod
     def multi(cls, apps: Mapping[str, Tuple[TaskGraph, PlanConfig]],
@@ -84,8 +94,9 @@ class ClusterRuntime:
               seed: int = 0, staleness_ms: float = 20.0,
               frontends: Optional[Mapping[str, object]] = None,
               time_base_s: float = 0.0,
-              transition: Optional["TransitionPlan"] = None
-              ) -> "ClusterRuntime":
+              transition: Optional["TransitionPlan"] = None,
+              cluster: Optional["ClusterSpec"] = None,
+              monitor=None, ladder=None) -> "ClusterRuntime":
         """Serve several co-located apps on one event loop.
 
         ``apps`` maps the (non-empty) app name to that app's graph and
@@ -101,14 +112,17 @@ class ClusterRuntime:
         rt._setup({name: _AppState(name, g, cfg, fes.get(name))
                    for name, (g, cfg) in apps.items()},
                   backend, seed=seed, staleness_ms=staleness_ms,
-                  time_base_s=time_base_s, transition=transition)
+                  time_base_s=time_base_s, transition=transition,
+                  cluster=cluster, monitor=monitor, ladder=ladder)
         return rt
 
     # ------------------------------------------------------------------
     def _setup(self, apps: Dict[str, _AppState],
                backend: Optional[ExecutionBackend], *, seed: int,
                staleness_ms: float, time_base_s: float,
-               transition: Optional["TransitionPlan"] = None):
+               transition: Optional["TransitionPlan"] = None,
+               cluster: Optional["ClusterSpec"] = None,
+               monitor=None, ladder=None):
         self._apps = apps
         self._single = apps.get("") if list(apps) == [""] else None
         self.backend = backend if backend is not None else SimBackend()
@@ -116,6 +130,18 @@ class ClusterRuntime:
         self.staleness_ms = staleness_ms
         self.time_base_s = time_base_s
         self._transition = transition
+        # chaos wiring (DESIGN.md §13): the hardware model that resolves
+        # domain/preemption blast radii, the mid-bin monitor (e.g. an
+        # EmergencyReplanner) and the degradation ladder
+        self.cluster = cluster
+        self._monitor = monitor
+        self._ladder = ladder
+        # closed-loop failure accounting: physical capacity units lost
+        # per pool (fractional until ceil'd by dead_units()) and the
+        # qualified tasks that lost streams — read by the
+        # FailureDetector and the drop-reason attribution
+        self._dead_unit_frac: Dict[str, float] = {}
+        self.lost_capacity: set = set()
         self.servers: List[Server] = []
         if transition is None:
             for name, st in apps.items():
@@ -209,6 +235,28 @@ class ClusterRuntime:
     def frontend(self):
         return self._single.frontend if self._single is not None else None
 
+    def effective_config(self, app: str = "") -> PlanConfig:
+        """The LIVE deployment as a :class:`PlanConfig`: whole instances
+        whose streams are neither killed nor draining.  After a chaos
+        kill this is what an emergency re-plan must diff against — the
+        planned config still counts capacity that no longer exists."""
+        st = self._apps[app]
+        streams: Dict[tuple, int] = {}
+        tups: Dict[tuple, object] = {}
+        for s in self.servers:
+            if s.app != app or s.retire_at != math.inf:
+                continue
+            k = s.tup.key
+            streams[k] = streams.get(k, 0) + 1
+            tups[k] = s.tup
+        counts = {k: n // max(tups[k].streams, 1)
+                  for k, n in streams.items()}
+        counts = {k: c for k, c in counts.items() if c > 0}
+        return PlanConfig(st.graph, counts,
+                          {k: tups[k] for k in counts},
+                          dict(st.config.demand),
+                          pool_budgets=st.config.pool_budgets)
+
     # ------------------------------------------------------------------
     def _fastest_remaining(self) -> Dict[str, float]:
         out: Dict[str, float] = {}
@@ -235,23 +283,73 @@ class ClusterRuntime:
     # ------------------------------------------------------------------
     # capacity hooks (failure injection + elasticity)
     # ------------------------------------------------------------------
-    def fail_instances(self, indices: Sequence[int]):
+    def fail_instances(self, indices: Sequence[int], *,
+                       record: bool = True, allow_empty: bool = False):
         """Kill servers (node failure).  Indices are global, so one event
         can model a host dying under SEVERAL co-located apps.  Shared
         per-app queues mean survivors simply absorb the load; raises if
-        any app's task loses all capacity."""
+        any app's task loses all capacity unless ``allow_empty`` (chaos
+        storms degrade instead of crash — the emergency re-plan is the
+        recovery path).
+
+        ``record`` attributes the killed streams' capacity to their
+        pools (``dead_units``) and marks their tasks as capacity-lossy
+        (drop-reason attribution).  Intentional elasticity (the
+        CapacityEvent retire path) passes ``record=False`` so planned
+        shrinks never masquerade as failures."""
         dead = set(indices)
+        gone = [s for s in self.servers if s.idx in dead]
+        if record:
+            for s in gone:
+                # one stream is 1/streams of its instance's slice
+                self._dead_unit_frac[s.tup.pool] = (
+                    self._dead_unit_frac.get(s.tup.pool, 0.0)
+                    + s.tup.cost / max(s.tup.streams, 1))
+                self.lost_capacity.add(qualify(s.app, s.tup.task))
         self.servers = [s for s in self.servers if s.idx not in dead]
         self.by_task = {}
         for s in self.servers:
             self.by_task.setdefault(qualify(s.app, s.tup.task),
                                     []).append(s)
-        for name, st in self._apps.items():
-            for t in st.graph.tasks:
-                if not self.by_task.get(qualify(name, t)):
-                    raise RuntimeError(
-                        f"task {qualify(name, t)!r} lost all instances — "
-                        "controller must re-plan with reduced S_avail")
+        if not allow_empty:
+            for name, st in self._apps.items():
+                for t in st.graph.tasks:
+                    if not self.by_task.get(qualify(name, t)):
+                        raise RuntimeError(
+                            f"task {qualify(name, t)!r} lost all instances "
+                            "— controller must re-plan with reduced "
+                            "S_avail")
+        self._fastest = self._fastest_remaining()
+        self.backend.on_capacity_change(self.servers)
+
+    # -- closed-loop failure accounting (DESIGN.md §13) -----------------
+    def record_dead_units(self, pool: str, units: float):
+        """Attribute ``units`` of physical capacity loss to ``pool`` —
+        used by domain failures and preemptions, whose blast radius is
+        physical hardware (which may exceed what was deployed on it)."""
+        self._dead_unit_frac[pool] = (self._dead_unit_frac.get(pool, 0.0)
+                                      + float(units))
+
+    def dead_units(self) -> Dict[str, int]:
+        """Per-pool dead capacity units observed by THIS runtime (killed
+        or preempted servers, domain blast radii), ceil'd to the integer
+        units the planner's Eq. 8 budgets subtract and clamped to the
+        pool's physical capacity when the cluster is attached."""
+        out: Dict[str, int] = {}
+        for pool, frac in self._dead_unit_frac.items():
+            units = int(math.ceil(frac - 1e-9))
+            if self.cluster is not None:
+                try:
+                    units = min(units, self.cluster.pool(pool).capacity_units)
+                except KeyError:
+                    pass
+            if units > 0:
+                out[pool] = units
+        return out
+
+    def refresh_capacity(self):
+        """Recompute the latency model + notify the backend after an
+        external actor (the degradation ladder) mutated server tuples."""
         self._fastest = self._fastest_remaining()
         self.backend.on_capacity_change(self.servers)
 
@@ -287,16 +385,98 @@ class ClusterRuntime:
         else:
             keys = [k for k in self.by_task
                     if not ev.app or split_qualified(k)[0] == ev.app]
+            if ev.pool is not None:
+                keys = [k for k in keys
+                        if any(s.tup.pool == ev.pool
+                               for s in self.by_task[k])]
             if not keys:
                 # fail as loud as the other capacity hooks — an
                 # app-scoped kill matching nothing is a scenario bug
                 raise RuntimeError(
-                    f"FailureEvent app {ev.app!r} has no live servers "
-                    f"(runtime serves {sorted(self._apps)})")
+                    f"FailureEvent app {ev.app!r} pool {ev.pool!r} has no "
+                    f"live servers (runtime serves {sorted(self._apps)})")
             qt = max(keys, key=lambda k: len(self.by_task[k]))
-        victims = [s.idx for s in self.by_task.get(qt, [])[:ev.count]]
+        cand = self.by_task.get(qt, [])
+        if ev.pool is not None:
+            cand = [s for s in cand if s.tup.pool == ev.pool]
+            if not cand:
+                raise RuntimeError(
+                    f"FailureEvent task {qt!r} has no live servers in "
+                    f"pool {ev.pool!r}")
+        victims = [s.idx for s in cand[:ev.count]]
         if victims:
             self.fail_instances(victims)
+
+    def _apply_domain_failure(self, ev: DomainFailureEvent):
+        """Correlated kill: the named failure domain dies, taking its
+        capacity units in EVERY member pool at once.  Which DEPLOYED
+        streams die follows the cluster's implied placement — instances
+        pack the pool's devices in deployment order, and a device
+        belongs to ``domains[i % len(domains)]`` (see
+        ``Pool.domain_units``) — so a plan spread across two racks
+        loses roughly its per-rack share, not everything.  The PHYSICAL
+        blast radius is recorded as dead capacity even where the
+        incumbent plan deployed less, because the hardware is gone
+        either way."""
+        if self.cluster is None:
+            raise RuntimeError(
+                "DomainFailureEvent needs the runtime's cluster= — "
+                "domains are resolved against the ClusterSpec")
+        from repro.hwspec import validate_domain_names
+        validate_domain_names(self.cluster, [ev.domain],
+                              "DomainFailureEvent")
+        radius = self.cluster.domain_units().get(ev.domain, {})
+        victims: List[int] = []
+        for pool, units in radius.items():
+            self.record_dead_units(pool, units)
+            spec = self.cluster.pool(pool)
+            per_dev = max(spec.scheme.units_per_device, 1)
+            offset = 0.0    # running unit offset = packed device position
+            for s in self.servers:
+                if s.tup.pool != pool:
+                    continue
+                dev = int(offset // per_dev) % max(spec.count, 1)
+                offset += s.tup.cost / max(s.tup.streams, 1)
+                if spec.domains[dev % len(spec.domains)] != ev.domain:
+                    continue
+                victims.append(s.idx)
+                self.lost_capacity.add(qualify(s.app, s.tup.task))
+        if victims:
+            # physical units were recorded above — don't double count
+            self.fail_instances(victims, record=False, allow_empty=True)
+
+    def _apply_preemption(self, ev: PreemptionEvent, now: float, push):
+        """Spot reclaim notice: stamp ``retire_at`` on the affected
+        streams (the notice window is a drain hand-over — in-flight and
+        notice-window work completes, nothing new past it) and record
+        the reclaimed physical units as dead capacity IMMEDIATELY, so a
+        mid-bin emergency re-plan already excludes the doomed pool
+        while it is still serving."""
+        handover = now + max(ev.notice_s, 0.0)
+        pool_servers = [s for s in self.servers if s.tup.pool == ev.pool]
+        if self.cluster is not None:
+            from repro.hwspec import validate_pool_names
+            validate_pool_names(self.cluster, [ev.pool], "PreemptionEvent")
+            total = self.cluster.pool(ev.pool).capacity_units
+        else:
+            total = sum(s.tup.cost / max(s.tup.streams, 1)
+                        for s in pool_servers)
+        reclaim = float(total) * min(max(ev.fraction, 0.0), 1.0)
+        if reclaim <= 0.0:
+            return
+        self.record_dead_units(ev.pool, reclaim)
+        covered = 0.0
+        stamped = False
+        for s in pool_servers:
+            if ev.fraction < 1.0 and covered >= reclaim - 1e-9:
+                break
+            s.retire_at = min(s.retire_at, handover)
+            self.lost_capacity.add(qualify(s.app, s.tup.task))
+            covered += s.tup.cost / max(s.tup.streams, 1)
+            stamped = True
+        if stamped:
+            # idle preempted streams get no 'done' event to retire them
+            push(handover, "retire_sweep", None)
 
     def apply_transition(self, plan: "TransitionPlan", now: float):
         """Execute a reconfiguration LIVE on the running fleet: the
@@ -373,7 +553,9 @@ class ClusterRuntime:
                         f"{ev.pool!r} to retire")
             victims = [s.idx for s in pool[:-ev.delta]]
             if victims:
-                self.fail_instances(victims)
+                # an intentional shrink is not a failure: don't feed the
+                # closed-loop detector with planned elasticity
+                self.fail_instances(victims, record=False)
 
     # ------------------------------------------------------------------
     def run(self, scenario: Scenario) -> SimMetrics:
@@ -385,11 +567,17 @@ class ClusterRuntime:
         windows: List[Tuple[float, float]] = []
         if self._transition is not None:
             windows.append((0.0, self._transition.makespan_s))
-        if self._transition is not None or scenario.transitions:
+        if (self._transition is not None or scenario.transitions
+                or self._monitor is not None):
+            # a monitor may open emergency-transition windows mid-run
             m.window = SimMetrics()
 
         def in_window(t: float) -> bool:
             return any(a <= t < b for a, b in windows)
+
+        # per-domain attainment: domain name -> failure time; requests
+        # ARRIVING after it are additionally filed under m.domain(name)
+        domain_open: Dict[str, float] = {}
 
         ids = self._ids
         seq = itertools.count()
@@ -455,6 +643,32 @@ class ClusterRuntime:
             push(ev.at_s, "capacity", ev)
         for ev in scenario.transitions:
             push(ev.at_s, "transition", ev.plan)
+        for ev in scenario.domain_failures:
+            push(ev.at_s, "domain_fail", ev)
+        for ev in scenario.preemptions:
+            push(ev.at_s, "preempt", ev)
+        chaos_events = scenario.domain_failures or scenario.preemptions \
+            or any(f.pool is not None for f in scenario.failures)
+        if chaos_events:
+            # periodic queue sweeps from the first chaos event on: a
+            # task with no live servers gets no poll events, so its
+            # queued requests would otherwise never be counted dropped
+            t0 = min(e.at_s for e in (scenario.domain_failures
+                                      + scenario.preemptions
+                                      + scenario.failures))
+            t_scan = t0 + _CHAOS_SCAN_S
+            while t_scan <= drain_s:
+                push(t_scan, "chaos_scan", None)
+                t_scan += _CHAOS_SCAN_S
+        if self._monitor is not None:
+            begin = getattr(self._monitor, "begin_run", None)
+            if begin is not None:
+                begin(self)
+            interval = float(getattr(self._monitor, "interval_s", 0.5))
+            t_mon = interval
+            while t_mon <= duration_s:
+                push(t_mon, "mon", None)
+                t_mon += interval
         if self._transition is not None:
             # sweep each drain wave out once its hand-over passes — an
             # idle drained stream gets no 'done' event to retire it
@@ -465,6 +679,27 @@ class ClusterRuntime:
             if q:                   # leftover work from a prior run
                 push(0.0, "poll", qt)
 
+        def account_drop(app: str, task: str, g, rt0: float, reason: str):
+            """File one request's fan-weighted drop into every ledger it
+            belongs to (aggregate, per-app, transition window, failed
+            domains), attributed to ``reason``."""
+            in_main = rt0 >= warmup_s
+            in_win = m.window is not None and in_window(rt0)
+            doms = [d for d, tf in domain_open.items() if rt0 >= tf]
+            if not (in_main or in_win or doms):
+                return
+            fan = max(1, round(sum(
+                g.factor(task, g.tasks[task].most_accurate.name, t2)
+                for t2 in g.successors(task)) or 1))
+            if in_main:
+                m.count_drop(fan, reason)
+                if app:
+                    sub(app).count_drop(fan, reason)
+            if in_win:
+                m.window.count_drop(fan, reason)
+            for d in doms:
+                m.domain(d).count_drop(fan, reason)
+
         def drop_scan(qt: str, now: float):
             """Early-drop pass over one (app, task) queue (paper §3.3)."""
             app, task = split_qualified(qt)
@@ -473,26 +708,20 @@ class ClusterRuntime:
             keep = []
             fastest = self._fastest[qt]
             timeout = self._timeout[qt]
+            lossy = qt in self.lost_capacity
             for req in q:
                 reason = early_drop(req, now, fastest, self.staleness_ms,
                                     timeout)
                 if reason is None:
                     keep.append(req)
                 else:
-                    rt0 = root_t[req.root_id]
-                    in_main = rt0 >= warmup_s
-                    in_win = m.window is not None and in_window(rt0)
-                    if in_main or in_win:
-                        fan = max(1, round(sum(
-                            g.factor(task,
-                                     g.tasks[task].most_accurate.name, t2)
-                            for t2 in g.successors(task)) or 1))
-                        if in_main:
-                            m.dropped += fan
-                            if app:
-                                sub(app).dropped += fan
-                        if in_win:
-                            m.window.dropped += fan
+                    # attribution: a task that lost streams to a kill or
+                    # preemption drops because capacity failed, not
+                    # because the request was inherently unserviceable
+                    rkey = ("failed_capacity" if lossy
+                            else "deadline"
+                            if reason == "deadline_unreachable" else reason)
+                    account_drop(app, task, g, root_t[req.root_id], rkey)
             self.queues[qt] = keep
 
         def try_dispatch(qt: str, now: float):
@@ -501,7 +730,8 @@ class ClusterRuntime:
             while q:
                 # a drained (retired) stream takes no NEW batches; an
                 # incoming stream's warm-up is its initial busy_until
-                idle = [s for s in self.by_task[qt]
+                # (.get: a chaos kill may have emptied the task's fleet)
+                idle = [s for s in self.by_task.get(qt, [])
                         if s.busy_until <= now + 1e-12
                         and s.retire_at > now + 1e-12]
                 if not idle:
@@ -524,7 +754,7 @@ class ClusterRuntime:
                 # retired streams must not feed the poll clock: their
                 # stale busy_until would pin min-busy in the past and
                 # the queue could stall until the next arrival
-                alive = [s for s in self.by_task[qt]
+                alive = [s for s in self.by_task.get(qt, [])
                          if s.retire_at > now + 1e-12]
                 if not alive:
                     return
@@ -542,13 +772,33 @@ class ClusterRuntime:
                 break
             if kind == "arrive":
                 req = payload
+                if self._ladder is not None:
+                    shed = self._ladder.gate(self, req.task, now)
+                    if shed is not None:
+                        app0, task0 = split_qualified(req.task)
+                        account_drop(app0, task0,
+                                     self._apps[app0].graph,
+                                     root_t[req.root_id], shed)
+                        continue
                 req.enqueue_t = now
                 self.queues[req.task].append(req)
                 try_dispatch(req.task, now)
             elif kind == "poll":
                 try_dispatch(payload, now)
-            elif kind in ("fail", "capacity", "transition",
-                          "retire_sweep"):
+            elif kind == "mon":
+                plan = self._monitor.check(self, now, m)
+                if plan is not None:
+                    # emergency re-plan executes exactly like a scheduled
+                    # TransitionEvent: live drains/loads + its own window
+                    self.apply_transition(plan, now)
+                    windows.append((now, now + plan.makespan_s))
+                    for a in plan.drains:
+                        push(now + a.retire_s, "retire_sweep", None)
+                srv_by_idx = {s.idx: s for s in self.servers}
+                for qt2 in self.queues:
+                    try_dispatch(qt2, now)
+            elif kind in ("fail", "capacity", "transition", "retire_sweep",
+                          "domain_fail", "preempt", "chaos_scan"):
                 if kind == "fail":
                     self._apply_failure(payload)
                 elif kind == "capacity":
@@ -558,6 +808,13 @@ class ClusterRuntime:
                     windows.append((now, now + payload.makespan_s))
                     for a in payload.drains:
                         push(now + a.retire_s, "retire_sweep", None)
+                elif kind == "domain_fail":
+                    self._apply_domain_failure(payload)
+                    domain_open.setdefault(payload.domain, now)
+                elif kind == "preempt":
+                    self._apply_preemption(payload, now, push)
+                elif kind == "chaos_scan":
+                    pass        # the shared try_dispatch pass below
                 else:
                     self._sweep_retired(now)
                 srv_by_idx = {s.idx: s for s in self.servers}
@@ -578,6 +835,10 @@ class ClusterRuntime:
                           for t2 in g.successors(task)]
                 for req in batch:
                     srv.served += 1
+                    if srv.degraded:
+                        m.degraded_served += 1
+                        if app:
+                            sub(app).degraded_served += 1
                     m.traffic[agg_key] = m.traffic.get(agg_key, 0) + 1
                     if app:
                         ms = sub(app)
@@ -586,14 +847,17 @@ class ClusterRuntime:
                     if not succ_q:
                         rt0 = root_t[req.root_id]
                         in_win = m.window is not None and in_window(rt0)
-                        if rt0 >= warmup_s or in_win:
+                        doms = tuple(m.domain(d)
+                                     for d, tf in domain_open.items()
+                                     if rt0 >= tf)
+                        if rt0 >= warmup_s or in_win or doms:
                             lat = (now - rt0) * 1e3
                             missed = now > req.deadline + 1e-9
                             sinks = (((m,) if app == ""
                                       else (m, sub(app)))
                                      if rt0 >= warmup_s else ())
                             for mm in (sinks + ((m.window,) if in_win
-                                                else ())):
+                                                else ()) + doms):
                                 mm.latencies_ms.append(lat)
                                 mm.completions += 1
                                 if missed:

@@ -31,7 +31,19 @@ class SimMetrics:
     outcome of requests ARRIVING inside a transition window under
     ``window`` (its own ledger, warmup-independent — the switching cost
     must stay visible even during warm-up), with ``transition_window_s``
-    the summed window span; atomic legacy runs leave both untouched."""
+    the summed window span; atomic legacy runs leave both untouched.
+
+    Chaos runs (DESIGN.md §13) add three degradation ledgers.
+    ``drop_reasons`` attributes every fan-weighted drop to its cause —
+    ``"failed_capacity"`` (the task had lost servers to kills or
+    preemption when the drop happened), ``"deadline"`` / ``"stale"``
+    (genuine SLO misses), ``"admission"`` / ``"shed"`` (the degradation
+    ladder's deliberate load shedding) — so experiments can tell shed
+    load from real violations.  ``admission_dropped`` counts the ladder's
+    entry-gate drops, ``degraded_served`` the sub-requests served by an
+    accuracy-downshifted server.  ``by_domain`` files the outcome of
+    requests arriving AFTER a domain failure under that domain's name
+    (per-domain attainment: what the blast radius cost)."""
     completions: int = 0           # leaf sub-requests serviced
     missed: int = 0                # serviced but past the deadline
     dropped: int = 0               # early-drops, fan-out weighted (§4.5)
@@ -41,6 +53,11 @@ class SimMetrics:
     # transition-window attainment (repro.reconfig, DESIGN.md §12)
     window: Optional["SimMetrics"] = None
     transition_window_s: float = 0.0
+    # chaos / degradation accounting (DESIGN.md §13)
+    drop_reasons: Dict[str, int] = field(default_factory=dict)
+    admission_dropped: int = 0     # ladder entry-gate drops (fan-weighted)
+    degraded_served: int = 0       # sub-requests served on downshifted tuples
+    by_domain: Dict[str, "SimMetrics"] = field(default_factory=dict)
 
     def app(self, name: str) -> "SimMetrics":
         """This app's sub-metrics (created on first use)."""
@@ -48,6 +65,22 @@ class SimMetrics:
         if sub is None:
             sub = self.by_app[name] = SimMetrics()
         return sub
+
+    def domain(self, name: str) -> "SimMetrics":
+        """Attainment ledger of one failed domain (created on first use):
+        the outcome of requests arriving after its failure."""
+        sub = self.by_domain.get(name)
+        if sub is None:
+            sub = self.by_domain[name] = SimMetrics()
+        return sub
+
+    def count_drop(self, n: int, reason: str):
+        """File ``n`` fan-weighted drops under ``reason`` (and the
+        aggregate ``dropped`` counter)."""
+        self.dropped += n
+        self.drop_reasons[reason] = self.drop_reasons.get(reason, 0) + n
+        if reason == "admission":
+            self.admission_dropped += n
 
     @property
     def violations(self) -> int:
@@ -98,10 +131,15 @@ class Server:
     it the stream accepts no new batches (in-flight work still
     completes, then the runtime removes the server).  An incoming
     stream's warm-up is expressed through ``busy_until`` — it exists
-    from the start but only becomes dispatchable once ready."""
+    from the start but only becomes dispatchable once ready.
+
+    ``degraded`` marks a stream the degradation ladder downshifted to a
+    cheaper variant (DESIGN.md §13) — requests it serves are counted
+    under ``SimMetrics.degraded_served``."""
     tup: "TupleVar"
     idx: int
     busy_until: float = 0.0
     served: int = 0
     app: str = ""
     retire_at: float = math.inf
+    degraded: bool = False

@@ -103,12 +103,47 @@ class FailureEvent:
     HOST dying: in a multi-app runtime it can take out streams of several
     co-located apps at once (shared-capacity failure).  ``app`` scopes a
     task-based kill to one app's servers (multi-app runtimes; ignored
-    when ``indices`` is given)."""
+    when ``indices`` is given).  ``pool`` restricts a task-based kill to
+    servers deployed in that ClusterSpec pool — the runtime then
+    attributes the dead capacity to the pool automatically
+    (``ClusterRuntime.dead_units``), closing the loop the controller's
+    manual ``dead_units=`` dict used to hand-feed."""
     at_s: float
     indices: Optional[Tuple[int, ...]] = None
     count: int = 1
     task: Optional[str] = None
     app: str = ""
+    pool: Optional[str] = None
+
+
+@dataclass(frozen=True)
+class DomainFailureEvent:
+    """A correlated infrastructure failure: at ``at_s`` the named
+    failure domain (rack / power group — see ``Pool.domains``) dies,
+    killing the domain's capacity units in EVERY member pool at once.
+    The runtime resolves the blast radius via its ``ClusterSpec``
+    (``cluster=`` must be attached) and records the lost physical units
+    per pool for the :class:`~repro.chaos.FailureDetector`."""
+    at_s: float
+    domain: str
+
+
+@dataclass(frozen=True)
+class PreemptionEvent:
+    """Spot capacity reclaim: at ``at_s`` the provider serves notice
+    that ``fraction`` of pool ``pool`` disappears after ``notice_s``.
+
+    The notice window becomes a drain hand-over (DESIGN.md §12): every
+    affected server gets ``retire_at = at_s + notice_s`` stamped, so
+    in-flight and notice-window work still completes on the doomed
+    capacity but nothing new is dispatched past the hand-over.  The
+    reclaimed physical units are recorded as dead capacity (the pool's
+    ``slice_price`` is what made the planner buy the cheap spot units
+    in the first place — the detector makes it re-plan without them)."""
+    at_s: float
+    pool: str
+    notice_s: float = 2.0
+    fraction: float = 1.0
 
 
 @dataclass(frozen=True)
@@ -166,6 +201,10 @@ class Scenario:
     name: str = "scenario"
     apps: Tuple[AppArrivals, ...] = ()
     transitions: Tuple[TransitionEvent, ...] = ()
+    # chaos schedules (DESIGN.md §13): correlated domain deaths and spot
+    # preemption notices, expanded by the runtime against its ClusterSpec
+    domain_failures: Tuple[DomainFailureEvent, ...] = ()
+    preemptions: Tuple[PreemptionEvent, ...] = ()
 
     def __post_init__(self):
         if (self.arrivals is None) == (not self.apps):
@@ -250,6 +289,21 @@ class Scenario:
     def with_transitions(self, *events: TransitionEvent) -> "Scenario":
         return dataclasses.replace(
             self, transitions=self.transitions + tuple(events))
+
+    def with_chaos(self, *events) -> "Scenario":
+        """Add correlated-failure / preemption events (any mix of
+        :class:`DomainFailureEvent` and :class:`PreemptionEvent`)."""
+        dom = tuple(e for e in events if isinstance(e, DomainFailureEvent))
+        pre = tuple(e for e in events if isinstance(e, PreemptionEvent))
+        if len(dom) + len(pre) != len(events):
+            bad = [e for e in events
+                   if not isinstance(e, (DomainFailureEvent,
+                                         PreemptionEvent))]
+            raise TypeError(f"with_chaos takes DomainFailureEvent / "
+                            f"PreemptionEvent, got {bad!r}")
+        return dataclasses.replace(
+            self, domain_failures=self.domain_failures + dom,
+            preemptions=self.preemptions + pre)
 
     def slo_sweep(self, scales: Sequence[float]) -> List["Scenario"]:
         """SLO sensitivity sweep: the same workload under tighter/looser

@@ -13,7 +13,7 @@ import json
 import sys
 from pathlib import Path
 
-MAX_COLS = 6
+MAX_COLS = 7
 
 
 def fmt(v) -> str:
