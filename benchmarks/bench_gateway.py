@@ -1,0 +1,223 @@
+"""Gateway + observability benchmarks (DESIGN.md §14).
+
+Two measurements, persisted as ``BENCH_gateway.json``:
+
+1. **Load-generator throughput** — the in-process asyncio gateway
+   (two planned apps, SimBackend data plane) driven by the open-loop
+   Poisson generator at time compression: achieved rps, attainment and
+   p99 per app.
+2. **Instrumentation overhead** — the PIN: running the ClusterRuntime
+   event loop with ``hooks=Instrumentation()`` may not cost more than
+   5% of bare throughput (``OVERHEAD_PIN = 0.95``).  A miss raises,
+   which ``benchmarks.run`` turns into a CI failure.
+
+   The pin is computed as ``bare / (bare + added)`` where ``added`` is
+   the instrumentation cost: deterministic per-hook call counts from
+   one counted replay of the scenario (seeded — identical every run)
+   times microbenched per-call hook costs (min over batches, which
+   converges on the noise-free floor).  End-to-end hooked throughput is
+   also run and reported, but only informationally: a null experiment
+   on a shared machine measured the SAME bare binary 6-15% apart across
+   interleaved best-of batches, so subtracting two large noisy
+   end-to-end timings cannot resolve a 5% difference — measuring the
+   small added cost directly and dividing by the (noisy) bare wall is
+   stable, because denominator noise barely moves a ~2% ratio.
+"""
+import asyncio
+import gc
+import time
+from typing import Dict
+
+from repro.core.apps import get_app
+from repro.core.milp import Planner
+from repro.core.profiler import Profiler
+from repro.gateway import direct_submitter, open_loop
+from repro.gateway.server import build_demo_gateway
+from repro.obs import Instrumentation, Tracer
+from repro.runtime import ClusterRuntime, Scenario, SimBackend
+
+S_AVAIL = 64
+PLAN_RPS = 30.0
+OVERHEAD_PIN = 0.95
+REPS = 5
+MICRO_N = 50_000        # calls per microbench batch
+MICRO_BATCHES = 5
+
+
+# ----------------------------------------------------------------------
+def _bench_loadgen(csv) -> Dict[str, Dict]:
+    """Open-loop load over the in-process gateway at 10x compression."""
+    gw, hooks = build_demo_gateway(plan_rps=PLAN_RPS, s_avail=S_AVAIL,
+                                   time_scale=0.1, sample_every=8)
+
+    async def drive():
+        await gw.start()
+        try:
+            return await open_loop(
+                direct_submitter(gw),
+                {app: PLAN_RPS * 0.5 for app in gw._apps},
+                duration_s=10.0, seed=0, time_scale=gw.time_scale)
+        finally:
+            await gw.stop()
+
+    report = asyncio.run(drive()).to_dict()
+    out = {}
+    for app, st in report["apps"].items():
+        out[app] = st
+        csv(f"gateway,loadgen,{app},submitted={st['submitted']},"
+            f"ok={st['ok']},attainment={st['attainment']:.3f},"
+            f"p99_ms={st['p99_ms']:.1f},"
+            f"achieved_rps={st['achieved_rps']:.1f}")
+    out["total"] = report["total"]
+    out["trace_spans"] = len(hooks.tracer.spans)
+    return out
+
+
+# ----------------------------------------------------------------------
+class _CountingHooks(Instrumentation):
+    """Counts data-plane hook invocations for the overhead model."""
+
+    def __post_init__(self):
+        super().__post_init__()
+        self.calls = {"arrival": 0, "dispatch": 0, "complete": 0,
+                      "drop": 0}
+
+    def on_arrival(self, *a):
+        self.calls["arrival"] += 1
+        super().on_arrival(*a)
+
+    def on_dispatch(self, *a):
+        self.calls["dispatch"] += 1
+        super().on_dispatch(*a)
+
+    def on_complete(self, *a):
+        self.calls["complete"] += 1
+        super().on_complete(*a)
+
+    def on_drop(self, *a):
+        self.calls["drop"] += 1
+        super().on_drop(*a)
+
+
+def _run_once(g, cfg, scn, hooks):
+    """One timed run with GC parked outside the measured region."""
+    rt = ClusterRuntime(g, cfg, SimBackend(), seed=0, hooks=hooks)
+    gc.collect()
+    gc.disable()
+    t0 = time.perf_counter()
+    m = rt.run(scn)
+    wall = time.perf_counter() - t0
+    gc.enable()
+    return m, wall
+
+
+class _FakeReq:
+    __slots__ = ("root_id", "enqueue_t")
+
+    def __init__(self, root_id):
+        self.root_id = root_id
+        self.enqueue_t = 0.0
+
+
+def _micro_costs(server) -> Dict[str, float]:
+    """Per-call cost (seconds) of each hot hook, min over batches.
+
+    Drives the REAL hook methods against a real server object from the
+    scenario's runtime, so the attribute layout matches the event
+    loop's calls.
+    """
+    batch = (_FakeReq(1), _FakeReq(2))
+
+    def one_batch(h):
+        out = {}
+        t0 = time.perf_counter()
+        for i in range(MICRO_N):
+            h.on_arrival("social_media", "ingest", 1.0, 5)
+        out["arrival"] = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for i in range(MICRO_N):
+            h.on_dispatch(server, batch, 1.0, 0.05, 3)
+        out["dispatch"] = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for i in range(MICRO_N):
+            h.on_complete("social_media", i, 120.0, False, 1.0)
+        out["complete"] = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for i in range(MICRO_N):
+            h.on_drop("social_media", "ingest", "deadline", 1, 1.0)
+        out["drop"] = time.perf_counter() - t0
+        return out
+
+    best: Dict[str, float] = {}
+    gc.disable()
+    try:
+        for _ in range(MICRO_BATCHES):
+            h = Instrumentation()   # fresh logs per batch
+            for k, v in one_batch(h).items():
+                best[k] = min(best.get(k, float("inf")), v / MICRO_N)
+    finally:
+        gc.enable()
+    return best
+
+
+def _bench_overhead(csv) -> Dict[str, float]:
+    """Instrumentation overhead model + end-to-end spot runs."""
+    g = get_app("social_media")
+    prof = Profiler(g)
+    cfg = Planner(g, prof, s_avail=128, max_tuples_per_task=32,
+                  bb_nodes=4, bb_time_s=1.0).plan(60.0)
+    if cfg is None:
+        raise RuntimeError("infeasible plan for the overhead scenario")
+    scn = Scenario.poisson(60.0, duration_s=90.0, warmup_s=3.0)
+
+    # deterministic hook-call counts (seeded scenario replays exactly)
+    counting = _CountingHooks()
+    rt = ClusterRuntime(g, cfg, SimBackend(), seed=0, hooks=counting)
+    m0 = rt.run(scn)
+    counts = counting.calls
+    events = m0.completions + m0.dropped
+    server = rt.servers[0]
+
+    costs = _micro_costs(server)
+    added_s = sum(counts[k] * costs[k] for k in counts)
+
+    # bare wall: fastest of REPS (noise only ever slows a run down)
+    _run_once(g, cfg, scn, None)                 # warm-up
+    bare_wall = min(_run_once(g, cfg, scn, None)[1] for _ in range(REPS))
+    bare_rps = events / bare_wall
+    ratio = bare_wall / (bare_wall + added_s)
+
+    # end-to-end spot checks, informational (noisy on shared machines)
+    _, w_m = _run_once(g, cfg, scn, Instrumentation())
+    _, w_t = _run_once(g, cfg, scn,
+                       Instrumentation(tracer=Tracer(sample_every=16)))
+
+    csv(f"gateway,overhead,bare_rps={bare_rps:.0f},"
+        f"added_ms={added_s*1e3:.2f},ratio={ratio:.4f},"
+        f"pin={OVERHEAD_PIN},e2e_metrics_rps={events/w_m:.0f},"
+        f"e2e_traced_rps={events/w_t:.0f}")
+    csv("gateway,overhead_counts," +
+        ",".join(f"{k}={counts[k]}" for k in sorted(counts)))
+    csv("gateway,overhead_unit_us," +
+        ",".join(f"{k}={costs[k]*1e6:.3f}" for k in sorted(costs)))
+    out = {"bare_rps": bare_rps, "bare_wall_s": bare_wall,
+           "added_s": added_s, "ratio": ratio, "pin": OVERHEAD_PIN,
+           "calls": dict(counts),
+           "unit_cost_us": {k: v * 1e6 for k, v in costs.items()},
+           "e2e_metrics_rps": events / w_m,
+           "e2e_traced_rps": events / w_t, "reps": REPS}
+    if ratio < OVERHEAD_PIN:
+        raise RuntimeError(
+            f"instrumentation overhead pin violated: bare/(bare+hooks) "
+            f"= {ratio:.4f} < {OVERHEAD_PIN} (bare {bare_wall*1e3:.0f} "
+            f"ms, hooks add {added_s*1e3:.1f} ms)")
+    return out
+
+
+def run(csv=print) -> Dict[str, Dict]:
+    return {"loadgen": _bench_loadgen(csv),
+            "overhead": _bench_overhead(csv)}
+
+
+if __name__ == "__main__":
+    run()

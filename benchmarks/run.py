@@ -14,9 +14,10 @@ import os
 import time
 
 from benchmarks import (bench_capacity, bench_chaos, bench_configs,
-                        bench_empirical, bench_hetero, bench_kernels,
-                        bench_milp, bench_multiapp, bench_perf,
-                        bench_reconfig, bench_roofline, bench_runtime)
+                        bench_empirical, bench_gateway, bench_hetero,
+                        bench_kernels, bench_milp, bench_multiapp,
+                        bench_perf, bench_reconfig, bench_roofline,
+                        bench_runtime)
 
 ALL = {
     "kernels": bench_kernels,        # kernel vs oracle + TPU roofline
@@ -31,6 +32,7 @@ ALL = {
     "multiapp": bench_multiapp,      # joint two-app co-location vs split
     "reconfig": bench_reconfig,      # staged transitions vs atomic swap
     "chaos": bench_chaos,            # failure storms + degradation ladder
+    "gateway": bench_gateway,        # live front door + obs overhead pin
 }
 
 

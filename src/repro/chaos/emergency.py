@@ -61,6 +61,8 @@ class EmergencyReplanner:
     max_replans: int = 4           # runaway-storm backstop per run
     # dead capacity carried in from prior bins (the detector's view)
     base_dead_units: Dict[str, int] = field(default_factory=dict)
+    # observability (DESIGN.md §14): spike counter + ladder-level gauge
+    hooks: Optional[object] = None
     # ---- per-run state ------------------------------------------------
     replans: int = 0
     spikes: int = 0
@@ -95,18 +97,26 @@ class EmergencyReplanner:
         if not spike:
             if ladder is not None:
                 ladder.relax(runtime, now)
+                if self.hooks is not None:
+                    self.hooks.on_ladder_level(ladder.level)
             return None
         self.spikes += 1
+        if self.hooks is not None:
+            self.hooks.on_spike(now)
         if now < self._staging_until + self.cooldown_s \
                 or self.replans >= self.max_replans:
             if ladder is not None:
                 ladder.escalate(runtime, now)   # rescue still staging: shed
+                if self.hooks is not None:
+                    self.hooks.on_ladder_level(ladder.level)
             return None
         plan = self._replan(runtime, now)
         if plan is not None:
             return plan
         if ladder is not None:
             ladder.escalate(runtime, now)       # infeasible: shed
+            if self.hooks is not None:
+                self.hooks.on_ladder_level(ladder.level)
         return None
 
     def _replan(self, runtime, now: float) -> Optional["TransitionPlan"]:

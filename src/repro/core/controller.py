@@ -120,6 +120,9 @@ class Controller:
     detector: Optional["FailureDetector"] = None
     monitor: Optional["EmergencyReplanner"] = None
     ladder: Optional["DegradationLadder"] = None
+    # observability (DESIGN.md §14): a repro.obs.Instrumentation shared
+    # with every bin's runtime; the controller adds re-plan latency
+    hooks: Optional[object] = None
 
     def __post_init__(self):
         if self.cluster is None:
@@ -178,7 +181,8 @@ class Controller:
                               time_base_s=time_base_s,
                               transition=transition,
                               cluster=self.cluster,
-                              monitor=self.monitor, ladder=self.ladder)
+                              monitor=self.monitor, ladder=self.ladder,
+                              hooks=self.hooks)
 
     # ------------------------------------------------------------------
     def step(self, bin_idx: int, demand_actual: float, *,
@@ -249,6 +253,8 @@ class Controller:
             warm_replan = self.planner.stats.warm_basis_hits > warm0
             milp_nodes = self.planner.stats.nodes - nodes0
             self.milp_times_ms.append(milp_ms)
+            if self.hooks is not None:
+                self.hooks.on_replan(milp_ms / 1e3, warm_replan)
 
         # live reconfiguration: diff the incumbent against the new plan
         # and charge the staged transition to this bin's serving window
@@ -470,6 +476,8 @@ class MultiAppController:
     # OBSERVED multiplicative factors back into the next joint solve
     fbar_refine: bool = True
     fbar_ewma: float = 0.3
+    # observability (DESIGN.md §14), shared with every bin's runtime
+    hooks: Optional[object] = None
 
     def __post_init__(self):
         if set(self.graphs) != set(self.profilers):
@@ -577,6 +585,8 @@ class MultiAppController:
             warm_replan = self.planner.stats.warm_basis_hits > warm0
             milp_nodes = self.planner.stats.nodes - nodes0
             self.milp_times_ms.append(milp_ms)
+            if self.hooks is not None:
+                self.hooks.on_replan(milp_ms / 1e3, warm_replan)
 
         transition: Optional["TransitionPlan"] = None
         if (self.reconfig is not None and replanned
@@ -600,7 +610,8 @@ class MultiAppController:
             self.backend, seed=seed, staleness_ms=self.staleness_ms,
             frontends=self.frontends,
             time_base_s=bin_idx * bin_seconds,
-            transition=transition, cluster=self.cluster)
+            transition=transition, cluster=self.cluster,
+            hooks=self.hooks)
         metrics = runtime.run(scenario)
         if self.detector is not None:
             self.detector.observe(runtime)

@@ -633,8 +633,7 @@ class Planner:
     def _assemble(self, tuples: List[TupleVar],
                   task_tuples: Dict[str, List[int]], caps: np.ndarray,
                   *, blocks: Sequence[_AppBlock], budgets: Dict[str, int],
-                  single_task: Optional[str],
-                  sticky: Optional[frozenset] = None) -> _Assembled:
+                  single_task: Optional[str]) -> _Assembled:
         """Build the demand-independent MILP matrices (throughput rhs is a
         template patched per solve).
 
@@ -642,9 +641,11 @@ class Planner:
         accuracy bound (Eq. 12-13) and objective accuracy weights are
         emitted per block, while the Eq. 8 capacity rows are shared —
         that sharing is what makes a multi-block solve a JOINT plan.
-        ``sticky`` (the incumbent's active tuple keys) adds the
-        switching-cost term to the objective: activating a tuple type
-        outside it pays stickiness × cost × price on its y variable."""
+        The assembled objective is history-free: the sticky switching
+        cost (which follows the live incumbent) is applied per solve in
+        ``_solve`` via the solver's per-solve ``c`` override, so
+        incumbent churn never invalidates these matrices or the warm
+        basis."""
         tasks = list(task_tuples)
         # per-task app attribution (tasks are disjoint across blocks)
         blk_of: Dict[str, _AppBlock] = {t: b for b in blocks for t in b.w}
@@ -727,18 +728,6 @@ class Planner:
         for i in range(nj):
             c[ix_x[i]] = (self.beta * tuples[i].cost
                           * self._price(tuples[i].pool))
-        if sticky is not None:
-            # switching cost: a tuple type NOT in the incumbent needs a
-            # weight load (and possibly a repartition) to activate — its
-            # y variable carries the penalty, weighted by the type's
-            # ACTUAL readiness delay (weight staging + repartition), so
-            # any count of an already running type stays free while the
-            # first instance of a new type pays once, in proportion to
-            # how long its activation would really take
-            for i in range(nj):
-                if tuples[i].key not in sticky:
-                    c[ix_y[i]] += (self.stickiness
-                                   * self._activation_cost(tuples[i]))
         for t in tasks:
             blk = blk_of[t]
             for k in range(nz[t]):
@@ -800,20 +789,21 @@ class Planner:
                                             / max(j.throughput, 1e-9))) + 1
                          for j in tuples])
 
+        # the sticky objective is NOT part of the matrix identity: the
+        # switching-cost term is patched into a per-solve c below (like
+        # the demand rhs), so incumbent changes reuse the cached matrix
+        # AND its warm basis — the dual-simplex warm path restores dual
+        # feasibility against the new objective in a few bound flips
         cache_key = (single_task, tuple(tuples),
                      tuple(int(cp) for cp in caps),
                      tuple(b.sig for b in blocks),
-                     tuple(sorted(budgets.items())),
-                     # sticky set changes the objective vector, so it is
-                     # part of the matrix identity (None = history-free)
-                     (round(self.stickiness, 12), sticky)
-                     if sticky is not None else None)
+                     tuple(sorted(budgets.items())))
         asm = self._matrix_cache.pop(cache_key, None)
         if asm is None:
             self.stats.matrix_cache_misses += 1
             asm = self._assemble(tuples, task_tuples, caps,
                                  blocks=blocks, budgets=budgets,
-                                 single_task=single_task, sticky=sticky)
+                                 single_task=single_task)
         else:
             self.stats.matrix_cache_hits += 1
         self._matrix_cache[cache_key] = asm       # LRU: re-insert as newest
@@ -824,6 +814,21 @@ class Planner:
         b_ub = asm.b_ub.copy()
         for t in tasks:
             b_ub[asm.tput_rows[t]] = -demand[t]
+
+        # patch the switching cost into the objective: a tuple type NOT
+        # in the incumbent needs a weight load (and possibly a
+        # repartition) to activate — its y variable carries the penalty,
+        # weighted by the type's ACTUAL readiness delay (weight staging
+        # + repartition), so any count of an already running type stays
+        # free while the first instance of a new type pays once, in
+        # proportion to how long its activation would really take
+        c = asm.c
+        if sticky is not None:
+            c = asm.c.copy()
+            for i in range(len(tuples)):
+                if tuples[i].key not in sticky:
+                    c[asm.ix_y[i]] += (self.stickiness
+                                       * self._activation_cost(tuples[i]))
 
         grid = asm.grid
         ix_x, ix_y, ix_L, ix_z = asm.ix_x, asm.ix_y, asm.ix_L, asm.ix_z
@@ -845,7 +850,7 @@ class Planner:
         if warm_x is not None:
             self.stats.warm_incumbent_hits += 1
 
-        res = solve_milp(asm.c, asm.A_ub, b_ub, asm.A_eq, asm.b_eq,
+        res = solve_milp(c, asm.A_ub, b_ub, asm.A_eq, asm.b_eq,
                          asm.ub, asm.int_mask,
                          repair=repair, max_nodes=self.bb_nodes,
                          time_limit_s=self.bb_time_s, solver=asm.solver,

@@ -69,14 +69,18 @@ def solve_milp(
 
     if solver is None:
         solver = BoundedSimplex(c, A_ub, b_ub, A_eq, b_eq)
-        b_full = None
+        b_full = c_full = None
     else:
-        # refresh rhs in case the cached matrix is re-used at a new demand
+        # refresh rhs AND objective in case the cached matrix is re-used
+        # at a new demand / a new sticky incumbent — the solver keeps the
+        # last solve's cvec, so a reused solver must always be handed the
+        # current c or a stale objective would leak across re-plans
         b_full = np.concatenate([
             np.asarray(b_ub, float).ravel() if b_ub is not None else
             np.zeros(0),
             np.asarray(b_eq, float).ravel() if b_eq is not None else
             np.zeros(0)])
+        c_full = np.asarray(c, float)
 
     lp_warm = lp_cold = 0
 
@@ -89,7 +93,7 @@ def solve_milp(
 
     lo0 = np.zeros(n)
     hi0 = ub.astype(float).copy()
-    root = solver.solve(lo0, hi0, b=b_full, warm=warm_basis)
+    root = solver.solve(lo0, hi0, b=b_full, c=c_full, warm=warm_basis)
     count(root)
     if root.status == "infeasible":
         return MILPResult("infeasible", None, np.inf, 1, np.inf,

@@ -393,11 +393,19 @@ class BoundedSimplex:
     # ------------------------------------------------------------------
     # public solve
     # ------------------------------------------------------------------
-    def solve(self, lo=None, hi=None, b=None,
+    def solve(self, lo=None, hi=None, b=None, c=None,
               warm: Optional[BasisState] = None,
               max_iter: int = 20000) -> LPResult:
-        """Solve under structural bounds ``lo/hi`` (and optional rhs ``b``),
-        warm-starting from ``warm`` when given."""
+        """Solve under structural bounds ``lo/hi`` (and optional rhs ``b``
+        and objective ``c``), warm-starting from ``warm`` when given.
+
+        A per-solve ``c`` replaces the structural objective installed at
+        construction — like the ``b`` override, it lets one cached
+        matrix/factorization serve a family of solves whose objective
+        drifts (the planner's stickiness penalty follows the incumbent).
+        ``_try_warm`` restores dual feasibility against the CURRENT
+        ``cvec`` via bound flips, so a warm basis taken under the old
+        objective still prices out correctly under the new one."""
         n, m_ub = self.n, self.m_ub
         self.lo[:n] = 0.0 if lo is None else np.asarray(lo, float)
         self.hi[:n] = np.inf if hi is None else np.asarray(hi, float)
@@ -407,6 +415,8 @@ class BoundedSimplex:
         self.hi[n + m_ub:] = 0.0
         if b is not None:
             self.b = np.asarray(b, float).copy()
+        if c is not None:
+            self.cvec[:n] = np.asarray(c, float)
         self.stats.solves += 1
         self._iters0 = (self.stats.primal_iterations
                         + self.stats.dual_iterations)

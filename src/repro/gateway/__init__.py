@@ -1,0 +1,14 @@
+"""Serving front door (DESIGN.md §14): the live asyncio gateway over
+the planned fleet, its stdlib HTTP server, and the open/closed-loop
+load-generator client."""
+from repro.gateway.core import (AdmissionRejected, AsyncGateway,
+                                GatewayRequest)
+from repro.gateway.loadgen import (LoadReport, closed_loop,
+                                   direct_submitter, http_submitter,
+                                   open_loop)
+from repro.gateway.server import GatewayHTTPServer, build_demo_gateway
+
+__all__ = ["AdmissionRejected", "AsyncGateway", "GatewayHTTPServer",
+           "GatewayRequest", "LoadReport", "build_demo_gateway",
+           "closed_loop", "direct_submitter", "http_submitter",
+           "open_loop"]

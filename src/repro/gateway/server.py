@@ -1,0 +1,262 @@
+"""Stdlib-only asyncio HTTP front door (DESIGN.md §14).
+
+No aiohttp/fastapi in the image — the gateway speaks a minimal but
+correct HTTP/1.1 over ``asyncio.start_server``: keep-alive, chunked
+transfer for streamed responses, Content-Length everywhere else.
+
+Routes:
+
+- ``POST /v1/<app>/submit``           — submit one request, wait for the
+  outcome, return it as JSON (429 + reason when admission refuses).
+- ``POST /v1/<app>/submit?stream=1``  — same, but stream one NDJSON line
+  per hop/drop event as it happens, ending with the ``done`` line.
+- ``GET /metrics``                    — Prometheus text exposition from
+  the gateway's :class:`~repro.obs.metrics.MetricsRegistry`.
+- ``GET /trace``                      — Chrome-trace JSON from the
+  per-request :class:`~repro.obs.tracing.Tracer` (open in Perfetto).
+- ``GET /healthz``                    — liveness + fleet stats.
+
+``python -m repro.gateway.server`` boots a demo two-app deployment
+(plan via the MILP, serve via SimBackend) — see the README quickstart
+for the matching curl lines.
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+from typing import Dict, Optional, Tuple
+from urllib.parse import parse_qs, urlsplit
+
+from repro.gateway.core import AdmissionRejected, AsyncGateway
+from repro.obs import Instrumentation, Tracer
+
+__all__ = ["GatewayHTTPServer", "build_demo_gateway"]
+
+_MAX_HEADER = 64 * 1024
+
+
+class _HTTPError(Exception):
+    def __init__(self, status: int, msg: str):
+        super().__init__(msg)
+        self.status = status
+        self.msg = msg
+
+
+_REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found",
+            405: "Method Not Allowed", 429: "Too Many Requests",
+            500: "Internal Server Error"}
+
+
+class GatewayHTTPServer:
+    """One :class:`AsyncGateway` behind an asyncio socket server."""
+
+    def __init__(self, gateway: AsyncGateway, hooks: Instrumentation,
+                 host: str = "127.0.0.1", port: int = 0):
+        self.gateway = gateway
+        self.hooks = hooks
+        self.host = host
+        self.port = port
+        self._server: Optional[asyncio.AbstractServer] = None
+
+    async def start(self) -> None:
+        await self.gateway.start()
+        self._server = await asyncio.start_server(
+            self._handle, self.host, self.port)
+        self.port = self._server.sockets[0].getsockname()[1]
+
+    async def stop(self) -> None:
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+            self._server = None
+        await self.gateway.stop()
+
+    async def serve_forever(self) -> None:
+        assert self._server is not None, "call start() first"
+        async with self._server:
+            await self._server.serve_forever()
+
+    # -- connection loop ------------------------------------------------
+    async def _handle(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter) -> None:
+        try:
+            while True:
+                req = await self._read_request(reader)
+                if req is None:
+                    break
+                method, path, headers, body = req
+                keep = headers.get("connection", "keep-alive") != "close"
+                try:
+                    await self._route(method, path, body, writer, keep)
+                except _HTTPError as e:
+                    self._respond(writer, e.status,
+                                  {"error": e.msg}, keep)
+                except Exception as e:   # noqa: BLE001 — surface, don't die
+                    self._respond(writer, 500,
+                                  {"error": f"{type(e).__name__}: {e}"},
+                                  keep)
+                await writer.drain()
+                if not keep:
+                    break
+        except (asyncio.IncompleteReadError, ConnectionError):
+            pass
+        finally:
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except (ConnectionError, OSError):
+                pass
+
+    async def _read_request(self, reader) -> Optional[
+            Tuple[str, str, Dict[str, str], bytes]]:
+        try:
+            head = await reader.readuntil(b"\r\n\r\n")
+        except (asyncio.IncompleteReadError, asyncio.LimitOverrunError):
+            return None
+        if len(head) > _MAX_HEADER:
+            raise _HTTPError(400, "headers too large")
+        lines = head.decode("latin-1").split("\r\n")
+        parts = lines[0].split(" ")
+        if len(parts) != 3:
+            raise _HTTPError(400, f"bad request line: {lines[0]!r}")
+        method, target, _version = parts
+        headers = {}
+        for ln in lines[1:]:
+            if not ln:
+                continue
+            k, _, v = ln.partition(":")
+            headers[k.strip().lower()] = v.strip()
+        length = int(headers.get("content-length", "0") or "0")
+        body = await reader.readexactly(length) if length else b""
+        return method, target, headers, body
+
+    # -- routing --------------------------------------------------------
+    async def _route(self, method: str, target: str, body: bytes,
+                     writer, keep: bool) -> None:
+        url = urlsplit(target)
+        path = url.path.rstrip("/") or "/"
+        query = parse_qs(url.query)
+        if path == "/healthz" and method == "GET":
+            self._respond(writer, 200,
+                          dict(status="ok", **self.gateway.stats()), keep)
+        elif path == "/metrics" and method == "GET":
+            self._respond_text(writer, 200,
+                               self.hooks.registry.render(),
+                               "text/plain; version=0.0.4", keep)
+        elif path == "/trace" and method == "GET":
+            tr = self.hooks.tracer
+            if tr is None:
+                raise _HTTPError(404, "tracing disabled")
+            self._respond(writer, 200, tr.chrome_trace(), keep)
+        elif path.startswith("/v1/") and path.endswith("/submit"):
+            if method != "POST":
+                raise _HTTPError(405, "submit is POST")
+            app = path[len("/v1/"):-len("/submit")]
+            opts = json.loads(body) if body else {}
+            stream = bool(opts.get("stream")) or \
+                query.get("stream", ["0"])[0] not in ("0", "")
+            await self._submit(app, stream, writer, keep)
+        else:
+            raise _HTTPError(404, f"no route {method} {path}")
+
+    async def _submit(self, app: str, stream: bool, writer,
+                      keep: bool) -> None:
+        try:
+            gr = await self.gateway.submit(app)
+        except KeyError as e:
+            raise _HTTPError(404, str(e))
+        except AdmissionRejected as e:
+            raise _HTTPError(429, e.reason)
+        if not stream:
+            await gr.done.wait()
+            self._respond(writer, 200, gr.outcome, keep)
+            return
+        # chunked NDJSON: one line per hop/drop, closing with "done"
+        writer.write(b"HTTP/1.1 200 OK\r\n"
+                     b"Content-Type: application/x-ndjson\r\n"
+                     b"Transfer-Encoding: chunked\r\n\r\n")
+        while True:
+            ev = await gr.events.get()
+            data = (json.dumps(ev) + "\n").encode()
+            writer.write(f"{len(data):x}\r\n".encode() + data + b"\r\n")
+            await writer.drain()
+            if ev.get("event") == "done":
+                break
+        writer.write(b"0\r\n\r\n")
+
+    # -- response helpers ------------------------------------------------
+    def _respond(self, writer, status: int, obj: dict, keep: bool) -> None:
+        self._respond_text(writer, status, json.dumps(obj),
+                           "application/json", keep)
+
+    def _respond_text(self, writer, status: int, text: str,
+                      ctype: str, keep: bool) -> None:
+        data = text.encode()
+        conn = "keep-alive" if keep else "close"
+        writer.write(
+            f"HTTP/1.1 {status} {_REASONS.get(status, 'OK')}\r\n"
+            f"Content-Type: {ctype}\r\n"
+            f"Content-Length: {len(data)}\r\n"
+            f"Connection: {conn}\r\n\r\n".encode() + data)
+
+
+# ----------------------------------------------------------------------
+def build_demo_gateway(apps=("social_media", "traffic_analysis"), *,
+                       plan_rps: float = 30.0, s_avail: int = 64,
+                       time_scale: float = 1.0, seed: int = 0,
+                       sample_every: int = 1,
+                       backend=None) -> Tuple[AsyncGateway, Instrumentation]:
+    """Plan each app with the MILP and wrap the deployment in an
+    instrumented gateway — the shared entry point for the CLI, the smoke
+    job, the benchmarks, and the tests."""
+    from repro.core.apps import get_app
+    from repro.core.milp import Planner
+    from repro.core.profiler import Profiler
+
+    hooks = Instrumentation(tracer=Tracer(sample_every=sample_every))
+    planned = {}
+    for name in apps:
+        g = get_app(name)
+        prof = Profiler(g)
+        cfg = Planner(g, prof, s_avail=s_avail, max_tuples_per_task=32,
+                      bb_nodes=4, bb_time_s=1.0).plan(plan_rps)
+        if cfg is None:
+            raise RuntimeError(f"no feasible plan for {name} "
+                               f"at {plan_rps} rps / {s_avail} slices")
+        planned[name] = (g, cfg)
+    gw = AsyncGateway(planned, backend, seed=seed, hooks=hooks,
+                      time_scale=time_scale)
+    return gw, hooks
+
+
+async def _amain(args) -> None:
+    gw, hooks = build_demo_gateway(
+        tuple(args.apps.split(",")), plan_rps=args.plan_rps,
+        s_avail=args.s_avail, time_scale=args.time_scale)
+    srv = GatewayHTTPServer(gw, hooks, args.host, args.port)
+    await srv.start()
+    print(f"gateway listening on http://{srv.host}:{srv.port} "
+          f"apps={sorted(gw._apps)}", flush=True)
+    try:
+        await srv.serve_forever()
+    finally:
+        await srv.stop()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="serve planned apps over HTTP")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8780)
+    ap.add_argument("--apps", default="social_media,traffic_analysis")
+    ap.add_argument("--plan-rps", type=float, default=30.0)
+    ap.add_argument("--s-avail", type=int, default=64)
+    ap.add_argument("--time-scale", type=float, default=1.0)
+    try:
+        asyncio.run(_amain(ap.parse_args()))
+    except KeyboardInterrupt:
+        pass
+
+
+if __name__ == "__main__":
+    main()

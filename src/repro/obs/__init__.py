@@ -1,0 +1,12 @@
+"""Observability plane (DESIGN.md §14): Prometheus-style metrics
+registry, per-request Chrome-trace tracer, and the instrumentation hook
+object threaded through the runtime / controller / gateway as
+``hooks=``."""
+from repro.obs.hooks import Instrumentation
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               parse_exposition)
+from repro.obs.tracing import Span, Tracer, validate_chrome_trace
+
+__all__ = ["Counter", "Gauge", "Histogram", "Instrumentation",
+           "MetricsRegistry", "Span", "Tracer", "parse_exposition",
+           "validate_chrome_trace"]

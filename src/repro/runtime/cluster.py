@@ -82,11 +82,12 @@ class ClusterRuntime:
                  frontend=None, time_base_s: float = 0.0,
                  transition: Optional["TransitionPlan"] = None,
                  cluster: Optional["ClusterSpec"] = None,
-                 monitor=None, ladder=None):
+                 monitor=None, ladder=None, hooks=None):
         self._setup({"": _AppState("", graph, config, frontend)},
                     backend, seed=seed, staleness_ms=staleness_ms,
                     time_base_s=time_base_s, transition=transition,
-                    cluster=cluster, monitor=monitor, ladder=ladder)
+                    cluster=cluster, monitor=monitor, ladder=ladder,
+                    hooks=hooks)
 
     @classmethod
     def multi(cls, apps: Mapping[str, Tuple[TaskGraph, PlanConfig]],
@@ -96,7 +97,7 @@ class ClusterRuntime:
               time_base_s: float = 0.0,
               transition: Optional["TransitionPlan"] = None,
               cluster: Optional["ClusterSpec"] = None,
-              monitor=None, ladder=None) -> "ClusterRuntime":
+              monitor=None, ladder=None, hooks=None) -> "ClusterRuntime":
         """Serve several co-located apps on one event loop.
 
         ``apps`` maps the (non-empty) app name to that app's graph and
@@ -113,7 +114,8 @@ class ClusterRuntime:
                    for name, (g, cfg) in apps.items()},
                   backend, seed=seed, staleness_ms=staleness_ms,
                   time_base_s=time_base_s, transition=transition,
-                  cluster=cluster, monitor=monitor, ladder=ladder)
+                  cluster=cluster, monitor=monitor, ladder=ladder,
+                  hooks=hooks)
         return rt
 
     # ------------------------------------------------------------------
@@ -122,7 +124,7 @@ class ClusterRuntime:
                staleness_ms: float, time_base_s: float,
                transition: Optional["TransitionPlan"] = None,
                cluster: Optional["ClusterSpec"] = None,
-               monitor=None, ladder=None):
+               monitor=None, ladder=None, hooks=None):
         self._apps = apps
         self._single = apps.get("") if list(apps) == [""] else None
         self.backend = backend if backend is not None else SimBackend()
@@ -136,6 +138,11 @@ class ClusterRuntime:
         self.cluster = cluster
         self._monitor = monitor
         self._ladder = ladder
+        # observability (DESIGN.md §14): an optional
+        # repro.obs.Instrumentation whose on_* methods feed the metrics
+        # registry + tracer; every call site is None-guarded so the
+        # uninstrumented hot loop pays one pointer test per event
+        self.hooks = hooks
         # closed-loop failure accounting: physical capacity units lost
         # per pool (fractional until ceil'd by dead_units()) and the
         # qualified tasks that lost streams — read by the
@@ -321,6 +328,8 @@ class ClusterRuntime:
                             "S_avail")
         self._fastest = self._fastest_remaining()
         self.backend.on_capacity_change(self.servers)
+        if record and self.hooks is not None:
+            self.hooks.on_dead_units(self.dead_units())
 
     # -- closed-loop failure accounting (DESIGN.md §13) -----------------
     def record_dead_units(self, pool: str, units: float):
@@ -329,6 +338,8 @@ class ClusterRuntime:
         physical hardware (which may exceed what was deployed on it)."""
         self._dead_unit_frac[pool] = (self._dead_unit_frac.get(pool, 0.0)
                                       + float(units))
+        if self.hooks is not None:
+            self.hooks.on_dead_units(self.dead_units())
 
     def dead_units(self) -> Dict[str, int]:
         """Per-pool dead capacity units observed by THIS runtime (killed
@@ -560,6 +571,7 @@ class ClusterRuntime:
     # ------------------------------------------------------------------
     def run(self, scenario: Scenario) -> SimMetrics:
         m = SimMetrics()
+        hooks = self.hooks
         # transition windows (constructor plan starts at t=0; scheduled
         # TransitionEvents open theirs when they fire) — requests
         # ARRIVING inside any window are additionally filed under the
@@ -695,6 +707,8 @@ class ClusterRuntime:
                 m.count_drop(fan, reason)
                 if app:
                     sub(app).count_drop(fan, reason)
+                if hooks is not None:
+                    hooks.on_drop(app, task, reason, fan, rt0)
             if in_win:
                 m.window.count_drop(fan, reason)
             for d in doms:
@@ -749,6 +763,8 @@ class ClusterRuntime:
                 del q[: srv.tup.batch]
                 service = self.backend.service_s(srv, batch, now, self.rng)
                 srv.busy_until = now + service
+                if hooks is not None:
+                    hooks.on_dispatch(srv, batch, now, service, len(q))
                 push(srv.busy_until, "done", (srv.idx, batch))
             if q:
                 # retired streams must not feed the poll clock: their
@@ -773,7 +789,7 @@ class ClusterRuntime:
             if kind == "arrive":
                 req = payload
                 if self._ladder is not None:
-                    shed = self._ladder.gate(self, req.task, now)
+                    shed = self._ladder.gate(self, req.task, now, req=req)
                     if shed is not None:
                         app0, task0 = split_qualified(req.task)
                         account_drop(app0, task0,
@@ -782,6 +798,10 @@ class ClusterRuntime:
                         continue
                 req.enqueue_t = now
                 self.queues[req.task].append(req)
+                if hooks is not None:
+                    app0, task0 = split_qualified(req.task)
+                    hooks.on_arrival(app0, task0, now,
+                                     len(self.queues[req.task]))
                 try_dispatch(req.task, now)
             elif kind == "poll":
                 try_dispatch(payload, now)
@@ -794,6 +814,13 @@ class ClusterRuntime:
                     windows.append((now, now + plan.makespan_s))
                     for a in plan.drains:
                         push(now + a.retire_s, "retire_sweep", None)
+                    if hooks is not None:
+                        hooks.on_transition(now, plan.makespan_s,
+                                            emergency=True)
+                if hooks is not None:
+                    if self._ladder is not None:
+                        hooks.on_ladder_level(self._ladder.level)
+                    hooks.on_dead_units(self.dead_units())
                 srv_by_idx = {s.idx: s for s in self.servers}
                 for qt2 in self.queues:
                     try_dispatch(qt2, now)
@@ -808,6 +835,9 @@ class ClusterRuntime:
                     windows.append((now, now + payload.makespan_s))
                     for a in payload.drains:
                         push(now + a.retire_s, "retire_sweep", None)
+                    if hooks is not None:
+                        hooks.on_transition(now, payload.makespan_s,
+                                            emergency=False)
                 elif kind == "domain_fail":
                     self._apply_domain_failure(payload)
                     domain_open.setdefault(payload.domain, now)
@@ -862,6 +892,9 @@ class ClusterRuntime:
                                 mm.completions += 1
                                 if missed:
                                     mm.missed += 1
+                            if sinks and hooks is not None:
+                                hooks.on_complete(app, req.root_id,
+                                                  lat, missed, now)
                         continue
                     for t2, qt2 in succ_q:
                         fan = self._sample_fanout(g.factor(task, variant,

@@ -332,6 +332,81 @@ def test_ladder_drop_attribution(fleet, cfg15):
     assert m.drop_reasons == {"admission": m.dropped}
 
 
+def test_ladder_hysteresis_hold_downs(fleet, cfg15):
+    """Hold-downs stop the one-rung-per-interval oscillation: a relax is
+    refused until the level has held ``relax_hold_s`` since the last
+    change in EITHER direction, and escalations respect their own hold
+    and can jump multiple rungs."""
+    _, _, prof, _ = fleet
+    rt = make_rt(fleet, cfg15)
+    ladder = DegradationLadder(profiler=prof, escalate_step=2,
+                               escalate_hold_s=1.0, relax_hold_s=2.0)
+
+    ladder.escalate(rt, 10.0)
+    assert ladder.level == 2               # escalate_step rungs at once
+    ladder.escalate(rt, 10.5)              # inside the escalate hold
+    assert ladder.level == 2
+    ladder.escalate(rt, 11.5)              # hold expired
+    assert ladder.level == 3
+
+    ladder.relax(rt, 12.0)                 # 0.5s since last change < 2s
+    assert ladder.level == 3
+    ladder.relax(rt, 13.6)                 # 2.1s after the escalation
+    assert ladder.level == 2
+    # a fresh escalation RESETS the relax clock
+    ladder.escalate(rt, 14.0)
+    assert ladder.level == 3
+    ladder.relax(rt, 15.0)                 # only 1s since the escalation
+    assert ladder.level == 3
+    ladder.relax(rt, 16.1)
+    assert ladder.level == 2
+    ladder.reset()
+    assert ladder.level == 0 and ladder._last_change_s == -math.inf
+
+
+def test_level3_shed_is_deadline_aware(fleet, cfg15):
+    """With request context, level 3 sheds exactly the arrivals whose
+    predicted finish (queue drain + fastest remaining path) already
+    misses the deadline — a generous deadline is admitted even at level
+    3, a hopeless one is shed deterministically (no coin)."""
+    from repro.core.dispatch import QueuedRequest
+
+    _, graph, prof, _ = fleet
+    # a huge admission cap keeps the level-1 rung out of the way so the
+    # level-3 criterion is what decides
+    ladder = DegradationLadder(profiler=prof, queue_cap_mult=100.0)
+    rt = make_rt(fleet, cfg15, ladder=ladder)
+    entry = graph.entry
+    ladder.level = 3
+    now = 5.0
+    fastest_s = rt._fastest[entry] / 1e3
+    assert fastest_s > 0
+
+    generous = QueuedRequest(0, 0, entry, now, now + 1000.0)
+    hopeless = QueuedRequest(1, 1, entry, now, now + fastest_s / 2)
+    for _ in range(50):     # no randomness on either verdict
+        assert ladder.gate(rt, entry, now, req=generous) is None
+        assert ladder.gate(rt, entry, now, req=hopeless) == "shed"
+
+    # a backlog pushes the predicted finish past an otherwise-makeable
+    # deadline: queue drain time is part of the estimate
+    makeable = QueuedRequest(2, 2, entry, now, now + fastest_s + 1.0)
+    assert ladder.gate(rt, entry, now, req=makeable) is None
+    rps = sum(s.tup.throughput / max(s.tup.streams, 1)
+              for s in rt.by_task[entry])
+    backlog = int(math.ceil(rps * 2.0))     # ~2s of queue drain > 1s slack
+    rt.queues[entry].extend(
+        QueuedRequest(10 + i, 10 + i, entry, now, now + 1000.0)
+        for i in range(backlog))
+    assert ladder.gate(rt, entry, now, req=makeable) == "shed"
+    rt.queues[entry].clear()
+
+    # a dead entry fleet sheds everything — nothing can be served
+    for s in rt.by_task[entry]:
+        s.retire_at = now - 1.0
+    assert ladder.gate(rt, entry, now, req=generous) == "shed"
+
+
 # ---------------------------------------------------------------------------
 # fuzzer
 # ---------------------------------------------------------------------------

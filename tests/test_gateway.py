@@ -1,0 +1,214 @@
+"""Serving front door (DESIGN.md §14): in-process AsyncGateway
+end-to-end over two apps, ladder admission at the door, and the stdlib
+HTTP server (submit / stream / metrics / trace) on an ephemeral port.
+
+All async tests run through ``asyncio.run`` directly — no pytest-asyncio
+in the image.  Gateways run time-compressed (``time_scale < 1``) so a
+multi-second simulated serve finishes in a fraction of a wall second;
+scales are chosen gentle enough that event-loop overhead (amplified by
+1/time_scale in simulated terms) does not flood the deadline budget.
+"""
+import asyncio
+import json
+
+import pytest
+
+from repro.core.dispatch import QueuedRequest
+from repro.core.milp import Planner
+from repro.gateway import (AdmissionRejected, AsyncGateway,
+                           GatewayHTTPServer, direct_submitter,
+                           http_submitter, open_loop)
+from repro.obs import (Instrumentation, Tracer, parse_exposition,
+                       validate_chrome_trace)
+
+
+@pytest.fixture(scope="module")
+def planned_apps(social_profiler, traffic_profiler):
+    out = {}
+    for name, (g, prof) in (("social_media", social_profiler),
+                            ("traffic_analysis", traffic_profiler)):
+        cfg = Planner(g, prof, s_avail=64, max_tuples_per_task=32,
+                      bb_nodes=4, bb_time_s=1.0).plan(30.0)
+        assert cfg is not None
+        out[name] = (g, cfg)
+    return out
+
+
+def test_gateway_end_to_end_two_apps(planned_apps):
+    """Open-loop load over both apps: every submitted request resolves,
+    the scraped counters are self-consistent with the load report, and
+    completed requests carry one hop span per task executed."""
+    hooks = Instrumentation(tracer=Tracer())
+
+    async def drive():
+        gw = AsyncGateway(planned_apps, seed=0, hooks=hooks,
+                          time_scale=0.2)
+        await gw.start()
+        try:
+            report = await open_loop(
+                direct_submitter(gw),
+                {"social_media": 8.0, "traffic_analysis": 8.0},
+                duration_s=3.0, seed=1, time_scale=gw.time_scale)
+        finally:
+            await gw.stop()
+        return gw, report
+
+    gw, report = asyncio.run(drive())
+    d = report.to_dict()
+    tot = d["total"]
+    assert tot["submitted"] > 10
+    # every submission resolved one way: ok, dropped, or rejected
+    assert tot["ok"] + tot["dropped"] + tot["rejected"] == tot["submitted"]
+    assert tot["errors"] == 0
+    assert tot["ok"] > 0 and tot["attainment"] > 0.5
+    assert not gw._roots, "no request may leak in the root table"
+
+    parsed = parse_exposition(hooks.registry.render())
+    arrivals = parsed["jigsaw_arrivals_total"]
+    for app in planned_apps:
+        st = d["apps"][app]
+        accepted = st["submitted"] - st["rejected"]
+        assert arrivals.get((("app", app),), 0) == accepted
+    # completions counts roots finalized at a leaf: every fully-ok root
+    # plus the partially-dropped ones whose last hop still completed
+    comp = sum(parsed.get("jigsaw_completions_total", {}).values())
+    assert tot["ok"] <= comp <= tot["ok"] + tot["dropped"]
+
+    # trace: valid chrome JSON; a completed root has >= 1 hop span and
+    # matching queue/service sub-spans
+    events = validate_chrome_trace(hooks.tracer.chrome_trace())
+    assert events
+    roots_with_hops = {s.root_id for s in hooks.tracer.spans_for_root(0)}
+    for rid in range(tot["submitted"]):
+        hops = hooks.tracer.spans_for_root(rid, cat="hop")
+        if hops:
+            assert len(hooks.tracer.spans_for_root(rid, "queue")) == \
+                len(hops)
+            assert len(hooks.tracer.spans_for_root(rid, "service")) == \
+                len(hops)
+            break
+    else:
+        pytest.fail("no root produced hop spans")
+
+
+def test_gateway_admission_rejects_on_full_queue(planned_apps):
+    """The level-1 ladder rung guards the door: an entry queue past the
+    SLO-feasible depth refuses new submissions with a 'admission'."""
+    hooks = Instrumentation()
+
+    async def drive():
+        gw = AsyncGateway(planned_apps, seed=0, hooks=hooks,
+                          time_scale=1.0)
+        # stuff the entry queue well past any feasible cap — without
+        # starting dispatchers, so the backlog cannot drain
+        app = "social_media"
+        g, _ = planned_apps[app]
+        qt = f"{app}::{g.entry}"
+        now = gw.now()
+        gw.queues[qt].extend(
+            QueuedRequest(10_000 + i, 10_000 + i, qt, now, now + 10.0)
+            for i in range(10_000))
+        with pytest.raises(AdmissionRejected) as ei:
+            await gw.submit(app)
+        assert ei.value.reason == "admission"
+        # the other app's door stays open
+        gr = await gw.submit("traffic_analysis")
+        assert gr.root_id >= 0
+
+    asyncio.run(drive())
+    parsed = parse_exposition(hooks.registry.render())
+    rejects = parsed["jigsaw_admission_rejects_total"]
+    assert rejects[(("app", "social_media"),)] == 1
+    assert parsed["jigsaw_drops_total"][
+        (("app", "social_media"), ("reason", "admission"))] == 1
+
+
+def test_gateway_unknown_app_fails_loud(planned_apps):
+    async def drive():
+        gw = AsyncGateway(planned_apps, seed=0)
+        with pytest.raises(KeyError, match="unknown app"):
+            await gw.submit("nope")
+
+    asyncio.run(drive())
+
+
+def test_http_server_smoke(planned_apps):
+    """Boot the stdlib HTTP server on an ephemeral port and exercise
+    every route over real sockets: healthz, submit (unary + streamed
+    NDJSON), /metrics exposition, /trace JSON, and 404 handling."""
+    hooks = Instrumentation(tracer=Tracer())
+
+    async def fetch(port, method, path, body=b""):
+        reader, writer = await asyncio.open_connection("127.0.0.1", port)
+        try:
+            writer.write(
+                f"{method} {path} HTTP/1.1\r\nHost: t\r\n"
+                f"Content-Length: {len(body)}\r\n"
+                f"Connection: close\r\n\r\n".encode() + body)
+            await writer.drain()
+            raw = await reader.read()
+        finally:
+            writer.close()
+            await writer.wait_closed()
+        head, _, payload = raw.partition(b"\r\n\r\n")
+        return int(head.split(b" ", 2)[1]), head, payload
+
+    async def drive():
+        gw = AsyncGateway(planned_apps, seed=0, hooks=hooks,
+                          time_scale=0.2)
+        srv = GatewayHTTPServer(gw, hooks, port=0)
+        await srv.start()
+        try:
+            port = srv.port
+            status, _, body = await fetch(port, "GET", "/healthz")
+            assert status == 200
+            health = json.loads(body)
+            assert set(health["apps"]) == set(planned_apps)
+
+            # unary submit resolves to the final outcome document
+            out = await http_submitter(f"http://127.0.0.1:{port}")(
+                "social_media")
+            assert out["status"] in ("ok", "dropped")
+            assert out["event"] == "done"
+
+            # streamed submit yields NDJSON hop lines ending in done
+            status, head, payload = await fetch(
+                port, "POST", "/v1/social_media/submit?stream=1")
+            assert status == 200
+            assert b"chunked" in head.lower()
+            lines = [json.loads(ln) for ln in _dechunk(payload).strip()
+                     .split(b"\n")]
+            assert lines[-1]["event"] == "done"
+            assert all(ln["event"] in ("hop", "drop", "done")
+                       for ln in lines)
+
+            status, _, body = await fetch(port, "GET", "/metrics")
+            assert status == 200
+            parsed = parse_exposition(body.decode())
+            assert sum(parsed["jigsaw_arrivals_total"].values()) >= 2
+
+            status, _, body = await fetch(port, "GET", "/trace")
+            assert status == 200
+            validate_chrome_trace(json.loads(body))
+
+            status, _, _ = await fetch(port, "GET", "/no/such/route")
+            assert status == 404
+            status, _, _ = await fetch(port, "POST", "/v1/nope/submit")
+            assert status == 404
+        finally:
+            await srv.stop()
+
+    asyncio.run(drive())
+
+
+def _dechunk(payload: bytes) -> bytes:
+    """Decode an HTTP/1.1 chunked body."""
+    out, rest = [], payload
+    while rest:
+        size_line, _, rest = rest.partition(b"\r\n")
+        size = int(size_line, 16)
+        if size == 0:
+            break
+        out.append(rest[:size])
+        rest = rest[size + 2:]
+    return b"".join(out)

@@ -163,3 +163,30 @@ def test_warm_start_same_band_demand_move(social_profiler):
     # the plan still clears the real demand at the new rate
     for t, r in cfg.demand.items():
         assert cfg.task_throughput(t) >= r - 1e-6
+
+
+def test_sticky_incumbent_change_keeps_matrix_cache(social_profiler):
+    """The stickiness penalty lives in the per-solve objective, not the
+    assembled matrices: re-planning with a different incumbent (so a
+    different sticky set) must still hit the matrix cache and the warm
+    basis, and the sticky solve must stay feasible."""
+    g, prof = social_profiler
+    planner = Planner(g, prof, s_avail=128, max_tuples_per_task=32,
+                      bb_nodes=4, bb_time_s=1.0, stickiness=0.5)
+    cfg0 = planner.plan(100.0)
+    assert cfg0 is not None
+    hits0 = planner.stats.matrix_cache_hits
+    # incumbent switches None -> cfg0: the sticky key set changes, the
+    # matrices must not be rebuilt
+    cfg1 = planner.plan(100.0, incumbent=cfg0)
+    assert cfg1 is not None
+    assert planner.stats.matrix_cache_hits > hits0
+    assert planner.stats.warm_basis_hits >= 1
+    for t, r in cfg1.demand.items():
+        assert cfg1.task_throughput(t) >= r - 1e-6
+    # and a cached solver never leaks the sticky objective into a later
+    # incumbent-free solve: same demand, no incumbent == the cfg0 plan
+    cfg2 = planner.plan(100.0)
+    assert cfg2 is not None
+    assert cfg2.exact_a_obj() == pytest.approx(cfg0.exact_a_obj(),
+                                               abs=1e-9)

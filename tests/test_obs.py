@@ -1,0 +1,271 @@
+"""Observability plane (DESIGN.md §14): Prometheus-style registry +
+exposition round-trip, Instrumentation/SimMetrics counter parity on a
+seeded scenario (Sim AND Engine backends, mid-run scrapes included),
+per-app parity on a multi-app runtime, control-plane hook coverage, and
+Chrome-trace span validity (one hop span per path task)."""
+import json
+
+import pytest
+
+from repro.core.apps import get_app
+from repro.core.milp import PlanConfig, Planner, TupleVar
+from repro.core.taskgraph import Task, TaskGraph, Variant
+from repro.obs import (Instrumentation, MetricsRegistry, Tracer,
+                       parse_exposition, validate_chrome_trace)
+from repro.runtime import (ClusterRuntime, EngineBackend, Scenario,
+                           SimBackend)
+
+
+@pytest.fixture(scope="module")
+def planned_social(social_profiler):
+    g, prof = social_profiler
+    cfg = Planner(g, prof, s_avail=64, max_tuples_per_task=32,
+                  bb_nodes=4, bb_time_s=1.0).plan(15.0)
+    assert cfg is not None
+    return g, cfg
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    """One-task graph + hand-built PlanConfig small enough for the real
+    Engine datapath on CPU (mirrors tests/test_runtime.py)."""
+    g = TaskGraph(
+        name="tiny",
+        tasks={"gen": Task("gen", (
+            Variant("gemma-2b", "gemma-2b", accuracy=0.8,
+                    seq_len=16, gen_len=4),))},
+        edges=[], slo_latency_ms=4000.0)
+    key = ("gen", "gemma-2b", "1x1s1", 4)
+    tup = TupleVar("gen", "gemma-2b", "1x1s1", 4, latency_ms=120.0,
+                   throughput=30.0, cost=1, accuracy=0.8)
+    cfg = PlanConfig(graph=g, counts={key: 2}, tuples={key: tup},
+                     demand={"gen": 4.0})
+    return g, cfg
+
+
+# ---------------------------------------------------------------------------
+# registry / exposition format
+# ---------------------------------------------------------------------------
+def test_registry_exposition_roundtrip():
+    r = MetricsRegistry()
+    c = r.counter("t_requests_total", "reqs", ("app", "reason"))
+    c.inc(3, "social", "deadline")
+    c.inc(2.5, "traffic", 'we"ird\\lab\nel')   # exercise escaping
+    g = r.gauge("t_depth", "depth")
+    g.set(7)
+    text = r.render()
+    assert "# TYPE t_requests_total counter" in text
+    assert "# HELP t_depth depth" in text
+    parsed = parse_exposition(text)
+    samples = parsed["t_requests_total"]
+    assert samples[(("app", "social"), ("reason", "deadline"))] == 3
+    assert samples[(("app", "traffic"),
+                    ("reason", 'we"ird\\lab\nel'))] == 2.5
+    assert parsed["t_depth"][()] == 7
+
+
+def test_registry_fails_loud_on_misuse():
+    r = MetricsRegistry()
+    c = r.counter("t_total", "h", ("app",))
+    with pytest.raises(ValueError):        # counters only go up
+        c.inc(-1, "a")
+    with pytest.raises(ValueError):        # label arity is declared
+        c.inc(1, "a", "b")
+    with pytest.raises(ValueError):        # kind conflicts are bugs
+        r.gauge("t_total", "h", ("app",))
+    with pytest.raises(ValueError):        # so are labelname conflicts
+        r.counter("t_total", "h", ("pool",))
+    # get-or-create returns the same family
+    assert r.counter("t_total", "h", ("app",)) is c
+
+
+def test_histogram_buckets_cumulative():
+    r = MetricsRegistry()
+    h = r.histogram("t_lat", "lat", buckets=(0.1, 1.0))
+    for v in (0.05, 0.5, 5.0):
+        h.observe(v)
+    parsed = parse_exposition(r.render())
+    b = parsed["t_lat_bucket"]
+    assert b[(("le", "0.1"),)] == 1
+    assert b[(("le", "1"),)] == 2
+    assert b[(("le", "+Inf"),)] == 3       # +Inf == _count
+    assert parsed["t_lat_count"][()] == 3
+    assert parsed["t_lat_sum"][()] == pytest.approx(5.55)
+
+
+# ---------------------------------------------------------------------------
+# SimMetrics parity (the §14 contract): counters scraped off a hooked
+# runtime equal the run's final SimMetrics ledger — and mid-run scrapes
+# are consistent prefixes of it
+# ---------------------------------------------------------------------------
+class _Scraper:
+    """Monitor-protocol scraper: parses the exposition every interval."""
+
+    interval_s = 1.0
+
+    def __init__(self, hooks):
+        self.hooks = hooks
+        self.scrapes = []
+
+    def begin_run(self, runtime):
+        self.scrapes = []
+
+    def check(self, runtime, now, metrics):
+        parsed = parse_exposition(self.hooks.registry.render())
+        comp = sum(parsed.get("jigsaw_completions_total", {}).values())
+        drop = sum(parsed.get("jigsaw_drops_total", {}).values())
+        self.scrapes.append((comp, drop))
+        return None
+
+
+def _assert_parity(hooks, m, app=""):
+    parsed = parse_exposition(hooks.registry.render())
+    comp = sum(parsed.get("jigsaw_completions_total", {}).values())
+    missed = sum(parsed.get("jigsaw_missed_total", {}).values())
+    drops = parsed.get("jigsaw_drops_total", {})
+    assert comp == m.completions
+    assert missed == m.missed
+    assert sum(drops.values()) == m.dropped
+    by_reason = {}
+    for labels, v in drops.items():
+        reason = dict(labels)["reason"]
+        by_reason[reason] = by_reason.get(reason, 0) + v
+    assert by_reason == dict(m.drop_reasons)
+    # the attainment gauge is 1 - violation_rate by construction
+    att = parsed["jigsaw_slo_attainment"][(("app", app),)]
+    assert att == pytest.approx(1.0 - m.violation_rate)
+
+
+def test_exposition_matches_simmetrics_sim_backend(planned_social):
+    """Overdriven plan (15-rps deployment at 60 rps) so every ledger —
+    completions, misses, drops by reason — is exercised, with mid-run
+    scrapes asserted to be monotone prefixes of the final totals."""
+    g, cfg = planned_social
+    hooks = Instrumentation(tracer=Tracer())
+    scraper = _Scraper(hooks)
+    rt = ClusterRuntime(g, cfg, SimBackend(), seed=3, hooks=hooks,
+                        monitor=scraper)
+    m = rt.run(Scenario.poisson(60.0, duration_s=10.0, warmup_s=2.0))
+    assert m.completions > 0 and m.dropped > 0
+    _assert_parity(hooks, m)
+    # mid-run scrapes: parseable, monotone, bounded by the final totals
+    assert len(scraper.scrapes) >= 5
+    comps = [s[0] for s in scraper.scrapes]
+    drops = [s[1] for s in scraper.scrapes]
+    assert comps == sorted(comps) and drops == sorted(drops)
+    assert comps[-1] <= m.completions and drops[-1] <= m.dropped
+
+
+def test_exposition_matches_simmetrics_engine_backend(tiny):
+    """Same parity contract through the real Engine datapath."""
+    g, cfg = tiny
+    hooks = Instrumentation()
+    rt = ClusterRuntime(g, cfg, EngineBackend(max_new=2, prompt_len=6),
+                        seed=3, hooks=hooks)
+    m = rt.run(Scenario.poisson(4.0, duration_s=4.0, warmup_s=0.5))
+    assert m.completions > 0
+    _assert_parity(hooks, m)
+
+
+def test_hooks_do_not_perturb_the_run(planned_social):
+    """Instrumentation is observation only: a hooked run is bit-identical
+    to a bare one (same seed, same scenario)."""
+    g, cfg = planned_social
+    scn = Scenario.poisson(60.0, duration_s=6.0, warmup_s=1.0)
+    bare = ClusterRuntime(g, cfg, SimBackend(), seed=5).run(scn)
+    hooked = ClusterRuntime(g, cfg, SimBackend(), seed=5,
+                            hooks=Instrumentation()).run(scn)
+    assert bare.completions == hooked.completions
+    assert bare.missed == hooked.missed
+    assert bare.dropped == hooked.dropped
+    assert dict(bare.drop_reasons) == dict(hooked.drop_reasons)
+    assert bare.latencies_ms == hooked.latencies_ms
+
+
+def test_multiapp_per_app_counter_parity(social_profiler,
+                                         traffic_profiler):
+    """On a two-app runtime every counter carries the app label and each
+    label's total equals that app's SimMetrics sub-ledger."""
+    apps = {}
+    for name, (g, prof) in (("social_media", social_profiler),
+                            ("traffic_analysis", traffic_profiler)):
+        cfg = Planner(g, prof, s_avail=64, max_tuples_per_task=32,
+                      bb_nodes=4, bb_time_s=1.0).plan(20.0)
+        assert cfg is not None
+        apps[name] = (g, cfg)
+    hooks = Instrumentation()
+    rt = ClusterRuntime.multi(apps, SimBackend(), seed=1, hooks=hooks)
+    from repro.runtime import PoissonArrivals
+    m = rt.run(Scenario.multi({n: PoissonArrivals(20.0) for n in apps},
+                              duration_s=6.0, warmup_s=1.0))
+    parsed = parse_exposition(hooks.registry.render())
+    comp = parsed["jigsaw_completions_total"]
+    for name in apps:
+        ma = m.by_app[name]
+        assert ma.completions > 0
+        assert comp[(("app", name),)] == ma.completions
+
+
+# ---------------------------------------------------------------------------
+# control-plane hooks
+# ---------------------------------------------------------------------------
+def test_controller_replan_hook(social_profiler):
+    from repro.core.controller import Controller
+
+    g, prof = social_profiler
+    hooks = Instrumentation()
+    ctl = Controller(g, prof, s_avail=64, hooks=hooks,
+                     planner_kwargs=dict(max_tuples_per_task=32,
+                                         bb_nodes=4, bb_time_s=1.0))
+    ctl.step(0, 20.0, sim_seconds=4.0)
+    ctl.step(1, 20.0, sim_seconds=4.0)
+    parsed = parse_exposition(hooks.registry.render())
+    replans = sum(parsed["jigsaw_replans_total"].values())
+    assert replans >= 1
+    assert parsed["jigsaw_replan_latency_seconds_count"][()] == replans
+
+
+# ---------------------------------------------------------------------------
+# per-request tracing
+# ---------------------------------------------------------------------------
+def test_trace_one_hop_span_per_path_task(planned_social):
+    g, cfg = planned_social
+    tracer = Tracer()
+    hooks = Instrumentation(tracer=tracer)
+    rt = ClusterRuntime(g, cfg, SimBackend(), seed=3, hooks=hooks)
+    m = rt.run(Scenario.poisson(10.0, duration_s=6.0, warmup_s=0.0))
+    assert m.completions > 0
+    obj = tracer.chrome_trace()
+    events = validate_chrome_trace(obj)
+    assert events, "trace must contain completed spans"
+    # find a root that reached a leaf and check its hop spans cover a
+    # full root->leaf path of the task graph, one span per hop
+    leaves = {t for t in g.tasks if not g.successors(t)}
+    for rid in range(50):
+        hops = tracer.spans_for_root(rid, cat="hop")
+        names = [s.name for s in hops]
+        if not any(n in leaves for n in names):
+            continue
+        # hops form a connected sub-DAG rooted at the entry task (the
+        # graph forks probabilistically, so this is not a simple chain)
+        ordered = sorted(hops, key=lambda s: s.start_s)
+        assert ordered[0].name == g.entry
+        for s in ordered[1:]:
+            assert any(s.name in g.successors(p.name) for p in ordered
+                       if p is not s), f"hop {s.name} has no parent hop"
+        # every hop also carries its queue + service sub-spans
+        assert len(tracer.spans_for_root(rid, cat="queue")) == len(hops)
+        assert len(tracer.spans_for_root(rid, cat="service")) == len(hops)
+        break
+    else:
+        pytest.fail("no traced root completed a full path")
+    # the export is valid JSON end-to-end
+    validate_chrome_trace(json.loads(json.dumps(obj)))
+
+
+def test_tracer_sampling_and_cap():
+    tr = Tracer(max_events=4, sample_every=2)
+    assert tr.enabled_for(0) and not tr.enabled_for(1)
+    for i in range(10):
+        tr.record("t", "hop", 0.0, 1.0, "app", root_id=0)
+    assert len(tr.spans) == 4 and tr.dropped == 6

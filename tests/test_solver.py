@@ -276,3 +276,31 @@ def test_milp_warm_node_lps_counted():
     assert res.lp_cold >= 1          # the root
     if res.nodes > 1:
         assert res.lp_warm >= 1      # children reuse the parent basis
+
+
+def test_per_solve_objective_warm_equals_cold():
+    """A cached BoundedSimplex must serve a family of solves whose
+    OBJECTIVE drifts (the planner's stickiness penalty follows the
+    incumbent): solving under ``c2`` with a warm basis taken under
+    ``c1`` must equal a cold solve built for ``c2`` — the warm path
+    restores dual feasibility against the new objective."""
+    rng = np.random.default_rng(7)
+    n, m = 5, 4
+    A = rng.normal(size=(m, n))
+    b = rng.uniform(1.0, 3.0, size=m)
+    c1 = rng.normal(size=n)
+    c2 = c1 + rng.normal(scale=2.0, size=n)   # substantial drift
+    lo, hi = np.zeros(n), np.full(n, 5.0)
+
+    solver = BoundedSimplex(c1, A_ub=A, b_ub=b)
+    r1 = solver.solve(lo, hi)
+    assert r1.status == "optimal"
+    # warm re-solve under the NEW objective on the SAME cached matrix
+    r2 = solver.solve(lo, hi, c=c2, warm=r1.basis)
+    cold = BoundedSimplex(c2, A_ub=A, b_ub=b).solve(lo, hi)
+    assert r2.status == cold.status == "optimal"
+    assert abs(r2.objective - cold.objective) < 1e-8
+    assert float(c2 @ r2.x) == pytest.approx(r2.objective)
+    # and the original objective is NOT leaked back into later solves
+    r3 = solver.solve(lo, hi)
+    assert abs(r3.objective - cold.objective) < 1e-8
