@@ -47,6 +47,33 @@ if TYPE_CHECKING:   # pragma: no cover — repro.runtime loads lazily to
     from repro.runtime.scenario import Scenario
 
 
+def _observe_fbar(graph: TaskGraph, mm, fbar: Dict[Tuple[str, str], float],
+                  ewma: float) -> None:
+    """Fold one bin's OBSERVED multiplicative factors into ``fbar``
+    in place (paper §3.2: F̂ is a runtime-refined input, not a
+    constant).  The observation is the served-traffic ratio along each
+    single-predecessor edge — multi-predecessor joins cannot attribute
+    their traffic to one upstream task, so their edges keep the
+    registered factors.  Bins with early drops are skipped: dropped
+    children deflate the served ratio, and feeding that back would
+    under-provision the bottleneck task further (a negative feedback
+    ratchet) — only near-loss-free bins observe F̂."""
+    if mm.dropped > 0.01 * max(mm.total_requests, 1):
+        return
+    served: Dict[str, int] = {}
+    for (t, _v), c in mm.traffic.items():
+        served[t] = served.get(t, 0) + c
+    for (t, t2) in graph.edges:
+        if len(graph.predecessors(t2)) != 1:
+            continue
+        if served.get(t, 0) <= 0:
+            continue
+        obs = served.get(t2, 0) / served[t]
+        prev = fbar.get((t, t2))
+        fbar[(t, t2)] = obs if prev is None else \
+            (1 - ewma) * prev + ewma * obs
+
+
 def _merge_dead_units(detector: Optional["FailureDetector"],
                       manual: Optional[Mapping[str, int]]
                       ) -> Dict[str, int]:
@@ -120,6 +147,11 @@ class Controller:
     detector: Optional["FailureDetector"] = None
     monitor: Optional["EmergencyReplanner"] = None
     ladder: Optional["DegradationLadder"] = None
+    # runtime profile refinement (paper §3.2): EWMA-blend the OBSERVED
+    # multiplicative factors back into every subsequent solve (ported
+    # from MultiAppController, ROADMAP carried-over item)
+    fbar_refine: bool = True
+    fbar_ewma: float = 0.3
     # observability (DESIGN.md §14): a repro.obs.Instrumentation shared
     # with every bin's runtime; the controller adds re-plan latency
     hooks: Optional[object] = None
@@ -285,6 +317,10 @@ class Controller:
             # close the loop: this bin's observed kills/preemptions feed
             # the NEXT bin's planner budgets
             self.detector.observe(runtime)
+        if self.fbar_refine:
+            # observed F̂ feeds every subsequent solve via the fbar
+            # argument to planner.plan() above (paper §3.2)
+            _observe_fbar(self.graph, metrics, self._fbar, self.fbar_ewma)
         # two demand views coexist on purpose: _history holds the ground-
         # truth bin demand the predictor consumes (the paper's demand
         # timestamps); the frontend's bins hold DATAPATH-observed demand —
@@ -648,32 +684,11 @@ class MultiAppController:
 
     # ------------------------------------------------------------------
     def _refine_fbar(self, metrics) -> None:
-        """Fold each app's OBSERVED multiplicative factors back into the
-        planner input (paper §3.2: F̂ is a runtime-refined input, not a
-        constant).  The observation is the served-traffic ratio along
-        each single-predecessor edge — multi-predecessor joins cannot
-        attribute their traffic to one upstream task, so their edges
-        keep the registered factors.  Bins with early drops are skipped:
-        dropped children deflate the served ratio, and feeding that back
-        would under-provision the bottleneck task further (a negative
-        feedback ratchet) — only near-loss-free bins observe F̂."""
+        """Fold each app's observed factors into its fbar dict (shared
+        :func:`_observe_fbar` single-app logic, per app)."""
         for n, g in self.graphs.items():
-            mm = metrics.app(n)
-            if mm.dropped > 0.01 * max(mm.total_requests, 1):
-                continue
-            served: Dict[str, int] = {}
-            for (t, _v), c in mm.traffic.items():
-                served[t] = served.get(t, 0) + c
-            fb = self._fbar[n]
-            for (t, t2) in g.edges:
-                if len(g.predecessors(t2)) != 1:
-                    continue
-                if served.get(t, 0) <= 0:
-                    continue
-                obs = served.get(t2, 0) / served[t]
-                prev = fb.get((t, t2))
-                fb[(t, t2)] = obs if prev is None else \
-                    (1 - self.fbar_ewma) * prev + self.fbar_ewma * obs
+            _observe_fbar(g, metrics.app(n), self._fbar[n],
+                          self.fbar_ewma)
 
     # ------------------------------------------------------------------
     def place(self, dead_hosts: Optional[Mapping[str, Sequence]] = None

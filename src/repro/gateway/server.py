@@ -58,19 +58,26 @@ class GatewayHTTPServer:
         self.host = host
         self.port = port
         self._server: Optional[asyncio.AbstractServer] = None
+        # serializes start/stop: a concurrent double-start would rebind
+        # the already-resolved ephemeral port (jigsaw-lint asyncio_race)
+        self._lifecycle_lock = asyncio.Lock()
 
     async def start(self) -> None:
-        await self.gateway.start()
-        self._server = await asyncio.start_server(
-            self._handle, self.host, self.port)
-        self.port = self._server.sockets[0].getsockname()[1]
+        async with self._lifecycle_lock:
+            if self._server is not None:
+                return
+            await self.gateway.start()
+            self._server = await asyncio.start_server(
+                self._handle, self.host, self.port)
+            self.port = self._server.sockets[0].getsockname()[1]
 
     async def stop(self) -> None:
-        if self._server is not None:
-            self._server.close()
-            await self._server.wait_closed()
-            self._server = None
-        await self.gateway.stop()
+        async with self._lifecycle_lock:
+            if self._server is not None:
+                self._server.close()
+                await self._server.wait_closed()
+                self._server = None
+            await self.gateway.stop()
 
     async def serve_forever(self) -> None:
         assert self._server is not None, "call start() first"

@@ -77,7 +77,7 @@ class ClusterSpec:
     a profiler key's slice name alone identifies its pool."""
     pools: Tuple[Pool, ...]
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         names = [p.name for p in self.pools]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate pool names: {names}")

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import cached_property
-from typing import Dict, Optional, Protocol, Tuple, runtime_checkable
+from typing import Dict, List, Optional, Protocol, Tuple, runtime_checkable
 
 from repro.sharding.segments import MAX_STREAMS, SegmentType, catalogue
 
@@ -205,7 +205,7 @@ class MigScheme(_SchemeBase):
 
     @cached_property
     def _slices(self) -> Tuple[Slice, ...]:
-        out = []
+        out: List[Slice] = []
         for p in self.profiles:
             for k in range(1, self.max_streams + 1):
                 out.append(Slice(

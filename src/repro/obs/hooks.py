@@ -23,7 +23,7 @@ from __future__ import annotations
 
 from bisect import bisect_left
 from dataclasses import dataclass, field
-from typing import Dict, List, Mapping, Optional
+from typing import Any, Dict, List, Mapping, Optional, Sequence
 
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.tracing import Tracer
@@ -45,7 +45,7 @@ class Instrumentation:
     registry: MetricsRegistry = field(default_factory=MetricsRegistry)
     tracer: Optional[Tracer] = None
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         r = self.registry
         self.arrivals = r.counter(
             f"{_PFX}_arrivals_total",
@@ -141,8 +141,8 @@ class Instrumentation:
                     missed: bool, now: float) -> None:
         self._comp_log.append((app, latency_ms, missed))
 
-    def on_dispatch(self, server, batch, now: float, service_s: float,
-                    queue_len: int) -> None:
+    def on_dispatch(self, server: Any, batch: Sequence[Any], now: float,
+                    service_s: float, queue_len: int) -> None:
         """Called at batch launch — service time is already known (the
         backend computed it), so queue/service/hop spans are recorded in
         one shot.  The scalars are captured NOW (the ladder mutates

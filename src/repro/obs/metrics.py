@@ -22,7 +22,7 @@ from __future__ import annotations
 import bisect
 import math
 import threading
-from typing import (Callable, Dict, Iterable, List, Mapping, Optional,
+from typing import (Any, Callable, Dict, Iterable, List, Mapping, Optional,
                     Sequence, Tuple)
 
 __all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
@@ -52,7 +52,8 @@ class _Family:
 
     kind = "untyped"
 
-    def __init__(self, name: str, help: str, labelnames: Sequence[str] = ()):
+    def __init__(self, name: str, help: str,
+                 labelnames: Sequence[str] = ()) -> None:
         self.name = name
         self.help = help
         self.labelnames = tuple(labelnames)
@@ -122,7 +123,7 @@ class Histogram(_Family):
     kind = "histogram"
 
     def __init__(self, name: str, help: str, labelnames: Sequence[str] = (),
-                 buckets: Sequence[float] = _DEF_BUCKETS):
+                 buckets: Sequence[float] = _DEF_BUCKETS) -> None:
         super().__init__(name, help, labelnames)
         self.buckets = tuple(sorted(float(b) for b in buckets))
         # per label-set: [bucket counts..., +Inf count], sum
@@ -181,7 +182,7 @@ class MetricsRegistry:
     asyncio handlers (the simulated runtime is single-threaded and never
     contends)."""
 
-    def __init__(self):
+    def __init__(self) -> None:
         self._families: Dict[str, _Family] = {}
         self._collectors: List[Callable[[], None]] = []
         self._lock = threading.Lock()
@@ -192,8 +193,8 @@ class MetricsRegistry:
         so the hot path pays nothing until someone scrapes."""
         self._collectors.append(fn)
 
-    def _get(self, cls, name: str, help: str,
-             labelnames: Sequence[str], **kw) -> _Family:
+    def _get(self, cls: type, name: str, help: str,
+             labelnames: Sequence[str], **kw: Any) -> _Family:
         with self._lock:
             fam = self._families.get(name)
             if fam is not None:
@@ -264,7 +265,8 @@ def parse_exposition(text: str) -> Dict[str, Dict[Tuple[Tuple[str, str], ...],
 
 def _split_labels(s: str) -> Iterable[str]:
     """Split ``a="x",b="y,z"`` on commas outside quotes."""
-    item, in_q, prev = [], False, ""
+    item: List[str] = []
+    in_q, prev = False, ""
     for ch in s:
         if ch == '"' and prev != "\\":
             in_q = not in_q

@@ -109,7 +109,7 @@ def validate_chrome_trace(obj: dict) -> List[dict]:
     events = obj["traceEvents"]
     if not isinstance(events, list):
         raise ValueError("traceEvents must be a list")
-    complete = []
+    complete: List[dict] = []
     for ev in events:
         for k in ("name", "ph", "pid", "tid"):
             if k not in ev:

@@ -92,3 +92,45 @@ def test_controller_steady_state_warm_replan(social_profiler):
     assert not r0.warm_replan
     assert r1.warm_replan
     assert ctl.planner.stats.warm_basis_hits >= 1
+
+
+def test_controller_fbar_refinement_feeds_solves(social_profiler):
+    """Carried-over ROADMAP item: the single-app controller EWMA-blends
+    OBSERVED multiplicative factors (served-traffic ratios) back into
+    its planner input, exactly like MultiAppController."""
+    g, prof = social_profiler
+    ctl = Controller(g, prof, s_avail=64,
+                     planner_kwargs=dict(max_tuples_per_task=32,
+                                         bb_nodes=4, bb_time_s=1.0))
+    rep0 = ctl.step(0, 40.0, sim_seconds=6.0, seed=0)
+    assert rep0.violation_rate < 0.05
+    # a near-loss-free bin observed F-hat on single-predecessor edges
+    assert ctl._fbar, "no observed factors recorded"
+    single_pred = {(t, t2) for (t, t2) in g.edges
+                   if len(g.predecessors(t2)) == 1}
+    assert set(ctl._fbar) <= single_pred
+    assert all(0.0 < v < 16.0 for v in ctl._fbar.values())
+
+    # the NEXT solve receives the refined dict (spy on planner.plan)
+    seen = {}
+    orig = ctl.planner.plan
+
+    def spy(demand, fbar=None, **kw):
+        seen["fbar"] = None if fbar is None else dict(fbar)
+        return orig(demand, fbar, **kw)
+
+    ctl.planner.plan = spy
+    fbar_before = dict(ctl._fbar)
+    rep1 = ctl.step(1, 80.0, sim_seconds=6.0, seed=1)  # 2x forces replan
+    assert rep1.replanned
+    assert seen["fbar"] == fbar_before
+
+    # EWMA update: bin 1's clean run folds new observations in place
+    assert ctl._fbar and set(ctl._fbar) <= single_pred
+
+    # and the knob turns it off
+    ctl2 = Controller(g, prof, s_avail=64, fbar_refine=False,
+                      planner_kwargs=dict(max_tuples_per_task=32,
+                                          bb_nodes=4, bb_time_s=1.0))
+    ctl2.step(0, 40.0, sim_seconds=6.0, seed=0)
+    assert not ctl2._fbar

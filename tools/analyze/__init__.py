@@ -1,0 +1,41 @@
+"""jigsaw-lint: repo-specific static analysis (DESIGN.md §15).
+
+An AST-based framework (stdlib ``ast`` only, no third-party deps) with
+five passes enforcing the invariants the paper's headline numbers rest
+on — seeded replays must be bit-identical and errors must surface:
+
+``determinism``
+    No wall-clock or ambient-randomness calls inside the simulation
+    packages (``layers.toml [determinism]``): seeded
+    ``np.random.default_rng(seed)`` threaded as an argument is the only
+    sanctioned randomness source, and sim time never reads the wall.
+``layering``
+    The repo import graph must satisfy the allowed-dependency matrix in
+    ``layers.toml [layers]`` (obs depends on nothing in-repo,
+    hwspec < core < runtime < {gateway, chaos, reconfig}), with
+    module-granularity cycle detection and the PR 2 core→runtime shims
+    as *named* ``[[exception]]`` entries that fail loud when stale.
+``asyncio_race``
+    In async packages: read-modify-write of shared ``self.*`` state
+    spanning an ``await`` without a lock, and blocking calls
+    (``time.sleep``, sync sockets / subprocess / file I/O) inside
+    ``async def``.
+``failloud``
+    No bare ``except:`` and no silently-passing ``except Exception``
+    in control-plane packages.
+``units``
+    No additive/comparison arithmetic mixing ``*_s`` / ``*_ms`` /
+    ``*_bytes``-suffixed names without an explicit conversion constant.
+
+Findings are keyed ``(pass, file, line, symbol)``; ``baseline.json``
+pins pre-existing violations so only NEW findings fail, stale baseline
+entries are themselves errors, and ``--update-baseline`` re-pins.
+Suppress a deliberate single-line exception with a trailing
+``# jigsaw: allow(<pass>)`` comment.
+
+Run: ``python -m tools.analyze`` (nonzero exit on findings).
+"""
+from tools.analyze.core import Finding, run_passes
+from tools.analyze.config import AnalyzerConfig, load_config
+
+__all__ = ["AnalyzerConfig", "Finding", "load_config", "run_passes"]

@@ -1,0 +1,91 @@
+"""Runner CLI: ``python -m tools.analyze``.
+
+Runs every pass over the configured package root, compares against the
+checked-in baseline, prints findings, and exits nonzero when any NEW
+finding (or stale baseline pin) exists.  ``--update-baseline`` re-pins;
+``--json`` dumps structured findings (the CI failure artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from typing import List, Optional
+
+from tools.analyze.baseline import (DEFAULT_BASELINE, compare,
+                                    load_baseline, save_baseline)
+from tools.analyze.config import DEFAULT_CONFIG, load_config
+from tools.analyze.core import PASSES, Finding, Project, run_passes
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.analyze",
+        description=__doc__.splitlines()[0])
+    ap.add_argument("--config", default=DEFAULT_CONFIG,
+                    help="layers.toml path")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baseline.json path")
+    ap.add_argument("--root", default=None,
+                    help="override the package root (default from config)")
+    ap.add_argument("--passes", default=None,
+                    help="comma-separated subset of passes to run")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="re-pin the baseline from this run's findings")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write structured findings JSON (CI artifact)")
+    ap.add_argument("--list-passes", action="store_true")
+    a = ap.parse_args(argv)
+
+    if a.list_passes:
+        from tools.analyze import passes as _  # noqa: F401
+        for name in sorted(PASSES):
+            print(name)
+        return 0
+
+    config = load_config(a.config)
+    root = a.root or config.root
+    project = Project(root, config.package)
+    only = [p.strip() for p in a.passes.split(",")] if a.passes else None
+    findings = run_passes(project, config, only=only)
+
+    if a.update_baseline:
+        save_baseline(findings, a.baseline)
+        print(f"baseline re-pinned: {len(findings)} finding(s) -> "
+              f"{a.baseline}")
+        return 0
+
+    res = compare(findings, load_baseline(a.baseline))
+    if a.json:
+        payload = {
+            "new": [dataclasses.asdict(f) for f in res.new],
+            "baselined": [dataclasses.asdict(f) for f in res.baselined],
+            "stale_baseline_entries": res.stale,
+        }
+        with open(a.json, "w", encoding="utf-8") as f:
+            json.dump(payload, f, indent=1)
+
+    for f in res.baselined:
+        print(f"BASELINED {f.render()}")
+    for f in res.new:
+        print(f"NEW       {f.render()}")
+    for key in res.stale:
+        print(f"STALE     baseline pin matches no finding: {key}")
+    n_files = len(project.files)
+    ran = ", ".join(only) if only else "all passes"
+    print(f"jigsaw-lint: {n_files} files, {ran}: "
+          f"{len(res.new)} new, {len(res.baselined)} baselined, "
+          f"{len(res.stale)} stale pin(s)")
+    if res.failed:
+        print("FAIL: fix the new findings (or, for a sanctioned "
+              "violation, `--update-baseline` / add a trailing "
+              "`# jigsaw: allow(<pass>)`); remove stale pins with "
+              "`--update-baseline`.")
+        return 1
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

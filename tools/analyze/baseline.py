@@ -1,0 +1,68 @@
+"""Baseline: pin pre-existing findings so only NEW ones fail.
+
+``baseline.json`` maps finding keys (``pass::file::line::symbol``) to a
+short note.  A run partitions findings into *new* (not pinned — fail),
+*baselined* (pinned — reported but passing), and flags *stale* pins
+(entries matching no current finding — fail too: a fixed violation must
+take its pin with it, or the baseline rots into a blanket waiver).
+``--update-baseline`` rewrites the file from the current findings.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+from tools.analyze.core import Finding
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+DEFAULT_BASELINE = os.path.join(_HERE, "baseline.json")
+
+
+@dataclass
+class BaselineResult:
+    new: List[Finding] = field(default_factory=list)
+    baselined: List[Finding] = field(default_factory=list)
+    stale: List[str] = field(default_factory=list)
+
+    @property
+    def failed(self) -> bool:
+        return bool(self.new or self.stale)
+
+
+def load_baseline(path: str = DEFAULT_BASELINE) -> Dict[str, str]:
+    try:
+        with open(path, encoding="utf-8") as f:
+            data = json.load(f)
+    except FileNotFoundError:
+        return {}
+    if not isinstance(data, dict) or "entries" not in data:
+        raise ValueError(f"malformed baseline file {path}: expected "
+                         '{"entries": {key: note}}')
+    return dict(data["entries"])
+
+
+def save_baseline(findings: List[Finding],
+                  path: str = DEFAULT_BASELINE) -> None:
+    entries = {f.key: f.message for f in findings}
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump({"comment": "jigsaw-lint pinned findings — regenerate "
+                              "with `python -m tools.analyze "
+                              "--update-baseline`",
+                   "entries": entries}, f, indent=1, sort_keys=True)
+        f.write("\n")
+
+
+def compare(findings: List[Finding],
+            baseline: Dict[str, str]) -> BaselineResult:
+    res = BaselineResult()
+    seen = set()
+    for f in findings:
+        if f.key in baseline:
+            res.baselined.append(f)
+            seen.add(f.key)
+        else:
+            res.new.append(f)
+    res.stale = sorted(set(baseline) - seen)
+    return res

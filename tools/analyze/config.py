@@ -1,0 +1,166 @@
+"""Analyzer configuration: ``layers.toml`` loading.
+
+Python 3.10 has no ``tomllib``, and the container must not grow deps,
+so a restricted TOML reader backs it up: tables, arrays of tables,
+and ``key = value`` where value is a string, integer, float, boolean,
+or a (possibly multi-line) list of strings.  ``tomllib`` is preferred
+when the interpreter ships it.
+"""
+from __future__ import annotations
+
+import os
+import re
+from dataclasses import dataclass, field
+from typing import Any, Dict, List
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+DEFAULT_CONFIG = os.path.join(_HERE, "layers.toml")
+
+_KEY_RE = re.compile(r"^([A-Za-z0-9_-]+)\s*=\s*(.*)$")
+
+
+def _parse_scalar(text: str) -> Any:
+    text = text.strip()
+    if text.startswith('"') and text.endswith('"') and len(text) >= 2:
+        return text[1:-1]
+    if text in ("true", "false"):
+        return text == "true"
+    try:
+        return int(text)
+    except ValueError:
+        pass
+    try:
+        return float(text)
+    except ValueError:
+        pass
+    raise ValueError(f"unsupported TOML value: {text!r}")
+
+
+def _parse_value(text: str) -> Any:
+    text = text.strip()
+    if text.startswith("["):
+        inner = text[1:-1].strip()
+        if not inner:
+            return []
+        return [_parse_scalar(p) for p in _split_list(inner)]
+    return _parse_scalar(text)
+
+
+def _split_list(inner: str) -> List[str]:
+    """Split a flat list body on commas outside quotes."""
+    parts, buf, in_str = [], [], False
+    for ch in inner:
+        if ch == '"':
+            in_str = not in_str
+            buf.append(ch)
+        elif ch == "," and not in_str:
+            parts.append("".join(buf))
+            buf = []
+        else:
+            buf.append(ch)
+    tail = "".join(buf).strip()
+    if tail:
+        parts.append(tail)
+    return parts
+
+
+def _strip_comment(line: str) -> str:
+    out, in_str = [], False
+    for ch in line:
+        if ch == '"':
+            in_str = not in_str
+        elif ch == "#" and not in_str:
+            break
+        out.append(ch)
+    return "".join(out).rstrip()
+
+
+def _mini_toml(text: str) -> Dict[str, Any]:
+    root: Dict[str, Any] = {}
+    current: Dict[str, Any] = root
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        line = _strip_comment(lines[i]).strip()
+        i += 1
+        if not line:
+            continue
+        if line.startswith("[[") and line.endswith("]]"):
+            name = line[2:-2].strip()
+            current = {}
+            root.setdefault(name, []).append(current)
+            continue
+        if line.startswith("[") and line.endswith("]"):
+            name = line[1:-1].strip()
+            current = root.setdefault(name, {})
+            continue
+        m = _KEY_RE.match(line)
+        if m is None:
+            raise ValueError(f"unparseable layers.toml line: {line!r}")
+        key, value = m.group(1), m.group(2)
+        # multi-line list: accumulate until the brackets balance
+        while value.count("[") > value.count("]"):
+            value += " " + _strip_comment(lines[i]).strip()
+            i += 1
+        current[key] = _parse_value(value)
+    return root
+
+
+def _load_toml(path: str) -> Dict[str, Any]:
+    try:
+        import tomllib
+        with open(path, "rb") as f:
+            return tomllib.load(f)
+    except ModuleNotFoundError:
+        with open(path, encoding="utf-8") as f:
+            return _mini_toml(f.read())
+
+
+@dataclass(frozen=True)
+class LayerException:
+    """One named cross-layer shim: ``file`` may import ``package``.
+
+    Goes stale — and fails the run — when the file no longer contains
+    any import of that package."""
+    file: str
+    package: str
+    reason: str
+
+
+@dataclass
+class AnalyzerConfig:
+    """Parsed ``layers.toml``: the dependency matrix plus per-pass scope."""
+    root: str                                  # package root, e.g. src/repro
+    package: str                               # top-level name, e.g. repro
+    layers: Dict[str, List[str]] = field(default_factory=dict)
+    lazy: Dict[str, List[str]] = field(default_factory=dict)
+    exceptions: List[LayerException] = field(default_factory=list)
+    determinism_packages: List[str] = field(default_factory=list)
+    asyncio_packages: List[str] = field(default_factory=list)
+    failloud_packages: List[str] = field(default_factory=list)
+    units_exclude: List[str] = field(default_factory=list)
+
+    def allowed(self, pkg: str) -> List[str]:
+        return self.layers.get(pkg, [])
+
+    def lazy_allowed(self, pkg: str) -> List[str]:
+        return self.layers.get(pkg, []) + self.lazy.get(pkg, [])
+
+
+def load_config(path: str = DEFAULT_CONFIG) -> AnalyzerConfig:
+    data = _load_toml(path)
+    meta = data.get("analyze", {})
+    exceptions = [LayerException(e["file"], e["package"],
+                                 e.get("reason", ""))
+                  for e in data.get("exception", [])]
+    return AnalyzerConfig(
+        root=meta.get("root", "src/repro"),
+        package=meta.get("package", "repro"),
+        layers=data.get("layers", {}),
+        lazy=data.get("lazy", {}),
+        exceptions=exceptions,
+        determinism_packages=data.get("determinism", {}).get("packages", []),
+        asyncio_packages=data.get("asyncio", {}).get("packages", []),
+        failloud_packages=data.get("failloud", {}).get("packages", []),
+        units_exclude=data.get("units", {}).get("exclude", []),
+    )

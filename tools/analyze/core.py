@@ -1,0 +1,211 @@
+"""Framework core: findings, source model, pass registry, runner.
+
+A pass is a function ``(project, config) -> list[Finding]``; the
+:class:`Project` hands it parsed ASTs (cached per file) plus raw source
+lines for inline-suppression checks.  Everything here is stdlib-only.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from dataclasses import dataclass
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
+
+__all__ = ["Finding", "Project", "SourceFile", "run_passes", "PASSES"]
+
+# trailing-comment suppression: `expr  # jigsaw: allow(units)`
+_ALLOW_RE = re.compile(r"#\s*jigsaw:\s*allow\(([a-z_,\s]+)\)")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One structured violation, keyed ``(pass, file, line, symbol)``."""
+    pass_name: str
+    file: str                 # repo-relative posix path
+    line: int
+    symbol: str               # enclosing function/class qualname or tag
+    message: str
+
+    @property
+    def key(self) -> str:
+        return f"{self.pass_name}::{self.file}::{self.line}::{self.symbol}"
+
+    def render(self) -> str:
+        return (f"{self.file}:{self.line}: [{self.pass_name}] "
+                f"{self.symbol}: {self.message}")
+
+
+class SourceFile:
+    """One parsed module: AST, source lines, module path metadata."""
+
+    def __init__(self, path: str, rel: str, module: str, text: str):
+        self.path = path
+        self.rel = rel                      # repo-relative posix path
+        self.module = module                # dotted, e.g. repro.core.milp
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree = ast.parse(text, filename=rel)
+        # pass -> set of line numbers carrying `# jigsaw: allow(pass)`
+        self.allows: Dict[str, set] = {}
+        for idx, line in enumerate(self.lines, start=1):
+            m = _ALLOW_RE.search(line)
+            if m:
+                for name in m.group(1).split(","):
+                    self.allows.setdefault(name.strip(), set()).add(idx)
+
+    @property
+    def package(self) -> str:
+        """Top-level sub-package under the root ("core" for
+        repro.core.milp; "" for the root ``__init__``)."""
+        parts = self.module.split(".")
+        return parts[1] if len(parts) > 1 else ""
+
+    def allowed(self, pass_name: str, line: int) -> bool:
+        return line in self.allows.get(pass_name, set())
+
+
+class Project:
+    """All analyzed source files under one package root."""
+
+    def __init__(self, root: str, package: str,
+                 repo_root: Optional[str] = None):
+        self.root = root
+        self.package = package
+        self.repo_root = repo_root or os.getcwd()
+        self.files: List[SourceFile] = []
+        base = os.path.join(self.repo_root, root)
+        if not os.path.isdir(base):
+            raise FileNotFoundError(f"package root not found: {base}")
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames[:] = sorted(d for d in dirnames
+                                 if d != "__pycache__")
+            for fn in sorted(filenames):
+                if not fn.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fn)
+                rel = os.path.relpath(path, self.repo_root).replace(
+                    os.sep, "/")
+                mod = os.path.relpath(path, base).replace(os.sep, "/")
+                mod = mod[:-3]                      # strip .py
+                if mod.endswith("/__init__"):
+                    mod = mod[: -len("/__init__")]
+                elif mod == "__init__":
+                    mod = ""
+                dotted = package + ("." + mod.replace("/", ".")
+                                    if mod else "")
+                with open(path, encoding="utf-8") as f:
+                    text = f.read()
+                self.files.append(SourceFile(path, rel, dotted, text))
+        self.modules = {sf.module: sf for sf in self.files}
+
+    def in_packages(self, packages: Iterable[str]) -> List[SourceFile]:
+        wanted = set(packages)
+        return [sf for sf in self.files if sf.package in wanted]
+
+
+# ---------------------------------------------------------------------------
+# shared AST helpers
+# ---------------------------------------------------------------------------
+def qualname_at(tree: ast.AST, node: ast.AST) -> str:
+    """Enclosing def/class qualname of ``node`` ("<module>" at top)."""
+    target = node
+    path: List[str] = []
+
+    def visit(cur: ast.AST, names: List[str]) -> bool:
+        if cur is target:
+            path.extend(names)
+            return True
+        for child in ast.iter_child_nodes(cur):
+            stack = names
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                stack = names + [child.name]
+            if visit(child, stack):
+                return True
+        return False
+
+    visit(tree, [])
+    return ".".join(path) if path else "<module>"
+
+
+class ImportMap:
+    """Name-binding table for one module: alias -> imported module."""
+
+    def __init__(self, tree: ast.AST):
+        # alias bound by `import x[.y] [as a]` -> full module path
+        self.modules: Dict[str, str] = {}
+        # name bound by `from m import n [as a]` -> "m.n"
+        self.names: Dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.modules[a.asname or a.name.split(".")[0]] = \
+                        a.name if a.asname else a.name.split(".")[0]
+                    if a.asname:
+                        self.modules[a.asname] = a.name
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    self.names[a.asname or a.name] = \
+                        f"{node.module}.{a.name}"
+
+    def resolve_call(self, func: ast.AST) -> Optional[str]:
+        """Dotted origin of a called expression, e.g. ``np.random.rand``
+        -> ``numpy.random.rand``; bare ``sleep`` imported from time ->
+        ``time.sleep``.  None when the origin isn't an import."""
+        parts: List[str] = []
+        cur = func
+        while isinstance(cur, ast.Attribute):
+            parts.append(cur.attr)
+            cur = cur.value
+        if isinstance(cur, ast.Name):
+            base = cur.id
+            if base in self.modules:
+                return ".".join([self.modules[base]] + parts[::-1])
+            if base in self.names and not parts:
+                return self.names[base]
+            if base in self.names and parts:
+                return ".".join([self.names[base]] + parts[::-1])
+        return None
+
+
+# ---------------------------------------------------------------------------
+# registry + runner
+# ---------------------------------------------------------------------------
+PASSES: Dict[str, Callable] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        PASSES[name] = fn
+        return fn
+    return deco
+
+
+def _load_passes() -> None:
+    # importing the package registers every pass
+    from tools.analyze import passes as _  # noqa: F401
+
+
+def run_passes(project: Project, config, *,
+               only: Optional[Iterable[str]] = None) -> List[Finding]:
+    """Run the selected passes; inline-suppressed findings are dropped."""
+    _load_passes()
+    names = list(only) if only else sorted(PASSES)
+    unknown = [n for n in names if n not in PASSES]
+    if unknown:
+        raise KeyError(f"unknown pass(es): {unknown}; "
+                       f"have {sorted(PASSES)}")
+    findings: List[Finding] = []
+    seen = set()
+    for name in names:
+        for f in PASSES[name](project, config):
+            sf = next((s for s in project.files if s.rel == f.file), None)
+            if sf is not None and sf.allowed(name, f.line):
+                continue
+            if f.key in seen:       # e.g. one from-import, many aliases
+                continue
+            seen.add(f.key)
+            findings.append(f)
+    findings.sort(key=lambda f: (f.file, f.line, f.pass_name, f.symbol))
+    return findings

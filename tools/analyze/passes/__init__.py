@@ -1,0 +1,5 @@
+"""Pass registry: importing this package registers every pass."""
+from tools.analyze.passes import (asyncio_races, determinism, failloud,
+                                  layering, units)  # noqa: F401
+
+__all__ = ["asyncio_races", "determinism", "failloud", "layering", "units"]

@@ -1,0 +1,183 @@
+"""Asyncio-race pass: shared-state and blocking hazards in async code.
+
+Two findings inside the async packages (``layers.toml [asyncio]``):
+
+* **await-spanning read-modify-write** — an ``async def`` reads
+  ``self.x``, suspends at an ``await``, then writes ``self.x``: another
+  task interleaves at the suspension point and the write clobbers its
+  update.  Events are linearized in execution order (loop bodies are
+  replayed twice so a cross-iteration read→await→write is seen);
+  anything under an ``async with <...lock...>`` is suppressed.
+* **blocking call in async def** — ``time.sleep``, sync ``socket`` /
+  ``subprocess`` / ``requests`` / ``urllib`` calls, or builtin
+  ``open``: these stall the whole event loop, not just the caller.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Tuple
+
+from tools.analyze.core import (Finding, ImportMap, Project, qualname_at,
+                                register)
+
+PASS = "asyncio_race"
+
+_BLOCKING_ORIGINS = ("time.sleep", "socket.", "subprocess.",
+                     "requests.", "urllib.request.")
+
+# event kinds in the linearized trace of an async function body
+_AWAIT, _READ, _WRITE = "await", "read", "write"
+
+
+def _is_lock_ctx(item: ast.withitem) -> bool:
+    return "lock" in ast.unparse(item.context_expr).lower()
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    """``self.x`` (or the base attr of ``self.x[...]``) -> ``x``."""
+    if isinstance(node, ast.Subscript):
+        node = node.value
+    if isinstance(node, ast.Attribute) and \
+            isinstance(node.value, ast.Name) and node.value.id == "self":
+        return node.attr
+    return None
+
+
+def _linearize(body, events: List[Tuple[str, Optional[str], int]],
+               locked: bool) -> None:
+    """Append (kind, attr, line) events for ``body`` in execution order."""
+    for stmt in body:
+        _linearize_stmt(stmt, events, locked)
+
+
+def _expr_events(node: ast.AST, events, locked: bool) -> None:
+    """Recursive in-order event emission: an await's operand evaluates
+    BEFORE the suspension, assignment RHS before the target write."""
+    if isinstance(node, ast.Await):
+        _expr_events(node.value, events, locked)
+        events.append((_AWAIT, None, node.lineno))
+        return
+    if isinstance(node, (ast.Attribute, ast.Subscript)):
+        attr = _self_attr(node)
+        if attr is not None and not locked:
+            kind = _WRITE if isinstance(node.ctx, (ast.Store,
+                                                   ast.Del)) else _READ
+            events.append((kind, attr, node.lineno))
+            if isinstance(node, ast.Subscript):
+                _expr_events(node.slice, events, locked)
+            return
+        for child in ast.iter_child_nodes(node):
+            if not isinstance(child, ast.expr_context):
+                _expr_events(child, events, locked)
+        return
+    if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                         ast.Lambda)):
+        return
+    for child in ast.iter_child_nodes(node):
+        if not isinstance(child, ast.expr_context):
+            _expr_events(child, events, locked)
+
+
+def _linearize_stmt(stmt: ast.stmt, events, locked: bool) -> None:
+    if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                         ast.ClassDef)):
+        return                      # nested defs run on their own
+    if isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+        head = stmt.iter if isinstance(stmt, (ast.For, ast.AsyncFor)) \
+            else stmt.test
+        _expr_events(head, events, locked)
+        # replay the body twice: catches read (iter N) -> await ->
+        # write (iter N+1) interleavings
+        for _ in range(2):
+            _linearize(stmt.body, events, locked)
+        _linearize(stmt.orelse, events, locked)
+        return
+    if isinstance(stmt, (ast.With, ast.AsyncWith)):
+        now_locked = locked or any(_is_lock_ctx(i) for i in stmt.items)
+        for i in stmt.items:
+            _expr_events(i.context_expr, events, locked)
+        _linearize(stmt.body, events, now_locked)
+        return
+    if isinstance(stmt, ast.If):
+        _expr_events(stmt.test, events, locked)
+        _linearize(stmt.body, events, locked)
+        _linearize(stmt.orelse, events, locked)
+        return
+    if isinstance(stmt, ast.Try):
+        _linearize(stmt.body, events, locked)
+        for h in stmt.handlers:
+            _linearize(h.body, events, locked)
+        _linearize(stmt.orelse, events, locked)
+        _linearize(stmt.finalbody, events, locked)
+        return
+    # assignments: evaluate RHS (reads/awaits) before target writes
+    if isinstance(stmt, ast.Assign):
+        _expr_events(stmt.value, events, locked)
+        for t in stmt.targets:
+            _expr_events(t, events, locked)
+        return
+    if isinstance(stmt, ast.AugAssign):
+        _expr_events(stmt.value, events, locked)
+        if not locked:
+            attr = _self_attr(stmt.target)
+            if attr is not None:
+                events.append((_READ, attr, stmt.lineno))
+                events.append((_WRITE, attr, stmt.lineno))
+        return
+    _expr_events(stmt, events, locked)
+
+
+@register(PASS)
+def run(project: Project, config) -> List[Finding]:
+    findings: List[Finding] = []
+    for sf in project.in_packages(config.asyncio_packages):
+        imports = ImportMap(sf.tree)
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.AsyncFunctionDef):
+                continue
+            qual = qualname_at(sf.tree, node)
+            # ---- blocking calls -------------------------------------
+            for sub in ast.walk(node):
+                if isinstance(sub, (ast.FunctionDef,
+                                    ast.AsyncFunctionDef)) and sub is not \
+                        node:
+                    continue
+                if not isinstance(sub, ast.Call):
+                    continue
+                origin = imports.resolve_call(sub.func)
+                blocked = None
+                if origin is not None:
+                    for b in _BLOCKING_ORIGINS:
+                        if origin == b or (b.endswith(".")
+                                           and origin.startswith(b)):
+                            blocked = origin
+                elif isinstance(sub.func, ast.Name) and \
+                        sub.func.id == "open":
+                    blocked = "open"
+                if blocked is not None:
+                    findings.append(Finding(
+                        PASS, sf.rel, sub.lineno, qual,
+                        f"blocking call {blocked}() inside async def "
+                        "stalls the whole event loop (use asyncio."
+                        "sleep / to_thread / non-blocking I/O)"))
+            # ---- await-spanning read-modify-write -------------------
+            events: List[Tuple[str, Optional[str], int]] = []
+            _linearize(node.body, events, False)
+            reported = set()
+            seen_read: dict = {}          # attr -> line of earliest read
+            awaited_after_read: set = set()
+            for kind, attr, line in events:
+                if kind == _AWAIT:
+                    awaited_after_read.update(seen_read)
+                elif kind == _READ:
+                    seen_read.setdefault(attr, line)
+                elif kind == _WRITE and attr in awaited_after_read \
+                        and attr not in reported:
+                    reported.add(attr)
+                    findings.append(Finding(
+                        PASS, sf.rel, line, qual,
+                        f"self.{attr} is read before an await and "
+                        "written after it — another task interleaves "
+                        "at the suspension point; guard the section "
+                        "with an asyncio.Lock"))
+    return findings

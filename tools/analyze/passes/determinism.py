@@ -1,0 +1,72 @@
+"""Determinism pass: seeded replays must be bit-identical.
+
+Inside the simulation packages (``layers.toml [determinism]``) every
+source of nondeterminism is banned: wall-clock reads (``time.time`` /
+``perf_counter`` — sim time is event time, never the wall), real sleeps
+(``time.sleep``), the global ``random`` module, numpy's module-level RNG
+(``np.random.rand`` etc. share mutable global state across call sites),
+legacy ``RandomState``, and **unseeded** ``np.random.default_rng()``.
+``np.random.default_rng(seed)`` threaded as an argument is the one
+sanctioned source.  ``time.monotonic`` stays legal: the control plane
+reports real solver wall time (``milp_ms``), which never feeds back
+into simulated outcomes.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.analyze.core import (Finding, ImportMap, Project, qualname_at,
+                                register)
+
+PASS = "determinism"
+
+# dotted call origins that are never allowed in sim packages
+_BANNED = {
+    "time.time": "wall-clock read",
+    "time.time_ns": "wall-clock read",
+    "time.perf_counter": "wall-clock read",
+    "time.perf_counter_ns": "wall-clock read",
+    "time.process_time": "wall-clock read",
+    "time.sleep": "real sleep in simulated time",
+    "datetime.datetime.now": "wall-clock read",
+    "datetime.datetime.utcnow": "wall-clock read",
+    "datetime.date.today": "wall-clock read",
+}
+_NUMPY_RANDOM_PREFIX = "numpy.random."
+_SANCTIONED_NP = "numpy.random.default_rng"
+
+
+@register(PASS)
+def run(project: Project, config) -> List[Finding]:
+    findings: List[Finding] = []
+    for sf in project.in_packages(config.determinism_packages):
+        imports = ImportMap(sf.tree)
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            origin = imports.resolve_call(node.func)
+            if origin is None:
+                continue
+            msg = None
+            if origin in _BANNED:
+                msg = f"{origin}() — {_BANNED[origin]}"
+            elif origin == _SANCTIONED_NP or origin.endswith(
+                    ".random.default_rng"):
+                if not node.args and not node.keywords:
+                    msg = ("unseeded np.random.default_rng() — thread a "
+                           "seeded generator in as an argument")
+            elif origin.startswith(_NUMPY_RANDOM_PREFIX) or \
+                    ".random.RandomState" in origin:
+                msg = (f"{origin}() — numpy module-level / legacy RNG "
+                       "shares global mutable state; use a seeded "
+                       "default_rng(seed) argument")
+            elif origin.startswith("random."):
+                msg = (f"{origin}() — the global `random` module is "
+                       "unseeded shared state; use a seeded "
+                       "default_rng(seed) argument")
+            if msg is not None:
+                findings.append(Finding(
+                    PASS, sf.rel, node.lineno,
+                    qualname_at(sf.tree, node), msg))
+    return findings

@@ -1,0 +1,72 @@
+"""Fail-loud pass: control-plane errors must surface, never vanish.
+
+In the control-plane packages (``layers.toml [failloud]``) two shapes
+are findings:
+
+* **bare ``except:``** — catches ``KeyboardInterrupt`` / ``SystemExit``
+  too, and hides the contract being violated; always flagged.
+* **silent broad handler** — ``except Exception`` (or
+  ``BaseException``) whose body does nothing but ``pass`` /
+  ``continue`` / ``...`` / return-a-constant.  A handler that records,
+  logs, counts, assigns a fallback, or re-raises is fine — swallowing
+  without a trace is not.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.analyze.core import Finding, Project, qualname_at, register
+
+PASS = "failloud"
+
+_BROAD = ("Exception", "BaseException")
+
+
+def _is_broad(handler: ast.ExceptHandler) -> bool:
+    t = handler.type
+    if isinstance(t, ast.Name):
+        return t.id in _BROAD
+    if isinstance(t, ast.Tuple):
+        return any(isinstance(e, ast.Name) and e.id in _BROAD
+                   for e in t.elts)
+    return False
+
+
+def _is_silent(body: List[ast.stmt]) -> bool:
+    """True when the handler body observably does nothing."""
+    for stmt in body:
+        if isinstance(stmt, ast.Pass):
+            continue
+        if isinstance(stmt, ast.Continue):
+            continue
+        if isinstance(stmt, ast.Expr) and isinstance(stmt.value,
+                                                     ast.Constant):
+            continue                      # docstring / `...`
+        if isinstance(stmt, ast.Return) and (
+                stmt.value is None
+                or isinstance(stmt.value, ast.Constant)):
+            continue
+        return False
+    return True
+
+
+@register(PASS)
+def run(project: Project, config) -> List[Finding]:
+    findings: List[Finding] = []
+    for sf in project.in_packages(config.failloud_packages):
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            qual = qualname_at(sf.tree, node)
+            if node.type is None:
+                findings.append(Finding(
+                    PASS, sf.rel, node.lineno, qual,
+                    "bare `except:` swallows every error including "
+                    "KeyboardInterrupt — name the exception"))
+            elif _is_broad(node) and _is_silent(node.body):
+                findings.append(Finding(
+                    PASS, sf.rel, node.lineno, qual,
+                    "`except Exception` with a silent body — record, "
+                    "count, narrow, or re-raise; errors must surface"))
+    return findings

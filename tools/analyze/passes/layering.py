@@ -1,0 +1,219 @@
+"""Layering pass: the import graph must match the declared matrix.
+
+``layers.toml [layers]`` maps each top-level sub-package to the in-repo
+packages it may import (module-level or lazy); ``[lazy]`` grants extra
+function-level-only dependencies (the data-plane bindings a leaf loads
+on demand); ``[[exception]]`` names individual files allowed to cross
+the matrix (the PR 2 core→runtime shims).  Exceptions that no longer
+match any real import are STALE and fail the run — a shim that was
+removed must take its sanction with it.
+
+``TYPE_CHECKING``-guarded imports are erased at runtime and ignored.
+``importlib.import_module("repro.x...")`` with a constant string counts
+as a lazy import (the PEP 562 re-export pattern in ``core/__init__``).
+
+Cycle detection runs at module granularity over module-level imports
+(lazy imports cannot deadlock the import system): any strongly
+connected component larger than one module is a finding.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Set, Tuple
+
+from tools.analyze.core import Finding, Project, SourceFile, register
+
+PASS = "layering"
+
+
+@dataclass(frozen=True)
+class _Imp:
+    target: str               # dotted module, e.g. repro.runtime.cluster
+    line: int
+    lazy: bool                # bound inside a def (loaded on call)
+    type_checking: bool       # inside `if TYPE_CHECKING:` — erased
+
+
+def _collect_imports(sf: SourceFile, package: str) -> List[_Imp]:
+    """All imports of ``package``-rooted modules, classified."""
+    out: List[_Imp] = []
+
+    def visit(node: ast.AST, depth: int, tc: bool) -> None:
+        for child in ast.iter_child_nodes(node):
+            ctc, cdepth = tc, depth
+            if isinstance(child, ast.If):
+                test = ast.unparse(child.test)
+                if "TYPE_CHECKING" in test:
+                    ctc = True
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                cdepth = depth + 1
+            if isinstance(child, ast.Import):
+                for a in child.names:
+                    if a.name.split(".")[0] == package:
+                        out.append(_Imp(a.name, child.lineno,
+                                        depth > 0, tc))
+            elif isinstance(child, ast.ImportFrom):
+                if child.module and child.module.split(".")[0] == package \
+                        and child.level == 0:
+                    # record per alias: `from repro.core import accuracy`
+                    # depends on the SUBMODULE repro.core.accuracy (when
+                    # one exists), not on the package __init__ — the
+                    # cycle detector resolves the distinction
+                    for a in child.names:
+                        out.append(_Imp(f"{child.module}.{a.name}",
+                                        child.lineno, depth > 0, tc))
+            elif isinstance(child, ast.Call):
+                fn = child.func
+                name = ast.unparse(fn)
+                if name in ("importlib.import_module", "import_module") \
+                        and child.args \
+                        and isinstance(child.args[0], ast.Constant) \
+                        and isinstance(child.args[0].value, str) \
+                        and child.args[0].value.split(".")[0] == package:
+                    out.append(_Imp(child.args[0].value, child.lineno,
+                                    True, tc))
+            visit(child, cdepth, ctc)
+
+    visit(sf.tree, 0, False)
+    return out
+
+
+def _target_package(target: str) -> str:
+    parts = target.split(".")
+    return parts[1] if len(parts) > 1 else ""
+
+
+@register(PASS)
+def run(project: Project, config) -> List[Finding]:
+    findings: List[Finding] = []
+    used_exceptions: Set[Tuple[str, str]] = set()
+    exc_by_key = {(e.file, e.package): e for e in config.exceptions}
+    root_prefix = config.root + "/"
+
+    # ---- matrix check ------------------------------------------------
+    module_edges: Dict[str, Set[str]] = {}
+    for sf in project.files:
+        imports = _collect_imports(sf, config.package)
+        pkg = sf.package
+        if pkg and pkg not in config.layers:
+            findings.append(Finding(
+                PASS, sf.rel, 1, "<package>",
+                f"package {pkg!r} missing from layers.toml [layers] — "
+                "declare its allowed dependencies"))
+            continue
+        relfile = sf.rel[len(root_prefix):] if sf.rel.startswith(
+            root_prefix) else sf.rel
+        for imp in imports:
+            if not imp.type_checking and not imp.lazy:
+                module_edges.setdefault(sf.module, set()).add(imp.target)
+            tgt = _target_package(imp.target)
+            if imp.type_checking or not tgt or tgt == pkg:
+                continue
+            if not pkg:           # the root __init__ may re-export all
+                continue
+            if tgt in config.allowed(pkg):
+                continue
+            if imp.lazy and tgt in config.lazy_allowed(pkg):
+                continue
+            exc = exc_by_key.get((relfile, tgt))
+            if exc is not None:
+                used_exceptions.add((relfile, tgt))
+                continue
+            kind = "lazy import" if imp.lazy else "import"
+            findings.append(Finding(
+                PASS, sf.rel, imp.line, "<import>",
+                f"{kind} of {imp.target} crosses the layer matrix: "
+                f"{pkg!r} may only depend on "
+                f"{sorted(config.lazy_allowed(pkg)) or 'nothing in-repo'}"
+                " (layers.toml)"))
+
+    # ---- stale named exceptions -------------------------------------
+    for e in config.exceptions:
+        if (e.file, e.package) not in used_exceptions:
+            findings.append(Finding(
+                PASS, config.root + "/" + e.file, 1, "<stale-exception>",
+                f"layers.toml exception ({e.file} -> {e.package}) "
+                "matches no import — remove the stale entry"))
+
+    # ---- module-granularity cycle detection -------------------------
+    known = set(project.modules)
+
+    def resolve(target: str) -> Optional[str]:
+        # `from repro.pkg import name` resolves to the submodule when
+        # one exists, else to the package __init__ (re-exported name)
+        while target:
+            if target in known:
+                return target
+            if "." not in target:
+                return None
+            target = target.rsplit(".", 1)[0]
+        return None
+
+    graph: Dict[str, Set[str]] = {m: set() for m in known}
+    for src, tgts in module_edges.items():
+        for t in tgts:
+            r = resolve(t)
+            if r is not None and r != src:
+                graph[src].add(r)
+    for cycle in _sccs(graph):
+        if len(cycle) < 2:
+            continue
+        first = sorted(cycle)[0]
+        sf = project.modules[first]
+        findings.append(Finding(
+            PASS, sf.rel, 1, "<cycle>",
+            "module-level import cycle: " + " -> ".join(sorted(cycle))))
+    return findings
+
+
+def _sccs(graph: Dict[str, Set[str]]) -> List[List[str]]:
+    """Tarjan strongly-connected components (iterative)."""
+    index: Dict[str, int] = {}
+    low: Dict[str, int] = {}
+    on_stack: Set[str] = set()
+    stack: List[str] = []
+    out: List[List[str]] = []
+    counter = [0]
+
+    def strongconnect(v0: str) -> None:
+        work = [(v0, iter(sorted(graph.get(v0, ()))))]
+        index[v0] = low[v0] = counter[0]
+        counter[0] += 1
+        stack.append(v0)
+        on_stack.add(v0)
+        while work:
+            v, it = work[-1]
+            advanced = False
+            for w in it:
+                if w not in index:
+                    index[w] = low[w] = counter[0]
+                    counter[0] += 1
+                    stack.append(w)
+                    on_stack.add(w)
+                    work.append((w, iter(sorted(graph.get(w, ())))))
+                    advanced = True
+                    break
+                elif w in on_stack:
+                    low[v] = min(low[v], index[w])
+            if advanced:
+                continue
+            work.pop()
+            if low[v] == index[v]:
+                comp = []
+                while True:
+                    w = stack.pop()
+                    on_stack.discard(w)
+                    comp.append(w)
+                    if w == v:
+                        break
+                out.append(comp)
+            if work:
+                pv = work[-1][0]
+                low[pv] = min(low[pv], low[v])
+
+    for v in sorted(graph):
+        if v not in index:
+            strongconnect(v)
+    return out

@@ -1,0 +1,124 @@
+"""Units-hygiene pass: don't add seconds to milliseconds.
+
+The repo's naming convention carries units in suffixes (``*_s``,
+``*_ms``, ``*_us``, ``*_ns``, ``*_bytes``, ``*_mb``, ``*_gb``,
+``*_rps``).  Additive or comparison arithmetic between two expressions
+whose inferred units DIFFER is a finding: ``deadline_s - wait_ms`` is
+a bug no test may catch if both values are small.
+
+Multiplying/dividing by an explicit conversion constant (1e3, 1000,
+1e-3, 1e6, 1 << 20, ...) erases the operand's unit — the conversion is
+visible, so the result participates freely.  Multiplication/division
+between differently-suffixed names is NOT flagged (rates and ratios
+are legitimate).  Only expressions where BOTH sides have a confidently
+known, different unit are reported.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from tools.analyze.core import Finding, Project, qualname_at, register
+
+PASS = "units"
+
+_SUFFIXES = {
+    "_s": "s", "_ms": "ms", "_us": "us", "_ns": "ns",
+    "_bytes": "bytes", "_mb": "mb", "_gb": "gb", "_rps": "rps",
+}
+# time-like units may never mix with each other or with sizes
+_CONVERSION_CONSTANTS = {
+    1e3, 1000.0, 1e-3, 0.001, 1e6, 1e-6, 1e9, 1e-9,
+    60.0, 3600.0, 1024.0, 1 << 20, 1 << 30, float(1 << 20),
+    float(1 << 30),
+}
+
+
+def _name_unit(ident: str) -> Optional[str]:
+    for suf, unit in _SUFFIXES.items():
+        if ident.endswith(suf) and len(ident) > len(suf):
+            return unit
+    return None
+
+
+def _is_conversion_const(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant) and isinstance(node.value,
+                                                     (int, float)):
+        return float(node.value) in _CONVERSION_CONSTANTS
+    if isinstance(node, ast.BinOp) and isinstance(node.op,
+                                                  (ast.LShift, ast.Pow)):
+        return True                       # 1 << 20, 2 ** 30
+    return False
+
+
+def _unit_of(node: ast.AST) -> Optional[str]:
+    """Confidently known unit of an expression, else None."""
+    if isinstance(node, ast.Name):
+        return _name_unit(node.id)
+    if isinstance(node, ast.Attribute):
+        return _name_unit(node.attr)
+    if isinstance(node, ast.UnaryOp):
+        return _unit_of(node.operand)
+    if isinstance(node, ast.Call):
+        # min(a_ms, b_ms) / max / abs / float / round keep their unit
+        fn = node.func
+        if isinstance(fn, ast.Name) and fn.id in ("min", "max", "abs",
+                                                  "float", "round",
+                                                  "int", "sum"):
+            units = {_unit_of(a) for a in node.args
+                     if not isinstance(a, ast.Constant)}
+            units.discard(None)
+            if len(units) == 1:
+                return units.pop()
+        return None
+    if isinstance(node, ast.BinOp):
+        if isinstance(node.op, (ast.Mult, ast.Div)):
+            if _is_conversion_const(node.left) or \
+                    _is_conversion_const(node.right):
+                return None               # explicit conversion: unit erased
+            lu, ru = _unit_of(node.left), _unit_of(node.right)
+            # unit * dimensionless keeps the unit; unit * unit -> unknown
+            if lu and not ru and isinstance(node.op, ast.Mult):
+                return lu
+            if ru and not lu and isinstance(node.op, ast.Mult):
+                return ru
+            if lu and not ru and isinstance(node.op, ast.Div):
+                return lu
+            return None
+        if isinstance(node.op, (ast.Add, ast.Sub)):
+            lu, ru = _unit_of(node.left), _unit_of(node.right)
+            if lu and ru and lu == ru:
+                return lu
+            if lu and not ru:
+                return None               # mixed with unknown: give up
+            if ru and not lu:
+                return None
+            return lu                     # both equal or both None
+    return None
+
+
+@register(PASS)
+def run(project: Project, config) -> List[Finding]:
+    findings: List[Finding] = []
+    excluded = set(config.units_exclude)
+    for sf in project.files:
+        if sf.package in excluded:
+            continue
+        for node in ast.walk(sf.tree):
+            pairs = []
+            if isinstance(node, ast.BinOp) and isinstance(
+                    node.op, (ast.Add, ast.Sub)):
+                pairs = [(node.left, node.right)]
+            elif isinstance(node, ast.Compare):
+                operands = [node.left] + list(node.comparators)
+                pairs = list(zip(operands, operands[1:]))
+            for left, right in pairs:
+                lu, ru = _unit_of(left), _unit_of(right)
+                if lu and ru and lu != ru:
+                    findings.append(Finding(
+                        PASS, sf.rel, node.lineno,
+                        qualname_at(sf.tree, node),
+                        f"arithmetic mixes units {lu!r} and {ru!r} "
+                        f"({ast.unparse(node)}) — insert an explicit "
+                        "conversion constant (e.g. * 1e3)"))
+    return findings

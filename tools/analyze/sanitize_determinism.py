@@ -1,0 +1,152 @@
+"""Dynamic determinism sanitizer: seeded replays must be bit-identical.
+
+The static ``determinism`` pass bans nondeterminism *sources*; this is
+the closed-loop check that the property actually holds end-to-end: run
+the seeded chaos-testbed scenario TWICE on fresh runtimes and diff the
+resulting :class:`SimMetrics` field by field (exact equality — floats
+included; "close" is already broken).  Any divergence exits nonzero
+and names the diverging fields.
+
+The scenario comes from the chaos fuzzer's seed derivation
+(``repro.chaos.fuzz.case_from_seed``), so the replay exercises arrivals,
+domain failures, preemption drains and the full event loop — the same
+machinery every BENCH pin and chaos regression case assumes replays
+bit-identically.
+
+``--perturb`` deliberately injects a wall-clock-derived jitter into the
+backend's service times (the exact bug class the static pass bans); the
+sanitizer must then FAIL — ``tests/test_analyze.py`` pins that it does.
+
+Run: ``python -m tools.analyze.sanitize_determinism [--seed N] [--runs K]``
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+import time
+from typing import List, Optional
+
+
+def diff_metrics(a, b, path: str = "metrics") -> List[str]:
+    """Recursive exact-equality diff of two SimMetrics; returns the
+    list of diverging field paths (empty == bit-identical)."""
+    out: List[str] = []
+    if a is None or b is None:
+        if (a is None) != (b is None):
+            out.append(f"{path}: {a!r} != {b!r}")
+        return out
+    for f in dataclasses.fields(a):
+        va, vb = getattr(a, f.name), getattr(b, f.name)
+        p = f"{path}.{f.name}"
+        if dataclasses.is_dataclass(va) or dataclasses.is_dataclass(vb):
+            out.extend(diff_metrics(va, vb, p))
+        elif isinstance(va, dict):
+            if set(va) != set(vb):
+                out.append(f"{p}: key sets differ "
+                           f"({sorted(set(va) ^ set(vb))!r})")
+                continue
+            for k in va:
+                if dataclasses.is_dataclass(va[k]):
+                    out.extend(diff_metrics(va[k], vb[k], f"{p}[{k!r}]"))
+                elif va[k] != vb[k]:
+                    out.append(f"{p}[{k!r}]: {va[k]!r} != {vb[k]!r}")
+        elif isinstance(va, list):
+            if len(va) != len(vb):
+                out.append(f"{p}: length {len(va)} != {len(vb)}")
+            elif va != vb:
+                i = next(i for i, (x, y) in enumerate(zip(va, vb))
+                         if x != y)
+                out.append(f"{p}[{i}]: {va[i]!r} != {vb[i]!r}")
+        elif va != vb:
+            out.append(f"{p}: {va!r} != {vb!r}")
+    return out
+
+
+class _PerturbedBackend:
+    """Wraps a backend, adding wall-clock jitter to every service time —
+    the injected bug the sanitizer must catch."""
+
+    def __init__(self, inner):
+        self._inner = inner
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+    def service_s(self, srv, batch, now, rng):
+        base = self._inner.service_s(srv, batch, now, rng)
+        return base * (1.0 + (time.time_ns() % 997) * 1e-9)
+
+
+def run_once(seed: int, *, perturb: bool = False):
+    """One seeded chaos-testbed run on a FRESH runtime; returns its
+    SimMetrics.  The plan is cached across calls (planning determinism
+    has its own pinned tests; this checks the serving loop)."""
+    from repro.chaos.fuzz import case_from_seed
+    from repro.core.apps import get_app
+    from repro.core.milp import Planner
+    from repro.core.profiler import Profiler
+    from repro.hwspec import chaos_cluster
+    from repro.runtime import ClusterRuntime, SimBackend
+
+    case = case_from_seed(seed)
+    cluster = chaos_cluster()
+    graph = get_app("social_media")
+    key = ("plan", case.rate_rps)
+    cache = run_once.__dict__.setdefault("_cache", {})
+    if key not in cache:
+        prof = Profiler(graph, cluster=cluster)
+        planner = Planner(graph, prof, s_avail=cluster.total_units,
+                          max_tuples_per_task=32, bb_nodes=8,
+                          bb_time_s=3.0)
+        cache[key] = planner.plan(float(case.rate_rps))
+    cfg = cache[key]
+    if cfg is None:
+        raise RuntimeError(f"seed {seed}: no feasible plan at "
+                           f"{case.rate_rps} rps — pick another seed")
+    backend = SimBackend()
+    if perturb:
+        backend = _PerturbedBackend(backend)
+    rt = ClusterRuntime(graph, cfg, backend, seed=case.seed,
+                        cluster=cluster)
+    return rt.run(case.scenario())
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.analyze.sanitize_determinism",
+        description=__doc__.splitlines()[0])
+    ap.add_argument("--seed", type=int, default=3,
+                    help="chaos-fuzzer case seed (default 3)")
+    ap.add_argument("--runs", type=int, default=2,
+                    help="replay count; all must match run 1 (default 2)")
+    ap.add_argument("--perturb", action="store_true",
+                    help="inject wall-clock jitter into service times — "
+                         "the sanitizer must then fail (self-test)")
+    a = ap.parse_args(argv)
+
+    ref = run_once(a.seed, perturb=a.perturb)
+    print(f"run 1: completions={ref.completions} missed={ref.missed} "
+          f"dropped={ref.dropped} "
+          f"violation_rate={ref.violation_rate:.6f}")
+    divergences: List[str] = []
+    for i in range(2, a.runs + 1):
+        m = run_once(a.seed, perturb=a.perturb)
+        d = diff_metrics(ref, m)
+        print(f"run {i}: completions={m.completions} missed={m.missed} "
+              f"dropped={m.dropped} -> "
+              f"{'IDENTICAL' if not d else f'{len(d)} divergence(s)'}")
+        divergences.extend(d)
+    for d in divergences[:40]:
+        print(f"  DIVERGED {d}")
+    if divergences:
+        print(f"FAIL: seeded replay is not bit-identical "
+              f"({len(divergences)} diverging fields) — a wall-clock or "
+              "unseeded-RNG source leaked into the sim path")
+        return 1
+    print(f"OK: {a.runs} seeded replays bit-identical")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
