@@ -2,6 +2,18 @@
 discrete events per wall-second the shared serving loop sustains with the
 SimBackend data plane — the control-plane hot path every scenario pays.
 
+Since ISSUE 9 every scenario runs through BOTH event loops — the
+vectorized calendar loop (``fast=True``, the default) and the legacy
+per-event oracle (``fast=False``) — asserting field-exact SimMetrics
+parity on the way and recording ``speedup_vs_legacy`` per row.  The
+``saturation`` row drives the fleet past its planned rate so queues
+deepen: the legacy loop's per-event early-drop scan is O(queue depth)
+there while the fast loop's drop guards stay O(1) — the sustained-
+overload regime the event-calendar rewrite exists for (ROADMAP
+"million-user event loop").  The aggregate speedup is pinned in CI:
+``SPEEDUP_PIN`` (5x; the measured aggregate is far above — the pin is
+conservative against runner noise).
+
 Persisted as ``BENCH_runtime.json`` by ``benchmarks.run`` so later PRs
 can regress event-loop perf.
 """
@@ -13,10 +25,14 @@ from repro.core.milp import Planner
 from repro.core.profiler import Profiler
 from repro.runtime import (ClusterRuntime, FailureEvent, Scenario,
                            SimBackend)
+from repro.runtime.metrics import diff_metrics
 
 S_AVAIL = 128
 PLAN_RPS = 60.0
 DURATION_S = 30.0
+SATURATION_X = 1.5       # saturation row: 1.5x the planned-for rate
+SATURATION_S = 15.0      # shorter horizon — the legacy loop is O(n^2) here
+SPEEDUP_PIN = 5.0        # CI fails below this aggregate fast-vs-legacy ratio
 
 
 def _scenarios():
@@ -31,11 +47,15 @@ def _scenarios():
             PLAN_RPS, duration_s=DURATION_S, warmup_s=3.0,
             seed=1).with_failures(
                 FailureEvent(at_s=DURATION_S / 2, count=1)),
+        "saturation": Scenario.poisson(PLAN_RPS * SATURATION_X,
+                                       duration_s=SATURATION_S,
+                                       warmup_s=3.0),
     }
 
 
 def run(csv=print) -> Dict[str, Dict[str, float]]:
     out: Dict[str, Dict[str, float]] = {}
+    legacy_total = fast_total = 0.0
     for app in ("social_media", "traffic_analysis"):
         g = get_app(app)
         prof = Profiler(g)
@@ -45,23 +65,53 @@ def run(csv=print) -> Dict[str, Dict[str, float]]:
             csv(f"runtime,{app},ERROR=infeasible")
             continue
         for name, scn in _scenarios().items():
-            rt = ClusterRuntime(g, cfg, SimBackend(), seed=0)
+            dur = SATURATION_S if name == "saturation" else DURATION_S
+            rt = ClusterRuntime(g, cfg, SimBackend(), seed=0, fast=False)
+            t0 = time.perf_counter()
+            m_legacy = rt.run(scn)
+            wall_legacy = time.perf_counter() - t0
+            rt = ClusterRuntime(g, cfg, SimBackend(), seed=0, fast=True)
             t0 = time.perf_counter()
             m = rt.run(scn)
             wall = time.perf_counter() - t0
+            d = diff_metrics(m_legacy, m)
+            if d:
+                raise AssertionError(
+                    f"{app}/{name}: fast loop diverged from the legacy "
+                    f"oracle ({len(d)} fields): " + "; ".join(d[:5]))
+            legacy_total += wall_legacy
+            fast_total += wall
             served = m.completions + m.dropped
+            speedup = wall_legacy / max(wall, 1e-9)
             out[f"{app}/{name}"] = {
                 "wall_s": wall,
+                "legacy_wall_s": wall_legacy,
                 "completions": float(m.completions),
                 "violation_rate": m.violation_rate,
                 "requests_per_wall_s": served / max(wall, 1e-9),
-                "sim_speedup": DURATION_S / max(wall, 1e-9),
+                "legacy_requests_per_wall_s":
+                    served / max(wall_legacy, 1e-9),
+                "speedup_vs_legacy": speedup,
+                "sim_speedup": dur / max(wall, 1e-9),
             }
             csv(f"runtime,{app},{name},wall_s={wall:.3f},"
+                f"legacy_wall_s={wall_legacy:.3f},"
                 f"completions={m.completions},"
                 f"req_per_wall_s={served / max(wall, 1e-9):.0f},"
-                f"sim_speedup={DURATION_S / max(wall, 1e-9):.0f}x,"
+                f"speedup_vs_legacy={speedup:.1f}x,"
+                f"sim_speedup={dur / max(wall, 1e-9):.0f}x,"
                 f"viol%={100 * m.violation_rate:.2f}")
+    aggregate = legacy_total / max(fast_total, 1e-9)
+    out["aggregate"] = {"legacy_wall_s": legacy_total,
+                        "wall_s": fast_total,
+                        "speedup_vs_legacy": aggregate,
+                        "pin": SPEEDUP_PIN}
+    csv(f"runtime,aggregate,speedup_vs_legacy={aggregate:.1f}x,"
+        f"pin={SPEEDUP_PIN}")
+    if aggregate < SPEEDUP_PIN:
+        raise AssertionError(
+            f"event-loop speedup pin violated: fast loop is only "
+            f"{aggregate:.2f}x the legacy oracle (pin {SPEEDUP_PIN}x)")
     return out
 
 

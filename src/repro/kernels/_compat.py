@@ -1,0 +1,6 @@
+"""jax version shims shared by the Pallas kernels."""
+from jax.experimental.pallas import tpu as pltpu
+
+# renamed TPUCompilerParams -> CompilerParams across jax releases
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

@@ -82,12 +82,13 @@ class ClusterRuntime:
                  frontend=None, time_base_s: float = 0.0,
                  transition: Optional["TransitionPlan"] = None,
                  cluster: Optional["ClusterSpec"] = None,
-                 monitor=None, ladder=None, hooks=None):
+                 monitor=None, ladder=None, hooks=None,
+                 fast: bool = True):
         self._setup({"": _AppState("", graph, config, frontend)},
                     backend, seed=seed, staleness_ms=staleness_ms,
                     time_base_s=time_base_s, transition=transition,
                     cluster=cluster, monitor=monitor, ladder=ladder,
-                    hooks=hooks)
+                    hooks=hooks, fast=fast)
 
     @classmethod
     def multi(cls, apps: Mapping[str, Tuple[TaskGraph, PlanConfig]],
@@ -97,7 +98,8 @@ class ClusterRuntime:
               time_base_s: float = 0.0,
               transition: Optional["TransitionPlan"] = None,
               cluster: Optional["ClusterSpec"] = None,
-              monitor=None, ladder=None, hooks=None) -> "ClusterRuntime":
+              monitor=None, ladder=None, hooks=None,
+              fast: bool = True) -> "ClusterRuntime":
         """Serve several co-located apps on one event loop.
 
         ``apps`` maps the (non-empty) app name to that app's graph and
@@ -115,7 +117,7 @@ class ClusterRuntime:
                   backend, seed=seed, staleness_ms=staleness_ms,
                   time_base_s=time_base_s, transition=transition,
                   cluster=cluster, monitor=monitor, ladder=ladder,
-                  hooks=hooks)
+                  hooks=hooks, fast=fast)
         return rt
 
     # ------------------------------------------------------------------
@@ -124,8 +126,16 @@ class ClusterRuntime:
                staleness_ms: float, time_base_s: float,
                transition: Optional["TransitionPlan"] = None,
                cluster: Optional["ClusterSpec"] = None,
-               monitor=None, ladder=None, hooks=None):
+               monitor=None, ladder=None, hooks=None, fast: bool = True):
         self._apps = apps
+        # event-loop selection (DESIGN.md §16): the vectorized calendar
+        # loop (repro.runtime.fastloop) is the default; ``fast=False``
+        # keeps the incumbent per-event loop as the differential oracle
+        self.fast = fast
+        # bumped on EVERY fleet mutation (kills, elasticity, transitions,
+        # retire sweeps, ladder downshifts via refresh_capacity) so the
+        # fast loop's per-queue server mirrors know to rebuild
+        self._fleet_epoch = 0
         self._single = apps.get("") if list(apps) == [""] else None
         self.backend = backend if backend is not None else SimBackend()
         self.rng = np.random.default_rng(seed)
@@ -314,6 +324,7 @@ class ClusterRuntime:
                     + s.tup.cost / max(s.tup.streams, 1))
                 self.lost_capacity.add(qualify(s.app, s.tup.task))
         self.servers = [s for s in self.servers if s.idx not in dead]
+        self._fleet_epoch += 1
         self.by_task = {}
         for s in self.servers:
             self.by_task.setdefault(qualify(s.app, s.tup.task),
@@ -361,6 +372,7 @@ class ClusterRuntime:
     def refresh_capacity(self):
         """Recompute the latency model + notify the backend after an
         external actor (the degradation ladder) mutated server tuples."""
+        self._fleet_epoch += 1
         self._fastest = self._fastest_remaining()
         self.backend.on_capacity_change(self.servers)
 
@@ -384,6 +396,7 @@ class ClusterRuntime:
             self._next_idx += 1
             self.servers.append(s)
             self.by_task[task].append(s)
+        self._fleet_epoch += 1
         self._fastest = self._fastest_remaining()
         self.backend.on_capacity_change(self.servers)
 
@@ -486,6 +499,8 @@ class ClusterRuntime:
             covered += s.tup.cost / max(s.tup.streams, 1)
             stamped = True
         if stamped:
+            # retire_at stamps change dispatchability immediately
+            self._fleet_epoch += 1
             # idle preempted streams get no 'done' event to retire them
             push(handover, "retire_sweep", None)
 
@@ -525,6 +540,7 @@ class ClusterRuntime:
             st.config = cfg
             for t in st.graph.tasks:
                 self._timeout[qualify(app, t)] = cfg.lhat(t)
+        self._fleet_epoch += 1
         self._fastest = self._fastest_remaining()
         self.backend.on_capacity_change(self.servers)
 
@@ -545,6 +561,7 @@ class ClusterRuntime:
         self.servers = [s for s in self.servers if id(s) not in dead]
         for qt, peers in self.by_task.items():
             self.by_task[qt] = [s for s in peers if id(s) not in dead]
+        self._fleet_epoch += 1
         self._fastest = self._fastest_remaining()
         self.backend.on_capacity_change(self.servers)
 
@@ -570,6 +587,17 @@ class ClusterRuntime:
 
     # ------------------------------------------------------------------
     def run(self, scenario: Scenario) -> SimMetrics:
+        """Serve ``scenario`` to completion.  Dispatches to the
+        vectorized event-calendar loop (``repro.runtime.fastloop``,
+        DESIGN.md §16) unless the runtime was built with ``fast=False``,
+        which keeps the incumbent per-event loop as the differential
+        oracle — both produce field-exact-identical SimMetrics."""
+        if self.fast:
+            from repro.runtime.fastloop import run_fast
+            return run_fast(self, scenario)
+        return self._run_legacy(scenario)
+
+    def _run_legacy(self, scenario: Scenario) -> SimMetrics:
         m = SimMetrics()
         hooks = self.hooks
         # transition windows (constructor plan starts at t=0; scheduled

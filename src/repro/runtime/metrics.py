@@ -5,9 +5,10 @@ be loaded from either side of the runtime/core boundary without cycles.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass, field
-from typing import TYPE_CHECKING, Dict, List, Optional, Tuple
+from typing import TYPE_CHECKING, Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -74,7 +75,7 @@ class SimMetrics:
             sub = self.by_domain[name] = SimMetrics()
         return sub
 
-    def count_drop(self, n: int, reason: str):
+    def count_drop(self, n: int, reason: str) -> None:
         """File ``n`` fan-weighted drops under ``reason`` (and the
         aggregate ``dropped`` counter)."""
         self.dropped += n
@@ -117,6 +118,53 @@ class SimMetrics:
                 a *= self.realized_task_accuracy(graph, t)
             weighted += graph.path_fractions[p] * a
         return weighted / acc.a_max(graph)
+
+
+def diff_metrics(a: Any, b: Any, path: str = "metrics") -> List[str]:
+    """Recursive exact-equality diff of two :class:`SimMetrics`.
+
+    Returns the list of diverging field paths (empty == field-exact
+    identical — floats compared with ``==``; "close" is already a
+    determinism bug).  Dataclass-valued fields and dicts of dataclasses
+    (``by_app`` / ``by_domain``) recurse; dict comparison is
+    key-set-based (insertion order is not part of the contract), list
+    comparison is order-sensitive and names the first diverging index.
+
+    This is the shared differential oracle: the determinism sanitizer
+    (``tools.analyze.sanitize_determinism``) uses it to compare seeded
+    replays, and the runtime parity suite (``tests/test_runtime_parity``)
+    uses it to compare the vectorized event loop against the legacy one.
+    """
+    out: List[str] = []
+    if a is None or b is None:
+        if (a is None) != (b is None):
+            out.append(f"{path}: {a!r} != {b!r}")
+        return out
+    for f in dataclasses.fields(a):
+        va, vb = getattr(a, f.name), getattr(b, f.name)
+        p = f"{path}.{f.name}"
+        if dataclasses.is_dataclass(va) or dataclasses.is_dataclass(vb):
+            out.extend(diff_metrics(va, vb, p))
+        elif isinstance(va, dict):
+            if set(va) != set(vb):
+                out.append(f"{p}: key sets differ "
+                           f"({sorted(set(va) ^ set(vb))!r})")
+                continue
+            for k in va:
+                if dataclasses.is_dataclass(va[k]):
+                    out.extend(diff_metrics(va[k], vb[k], f"{p}[{k!r}]"))
+                elif va[k] != vb[k]:
+                    out.append(f"{p}[{k!r}]: {va[k]!r} != {vb[k]!r}")
+        elif isinstance(va, list):
+            if len(va) != len(vb):
+                out.append(f"{p}: length {len(va)} != {len(vb)}")
+            elif va != vb:
+                i = next(i for i, (x, y) in enumerate(zip(va, vb))
+                         if x != y)
+                out.append(f"{p}[{i}]: {va[i]!r} != {vb[i]!r}")
+        elif va != vb:
+            out.append(f"{p}: {va!r} != {vb!r}")
+    return out
 
 
 @dataclass

@@ -19,8 +19,8 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import (TYPE_CHECKING, List, Mapping, Optional, Protocol,
-                    Sequence, Tuple, runtime_checkable)
+from typing import (TYPE_CHECKING, Any, List, Mapping, Optional, Protocol,
+                    Sequence, Tuple, Union, runtime_checkable)
 
 import numpy as np
 
@@ -51,8 +51,10 @@ class PoissonArrivals:
     the compatibility shim reproduces seed-exact traces."""
     rate_rps: float
 
-    def times(self, rng, duration_s):
-        out, t = [], 0.0
+    def times(self, rng: np.random.Generator,
+              duration_s: float) -> List[float]:
+        out: List[float] = []
+        t = 0.0
         while t < duration_s:
             t += rng.exponential(1.0 / max(self.rate_rps, 1e-9))
             out.append(t)
@@ -70,11 +72,13 @@ class TraceArrivals:
     so idle (zero-rate) bins don't swallow later bins' arrivals."""
     trace: DemandTrace
 
-    def times(self, rng, duration_s):
+    def times(self, rng: np.random.Generator,
+              duration_s: float) -> List[float]:
         rps = np.asarray(self.trace.rps, float)
         n = len(rps)
         bin_s = duration_s / n
-        out, t, b = [], 0.0, 0
+        out: List[float] = []
+        t, b = 0.0, 0
         while t < duration_s:
             while b < n - 1 and t >= (b + 1) * bin_s:
                 b += 1             # catch up to the bin containing t
@@ -206,7 +210,7 @@ class Scenario:
     domain_failures: Tuple[DomainFailureEvent, ...] = ()
     preemptions: Tuple[PreemptionEvent, ...] = ()
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if (self.arrivals is None) == (not self.apps):
             raise ValueError("set exactly one of arrivals= (single-app) "
                              "or apps= (multi-app)")
@@ -217,20 +221,20 @@ class Scenario:
     # -- constructors ---------------------------------------------------
     @classmethod
     def poisson(cls, rate_rps: float, duration_s: float = 20.0,
-                warmup_s: float = 2.0, **kw) -> "Scenario":
+                warmup_s: float = 2.0, **kw: Any) -> "Scenario":
         return cls(PoissonArrivals(rate_rps), duration_s, warmup_s,
                    name=f"poisson@{rate_rps:g}rps", **kw)
 
     @classmethod
     def replay(cls, trace: DemandTrace, duration_s: float = 20.0,
-               warmup_s: float = 2.0, **kw) -> "Scenario":
+               warmup_s: float = 2.0, **kw: Any) -> "Scenario":
         return cls(TraceArrivals(trace), duration_s, warmup_s,
                    name="trace-replay", **kw)
 
     @classmethod
     def diurnal(cls, peak_rps: float, duration_s: float = 20.0,
                 warmup_s: float = 2.0, *, seed: int = 0, bins: int = 48,
-                **kw) -> "Scenario":
+                **kw: Any) -> "Scenario":
         tr = diurnal_trace(seed=seed, bins=bins).scaled_to_max(peak_rps)
         return cls(TraceArrivals(tr), duration_s, warmup_s,
                    name=f"diurnal@{peak_rps:g}rps", **kw)
@@ -239,7 +243,7 @@ class Scenario:
     def burst(cls, base_rps: float, burst_rps: float,
               duration_s: float = 20.0, warmup_s: float = 2.0, *,
               bins: int = 40, period_bins: int = 10, duty: float = 0.3,
-              **kw) -> "Scenario":
+              **kw: Any) -> "Scenario":
         tr = burst_trace(base_rps, burst_rps, bins=bins,
                          period_bins=period_bins, duty=duty)
         return cls(TraceArrivals(tr), duration_s, warmup_s,
@@ -248,7 +252,7 @@ class Scenario:
     @classmethod
     def step_change(cls, rate0_rps: float, rate1_rps: float,
                     duration_s: float = 20.0, warmup_s: float = 2.0, *,
-                    switch_frac: float = 0.5, **kw) -> "Scenario":
+                    switch_frac: float = 0.5, **kw: Any) -> "Scenario":
         """Demand steps from ``rate0`` to ``rate1`` at ``switch_frac`` of
         the run — the canonical reconfiguration workload (the plan for
         rate0 must transition to the plan for rate1 mid-traffic)."""
@@ -264,7 +268,7 @@ class Scenario:
     @classmethod
     def multi(cls, workloads: "Mapping[str, ArrivalProcess]",
               duration_s: float = 20.0, warmup_s: float = 2.0,
-              **kw) -> "Scenario":
+              **kw: Any) -> "Scenario":
         """Multi-app scenario: ``workloads`` maps app name → that app's
         independent arrival process, e.g.::
 
@@ -290,7 +294,8 @@ class Scenario:
         return dataclasses.replace(
             self, transitions=self.transitions + tuple(events))
 
-    def with_chaos(self, *events) -> "Scenario":
+    def with_chaos(self, *events: Union[DomainFailureEvent,
+                                    PreemptionEvent]) -> "Scenario":
         """Add correlated-failure / preemption events (any mix of
         :class:`DomainFailureEvent` and :class:`PreemptionEvent`)."""
         dom = tuple(e for e in events if isinstance(e, DomainFailureEvent))

@@ -69,7 +69,9 @@ class ShardingPolicy:
                 continue
             ax = tuple(a for a in ax if a not in used)
             used.update(ax)
-            out.append(ax if ax else None)
+            # bare name for a single axis: older jax PartitionSpec
+            # equality does not canonicalize ('x',) to 'x'
+            out.append(None if not ax else ax[0] if len(ax) == 1 else ax)
         return P(*out)
 
     def named_sharding(self, *logical: Optional[str]) -> Optional[NamedSharding]:

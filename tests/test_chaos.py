@@ -421,9 +421,13 @@ def test_fuzzer_deterministic():
     assert r1.completions == r2.completions
 
 
-def test_fuzzer_pins_still_break():
+@pytest.mark.parametrize("fast", [True, False],
+                         ids=["fast", "legacy"])
+def test_fuzzer_pins_still_break(fast):
     """Regression pins: the fuzzer's recorded SLO-breaking scenarios
-    must still break deterministically (>= 3 distinct cases)."""
+    must still break deterministically (>= 3 distinct cases) — on the
+    vectorized event loop AND the legacy oracle (the full 23-pin
+    fast-vs-legacy differential lives in tests/test_runtime_parity.py)."""
     with open(PINS) as f:
         pins = json.load(f)
     assert len(pins["cases"]) >= 3
@@ -431,7 +435,7 @@ def test_fuzzer_pins_still_break():
     for cid, meta in sorted(pins["cases"].items())[:3]:
         case = case_from_seed(meta["seed"])
         assert case.case_id == cid, "pin drifted from its seed"
-        res = run_case(case, threshold)
+        res = run_case(case, threshold, fast=fast)
         assert res.breaking, (
             f"pinned case {cid} no longer breaks "
             f"(vrate={res.violation_rate:.3f} <= {threshold})")

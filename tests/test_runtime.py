@@ -278,3 +278,125 @@ def test_plan_max_bisects_and_records_time(social_profiler):
     assert len(ctl.milp_times_ms) == n0 + 1     # solve time charged
     # the bisected demand must serve at least the doubling-phase demand
     assert ctl.planner.plan(1.0) is not None
+
+
+# ---------------------------------------------------------------------------
+# event-calendar invariants (property tests, ISSUE 9)
+# ---------------------------------------------------------------------------
+from _hypothesis_compat import given, settings, st  # noqa: E402
+
+
+class _Probe:
+    """Minimal Instrumentation-surface probe recording the hook event
+    stream of one run (processing-order times, queue depths, dispatch
+    targets) for invariant checks."""
+
+    def __init__(self):
+        self.times = []          # hook-call order == event processing order
+        self.arrivals = 0
+        self.queue_depths = []
+        self.dispatches = []     # (server.retire_at, now) per batch launch
+        self.drop_n = 0
+
+    def on_arrival(self, app, task, now, queue_len):
+        self.times.append(now)
+        self.arrivals += 1
+        self.queue_depths.append(queue_len)
+
+    def on_drop(self, app, task, reason, n, rt0):
+        # rt0 is the ROOT arrival time, not the processing instant —
+        # it does not join the ordering check
+        self.drop_n += n
+
+    def on_complete(self, app, root_id, latency_ms, missed, now):
+        self.times.append(now)
+
+    def on_dispatch(self, server, batch, now, service_s, queue_len):
+        self.times.append(now)
+        self.queue_depths.append(queue_len)
+        self.dispatches.append((server.retire_at, now))
+
+    def on_transition(self, now, makespan_s, emergency=False):
+        self.times.append(now)
+
+    def on_dead_units(self, dead):
+        pass
+
+    def on_ladder_level(self, level):
+        pass
+
+
+def _chain_setup():
+    """Two-task chain (deterministic multiplicity 1.0) with a batch-1
+    entry fleet and a batch-4 downstream fleet — exercises immediate
+    dispatch, batch formation, timeout polls and the drop guards while
+    keeping fan-weighted conservation exact (1 root == 1 leaf)."""
+    g = TaskGraph(
+        name="chain",
+        tasks={"t1": Task("t1", (Variant("v", "gemma-2b", accuracy=0.9),)),
+               "t2": Task("t2", (Variant("v", "gemma-2b", accuracy=0.9),))},
+        edges=[("t1", "t2")], slo_latency_ms=2500.0)
+    k1 = ("t1", "v", "1x1s1", 1)
+    k2 = ("t2", "v", "1x1s1", 4)
+    tups = {k1: TupleVar("t1", "v", "1x1s1", 1, latency_ms=40.0,
+                         throughput=25.0, cost=1, accuracy=0.9),
+            k2: TupleVar("t2", "v", "1x1s1", 4, latency_ms=160.0,
+                         throughput=25.0, cost=1, accuracy=0.9)}
+    cfg = PlanConfig(graph=g, counts={k1: 2, k2: 1}, tuples=tups,
+                     demand={"t1": 40.0, "t2": 40.0})
+    return g, cfg
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000),
+       st.floats(min_value=5.0, max_value=55.0),
+       st.sampled_from(["poisson", "burst", "diurnal"]))
+def test_event_calendar_invariants(seed, rate, kind):
+    """Fast-loop invariants on the hook event stream: events are
+    processed in non-decreasing time order, reported queue depths are
+    never negative, and conservation holds — every admitted root is
+    accounted as exactly one completion or one fan-weighted drop, with
+    ``drop_reasons`` summing to the drop total."""
+    g, cfg = _chain_setup()
+    mk = {"poisson": lambda: Scenario.poisson(rate, duration_s=6.0,
+                                              warmup_s=0.0),
+          "burst": lambda: Scenario.burst(rate * 0.4, rate * 1.6,
+                                          duration_s=6.0, warmup_s=0.0),
+          "diurnal": lambda: Scenario.diurnal(rate, duration_s=6.0,
+                                              warmup_s=0.0, seed=seed % 97)}
+    probe = _Probe()
+    rt = ClusterRuntime(g, cfg, SimBackend(), seed=seed, hooks=probe)
+    m = rt.run(mk[kind]())
+    # events never processed out of time order
+    assert all(a <= b for a, b in zip(probe.times, probe.times[1:])), \
+        "hook stream went backwards in time"
+    # queue depths never negative
+    assert all(q >= 0 for q in probe.queue_depths)
+    # conservation: submitted == completed + dropped (fan weight is
+    # exactly 1 on the deterministic chain), reasons sum to the total
+    assert probe.arrivals == m.completions + m.dropped
+    assert probe.drop_n == m.dropped
+    assert sum(m.drop_reasons.values()) == m.dropped
+    # leftover sanity: nothing remains queued after the drain window
+    assert all(len(q) == 0 for q in rt.queues.values())
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000),
+       st.floats(min_value=1.5, max_value=4.5))
+def test_retired_streams_never_dispatch_past_retire(seed, retire_at):
+    """Drain hand-over invariant: a stream stamped ``retire_at`` takes
+    no new batches past it (in-flight work may still complete)."""
+    g, cfg = _chain_setup()
+    probe = _Probe()
+    rt = ClusterRuntime(g, cfg, SimBackend(), seed=seed, hooks=probe)
+    victims = [s.idx for s in rt.servers[:2]]
+    for s in rt.servers:
+        if s.idx in victims:
+            s.retire_at = retire_at
+    rt.run(Scenario.poisson(30.0, duration_s=6.0, warmup_s=0.0))
+    assert probe.dispatches, "degenerate run: nothing dispatched"
+    for stamp, now in probe.dispatches:
+        assert stamp > now, (
+            f"retired stream dispatched at {now:.4f} >= "
+            f"retire_at {stamp:.4f}")

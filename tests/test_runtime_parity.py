@@ -1,0 +1,253 @@
+"""Differential parity harness for the vectorized event-calendar loop
+(ISSUE 9): ``ClusterRuntime(..., fast=True)`` must produce field-exact
+identical :class:`SimMetrics` to the legacy oracle loop (``fast=False``)
+on every seeded scenario family — same completions, misses, fan-weighted
+drops and drop reasons, same latency list in the same append order, same
+per-app / per-domain / transition-window sub-ledgers.
+
+The contract includes RNG draw ordering: the fast loop must consume the
+shared generator in exactly the legacy order (arrival processes, the
+SimBackend's lognormal service draws, the per-(request, successor)
+fan-out coins), so ANY divergence — a reordered event, a skipped poll
+that wasn't a no-op, a drop evaluated at the wrong instant — shows up as
+a field diff.  The diff oracle is the same recursive comparator the
+determinism sanitizer uses (``repro.runtime.metrics.diff_metrics``).
+
+Families covered: poisson / diurnal / burst / trace-replay arrivals,
+failure + capacity schedules, correlated domain failures, spot
+preemption drains, a mid-run ``TransitionEvent``, multi-app co-location,
+the ladder-monitored chaos testbed (EmergencyReplanner + ladder), and
+the full 23-case pinned SLO-breaking fuzzer corpus."""
+import json
+import os
+
+import pytest
+
+from repro.chaos import DegradationLadder, EmergencyReplanner
+from repro.chaos.fuzz import case_from_seed
+from repro.core.apps import get_app
+from repro.core.frontend import Frontend
+from repro.core.milp import Planner
+from repro.core.profiler import Profiler
+from repro.core.trace import diurnal_trace
+from repro.hwspec import chaos_cluster
+from repro.reconfig import TransitionPlanner
+from repro.runtime import (ClusterRuntime, DomainFailureEvent,
+                           FailureEvent, PoissonArrivals, PreemptionEvent,
+                           Scenario, SimBackend)
+from repro.runtime.metrics import diff_metrics
+from repro.runtime.scenario import CapacityEvent, TransitionEvent
+
+KW = dict(max_tuples_per_task=32, bb_nodes=8, bb_time_s=3.0)
+PINS = os.path.join(os.path.dirname(__file__), "chaos_pins.json")
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    cluster = chaos_cluster()
+    graph = get_app("social_media")
+    prof = Profiler(graph, cluster=cluster)
+    planner = Planner(graph, prof, s_avail=cluster.total_units, **KW)
+    return cluster, graph, prof, planner
+
+
+@pytest.fixture(scope="module")
+def cfg15(fleet):
+    _, _, _, planner = fleet
+    planner.dead_units = {}
+    cfg = planner.plan(15.0)
+    assert cfg is not None
+    return cfg
+
+
+@pytest.fixture(scope="module")
+def cfg30(fleet):
+    _, _, _, planner = fleet
+    planner.dead_units = {}
+    cfg = planner.plan(30.0)
+    assert cfg is not None
+    return cfg
+
+
+def assert_parity(fleet, cfg, scenario, seed=0, mk_extra=None):
+    """Run ``scenario`` through the legacy oracle and the fast loop on
+    fresh runtimes and assert field-exact SimMetrics equality.
+
+    ``mk_extra`` builds FRESH keyword extras (monitor / ladder / hooks)
+    per run — those objects are stateful, so sharing one instance across
+    the two runs would itself break parity."""
+    cluster, graph, _, _ = fleet
+    out = []
+    for fast in (False, True):
+        extra = mk_extra() if mk_extra is not None else {}
+        rt = ClusterRuntime(graph, cfg, SimBackend(), seed=seed,
+                            cluster=cluster, fast=fast, **extra)
+        out.append(rt.run(scenario))
+    ml, mf = out
+    d = diff_metrics(ml, mf)
+    assert not d, (f"fast loop diverged from legacy oracle on "
+                   f"{scenario.name!r} ({len(d)} fields):\n"
+                   + "\n".join(d[:20]))
+    assert mf.completions > 0, f"{scenario.name!r}: degenerate scenario"
+    return mf
+
+
+# ---------------------------------------------------------------------------
+# arrival families
+# ---------------------------------------------------------------------------
+def test_parity_poisson(fleet, cfg15):
+    assert_parity(fleet, cfg15,
+                  Scenario.poisson(12.0, duration_s=6.0, warmup_s=1.0))
+
+
+def test_parity_poisson_saturated(fleet, cfg15):
+    """Overload: deep queues exercise the O(1) drop guards against the
+    legacy per-event early-drop scan — every drop must match exactly."""
+    m = assert_parity(
+        fleet, cfg15, Scenario.poisson(45.0, duration_s=6.0, warmup_s=1.0))
+    assert m.dropped > 0, "saturation scenario never tripped a drop"
+
+
+def test_parity_diurnal(fleet, cfg15):
+    assert_parity(fleet, cfg15,
+                  Scenario.diurnal(18.0, duration_s=6.0, warmup_s=1.0,
+                                   seed=2),
+                  seed=3)
+
+
+def test_parity_burst(fleet, cfg15):
+    assert_parity(fleet, cfg15,
+                  Scenario.burst(6.0, 24.0, duration_s=6.0, warmup_s=1.0))
+
+
+def test_parity_trace_replay(fleet, cfg15):
+    tr = diurnal_trace(seed=5).scaled_to_max(14.0)
+    assert_parity(fleet, cfg15,
+                  Scenario.replay(tr, duration_s=6.0, warmup_s=1.0),
+                  seed=7)
+
+
+# ---------------------------------------------------------------------------
+# failure / capacity / chaos schedules
+# ---------------------------------------------------------------------------
+def test_parity_failures_and_capacity(fleet, cfg15):
+    sc = (Scenario.poisson(12.0, duration_s=8.0, warmup_s=1.0)
+          .with_failures(FailureEvent(at_s=2.0, task="classify", count=1))
+          .with_capacity(CapacityEvent(at_s=3.0, task="classify", delta=2),
+                         CapacityEvent(at_s=6.0, task="classify",
+                                       delta=-1)))
+    assert_parity(fleet, cfg15, sc)
+
+
+def test_parity_domain_failure(fleet, cfg15):
+    sc = (Scenario.poisson(12.0, duration_s=8.0, warmup_s=1.0)
+          .with_chaos(DomainFailureEvent(at_s=2.5, domain="r0")))
+    m = assert_parity(fleet, cfg15, sc)
+    assert "r0" in m.by_domain
+
+
+def test_parity_preemption(fleet, cfg15):
+    sc = (Scenario.poisson(12.0, duration_s=8.0, warmup_s=1.0)
+          .with_chaos(PreemptionEvent(at_s=2.0, pool="spot",
+                                      notice_s=1.5)))
+    assert_parity(fleet, cfg15, sc)
+
+
+# ---------------------------------------------------------------------------
+# live reconfiguration
+# ---------------------------------------------------------------------------
+def test_parity_midrun_transition(fleet, cfg15, cfg30):
+    cluster, graph, _, _ = fleet
+    tr = TransitionPlanner(cluster, graph).plan(cfg15, cfg30)
+    assert not tr.is_empty
+    sc = (Scenario.step_change(12.0, 28.0, duration_s=10.0, warmup_s=0.0,
+                               switch_frac=0.5)
+          .with_transitions(TransitionEvent(at_s=5.0, plan=tr)))
+    m = assert_parity(fleet, cfg15, sc)
+    assert m.window is not None       # the window ledger matched too
+
+
+# ---------------------------------------------------------------------------
+# multi-app co-location
+# ---------------------------------------------------------------------------
+def test_parity_multi_app():
+    apps = {}
+    for name in ("social_media", "traffic_analysis"):
+        g = get_app(name)
+        cfg = Planner(g, Profiler(g), s_avail=64, max_tuples_per_task=32,
+                      bb_nodes=4, bb_time_s=1.0).plan(20.0)
+        assert cfg is not None
+        apps[name] = (g, cfg)
+    sc = Scenario.multi({n: PoissonArrivals(15.0) for n in apps},
+                        duration_s=6.0, warmup_s=1.0)
+    out = []
+    for fast in (False, True):
+        rt = ClusterRuntime.multi(apps, SimBackend(), seed=1, fast=fast)
+        out.append(rt.run(sc))
+    d = diff_metrics(*out)
+    assert not d, ("multi-app fast/legacy divergence:\n"
+                   + "\n".join(d[:20]))
+    assert set(out[1].by_app) == set(apps)
+
+
+# ---------------------------------------------------------------------------
+# ladder-monitored chaos testbed
+# ---------------------------------------------------------------------------
+def test_parity_ladder_monitored_chaos(fleet, cfg30):
+    """The full protection stack mid-run: a domain failure under load
+    with the EmergencyReplanner re-planning mid-bin (through the PR-5
+    transition machinery) and the degradation ladder shedding at the
+    door.  Monitor and ladder are stateful, so each run gets fresh
+    instances."""
+    cluster, graph, prof, _ = fleet
+
+    def mk_extra():
+        epl = Planner(graph, prof, s_avail=cluster.total_units,
+                      stickiness=0.05, **KW)
+        mon = EmergencyReplanner(Frontend(graph), planner=epl,
+                                 reconfig=TransitionPlanner(cluster, graph),
+                                 planned_for_rps=30.0)
+        return {"monitor": mon, "ladder": DegradationLadder(profiler=prof)}
+
+    sc = (Scenario.poisson(30.0, duration_s=10.0, warmup_s=1.0)
+          .with_chaos(DomainFailureEvent(at_s=3.0, domain="r0")))
+    assert_parity(fleet, cfg30, sc, mk_extra=mk_extra)
+
+
+# ---------------------------------------------------------------------------
+# the pinned SLO-breaking fuzzer corpus — all 23 cases
+# ---------------------------------------------------------------------------
+def _pin_cases():
+    with open(PINS) as f:
+        pins = json.load(f)
+    return [case_from_seed(meta["seed"])
+            for _, meta in sorted(pins["cases"].items())]
+
+
+def test_parity_all_chaos_pins(fleet):
+    """Every pinned SLO-breaking fuzzer case replays field-exact
+    identically on the fast loop — the chaos regression corpus gates
+    the rewrite (ISSUE 9 satellite)."""
+    cluster, graph, _, planner = fleet
+    cases = _pin_cases()
+    assert len(cases) >= 20, f"pin corpus shrank: {len(cases)}"
+    plans = {}
+    checked = 0
+    for case in cases:
+        if case.rate_rps not in plans:
+            planner.dead_units = {}
+            plans[case.rate_rps] = planner.plan(float(case.rate_rps))
+        cfg = plans[case.rate_rps]
+        if cfg is None:       # infeasible demand: nothing to replay
+            continue
+        sc = case.scenario()
+        out = []
+        for fast in (False, True):
+            rt = ClusterRuntime(graph, cfg, SimBackend(), seed=case.seed,
+                                cluster=cluster, fast=fast)
+            out.append(rt.run(sc))
+        d = diff_metrics(*out)
+        assert not d, (f"pin {case.case_id} diverged ({len(d)} fields):\n"
+                       + "\n".join(d[:20]))
+        checked += 1
+    assert checked >= 20, f"only {checked} pins replayed"

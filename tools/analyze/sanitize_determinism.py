@@ -17,50 +17,27 @@ bit-identically.
 backend's service times (the exact bug class the static pass bans); the
 sanitizer must then FAIL — ``tests/test_analyze.py`` pins that it does.
 
-Run: ``python -m tools.analyze.sanitize_determinism [--seed N] [--runs K]``
+The sanitizer covers BOTH event loops: ``--mode fast`` replays the
+vectorized calendar loop, ``--mode legacy`` the incumbent, and the
+default ``--mode both`` replays each AND cross-diffs fast against
+legacy — the same differential-parity contract ``tests/
+test_runtime_parity.py`` pins, enforced here on every CI run.
+
+Run: ``python -m tools.analyze.sanitize_determinism [--seed N]
+[--runs K] [--mode fast|legacy|both]``
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import sys
 import time
 from typing import List, Optional
 
+# the recursive SimMetrics diff lives with the metrics themselves so
+# the parity test suite and this sanitizer share one oracle
+from repro.runtime.metrics import diff_metrics
 
-def diff_metrics(a, b, path: str = "metrics") -> List[str]:
-    """Recursive exact-equality diff of two SimMetrics; returns the
-    list of diverging field paths (empty == bit-identical)."""
-    out: List[str] = []
-    if a is None or b is None:
-        if (a is None) != (b is None):
-            out.append(f"{path}: {a!r} != {b!r}")
-        return out
-    for f in dataclasses.fields(a):
-        va, vb = getattr(a, f.name), getattr(b, f.name)
-        p = f"{path}.{f.name}"
-        if dataclasses.is_dataclass(va) or dataclasses.is_dataclass(vb):
-            out.extend(diff_metrics(va, vb, p))
-        elif isinstance(va, dict):
-            if set(va) != set(vb):
-                out.append(f"{p}: key sets differ "
-                           f"({sorted(set(va) ^ set(vb))!r})")
-                continue
-            for k in va:
-                if dataclasses.is_dataclass(va[k]):
-                    out.extend(diff_metrics(va[k], vb[k], f"{p}[{k!r}]"))
-                elif va[k] != vb[k]:
-                    out.append(f"{p}[{k!r}]: {va[k]!r} != {vb[k]!r}")
-        elif isinstance(va, list):
-            if len(va) != len(vb):
-                out.append(f"{p}: length {len(va)} != {len(vb)}")
-            elif va != vb:
-                i = next(i for i, (x, y) in enumerate(zip(va, vb))
-                         if x != y)
-                out.append(f"{p}[{i}]: {va[i]!r} != {vb[i]!r}")
-        elif va != vb:
-            out.append(f"{p}: {va!r} != {vb!r}")
-    return out
+__all__ = ["diff_metrics", "run_once", "main"]
 
 
 class _PerturbedBackend:
@@ -78,10 +55,12 @@ class _PerturbedBackend:
         return base * (1.0 + (time.time_ns() % 997) * 1e-9)
 
 
-def run_once(seed: int, *, perturb: bool = False):
+def run_once(seed: int, *, perturb: bool = False, fast: bool = True):
     """One seeded chaos-testbed run on a FRESH runtime; returns its
-    SimMetrics.  The plan is cached across calls (planning determinism
-    has its own pinned tests; this checks the serving loop)."""
+    SimMetrics.  ``fast`` selects the vectorized event loop vs the
+    legacy oracle.  The plan is cached across calls (planning
+    determinism has its own pinned tests; this checks the serving
+    loop)."""
     from repro.chaos.fuzz import case_from_seed
     from repro.core.apps import get_app
     from repro.core.milp import Planner
@@ -108,7 +87,7 @@ def run_once(seed: int, *, perturb: bool = False):
     if perturb:
         backend = _PerturbedBackend(backend)
     rt = ClusterRuntime(graph, cfg, backend, seed=case.seed,
-                        cluster=cluster)
+                        cluster=cluster, fast=fast)
     return rt.run(case.scenario())
 
 
@@ -119,22 +98,41 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--seed", type=int, default=3,
                     help="chaos-fuzzer case seed (default 3)")
     ap.add_argument("--runs", type=int, default=2,
-                    help="replay count; all must match run 1 (default 2)")
+                    help="replay count per mode; all must match run 1 "
+                         "(default 2)")
+    ap.add_argument("--mode", choices=("fast", "legacy", "both"),
+                    default="both",
+                    help="event loop(s) to replay; 'both' additionally "
+                         "cross-diffs fast vs legacy (default both)")
     ap.add_argument("--perturb", action="store_true",
                     help="inject wall-clock jitter into service times — "
                          "the sanitizer must then fail (self-test)")
     a = ap.parse_args(argv)
 
-    ref = run_once(a.seed, perturb=a.perturb)
-    print(f"run 1: completions={ref.completions} missed={ref.missed} "
-          f"dropped={ref.dropped} "
-          f"violation_rate={ref.violation_rate:.6f}")
+    modes = (("fast", True), ("legacy", False)) if a.mode == "both" \
+        else ((a.mode, a.mode == "fast"),)
     divergences: List[str] = []
-    for i in range(2, a.runs + 1):
-        m = run_once(a.seed, perturb=a.perturb)
-        d = diff_metrics(ref, m)
-        print(f"run {i}: completions={m.completions} missed={m.missed} "
-              f"dropped={m.dropped} -> "
+    refs = {}
+    for mode, fast in modes:
+        ref = run_once(a.seed, perturb=a.perturb, fast=fast)
+        refs[mode] = ref
+        print(f"[{mode}] run 1: completions={ref.completions} "
+              f"missed={ref.missed} dropped={ref.dropped} "
+              f"violation_rate={ref.violation_rate:.6f}")
+        for i in range(2, a.runs + 1):
+            m = run_once(a.seed, perturb=a.perturb, fast=fast)
+            d = diff_metrics(ref, m)
+            print(f"[{mode}] run {i}: completions={m.completions} "
+                  f"missed={m.missed} dropped={m.dropped} -> "
+                  f"{'IDENTICAL' if not d else f'{len(d)} divergence(s)'}")
+            divergences.extend(d)
+    if a.mode == "both" and not a.perturb:
+        # the differential-parity contract: the vectorized loop must be
+        # field-exact identical to the legacy oracle (skipped under
+        # --perturb — the injected jitter makes the two runs disagree
+        # by design, and the per-mode replays already caught it)
+        d = diff_metrics(refs["fast"], refs["legacy"])
+        print(f"fast vs legacy -> "
               f"{'IDENTICAL' if not d else f'{len(d)} divergence(s)'}")
         divergences.extend(d)
     for d in divergences[:40]:
@@ -142,9 +140,11 @@ def main(argv: Optional[List[str]] = None) -> int:
     if divergences:
         print(f"FAIL: seeded replay is not bit-identical "
               f"({len(divergences)} diverging fields) — a wall-clock or "
-              "unseeded-RNG source leaked into the sim path")
+              "unseeded-RNG source leaked into the sim path, or the "
+              "fast loop diverged from the legacy oracle")
         return 1
-    print(f"OK: {a.runs} seeded replays bit-identical")
+    n_runs = a.runs * len(modes)
+    print(f"OK: {n_runs} seeded replays bit-identical")
     return 0
 
 
