@@ -94,9 +94,9 @@ class _CountingHooks(Instrumentation):
         self.calls["complete"] += 1
         super().on_complete(*a)
 
-    def on_drop(self, *a):
+    def on_drop(self, *a, **kw):
         self.calls["drop"] += 1
-        super().on_drop(*a)
+        super().on_drop(*a, **kw)
 
 
 def _run_once(g, cfg, scn, hooks):

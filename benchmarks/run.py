@@ -17,7 +17,7 @@ from benchmarks import (bench_capacity, bench_chaos, bench_configs,
                         bench_empirical, bench_gateway, bench_hetero,
                         bench_kernels, bench_milp, bench_multiapp,
                         bench_perf, bench_reconfig, bench_roofline,
-                        bench_runtime)
+                        bench_runtime, bench_slo)
 
 ALL = {
     "kernels": bench_kernels,        # kernel vs oracle + TPU roofline
@@ -33,6 +33,7 @@ ALL = {
     "reconfig": bench_reconfig,      # staged transitions vs atomic swap
     "chaos": bench_chaos,            # failure storms + degradation ladder
     "gateway": bench_gateway,        # live front door + obs overhead pin
+    "slo": bench_slo,                # burn-rate lead time + ledger overhead
 }
 
 

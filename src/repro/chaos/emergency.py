@@ -69,6 +69,8 @@ class EmergencyReplanner:
     _last_req: int = 0
     _last_viol: int = 0
     _staging_until: float = -math.inf
+    # dead-capacity view of the LAST successful emergency solve (audit)
+    _last_dead_seen: Dict[str, int] = field(default_factory=dict)
 
     def begin_run(self, runtime):
         """Runtime handshake at t=0: reset the interval snapshots."""
@@ -112,6 +114,12 @@ class EmergencyReplanner:
             return None
         plan = self._replan(runtime, now)
         if plan is not None:
+            # flight recorder (DESIGN.md §17): record WHY this mid-bin
+            # rescue happened — guarded getattr keeps bare stub hooks
+            # (spike/ladder-only probes) working unchanged
+            cb = getattr(self.hooks, "on_emergency_replan", None)
+            if cb is not None:
+                cb(now, dead=dict(self._last_dead_seen), plan=plan)
             return plan
         if ladder is not None:
             ladder.escalate(runtime, now)       # infeasible: shed
@@ -135,4 +143,5 @@ class EmergencyReplanner:
             return None
         self._staging_until = now + tr.makespan_s
         self.replans += 1
+        self._last_dead_seen = dead
         return tr

@@ -155,6 +155,10 @@ class Controller:
     # observability (DESIGN.md §14): a repro.obs.Instrumentation shared
     # with every bin's runtime; the controller adds re-plan latency
     hooks: Optional[object] = None
+    # SLO error-budget feedback (DESIGN.md §17): when True, a firing
+    # page-severity burn-rate alert on the hooks' SloPlane forces a
+    # re-plan even if the frontend's drift/violation trigger is quiet
+    slo_replan: bool = False
 
     def __post_init__(self):
         if self.cluster is None:
@@ -216,6 +220,16 @@ class Controller:
                               monitor=self.monitor, ladder=self.ladder,
                               hooks=self.hooks)
 
+    def _slo_paging(self) -> bool:
+        """True when the hooks' SLO plane has a page-severity alert firing
+        for this controller's app (any app if the frontend is unnamed)."""
+        slo = getattr(self.hooks, "slo", None) if self.hooks is not None \
+            else None
+        if slo is None:
+            return False
+        app = getattr(self.frontend, "app", "") or None
+        return bool(slo.paging(app))
+
     # ------------------------------------------------------------------
     def step(self, bin_idx: int, demand_actual: float, *,
              sim_seconds: float = 12.0, seed: int = 0,
@@ -242,12 +256,21 @@ class Controller:
         milp_nodes = 0
         # the frontend owns the ONE drift/violation re-plan trigger; the
         # controller feeds it the predicted demand and last bin's outcome
-        need = (self._config is None
-                or self.frontend.should_replan(
-                    self._planned_for,
-                    threshold=self.replan_threshold,
-                    violation_trigger=self.violation_trigger,
-                    demand_rps=predicted))
+        frontend_fired = (self._config is not None
+                          and self.frontend.should_replan(
+                              self._planned_for,
+                              threshold=self.replan_threshold,
+                              violation_trigger=self.violation_trigger,
+                              demand_rps=predicted))
+        # opt-in extra trigger: a firing page-severity burn-rate alert
+        # (SloPlane on the shared hooks) forces a re-plan mid-incident
+        # even when the bin-boundary drift/violation signals are quiet
+        alert_fired = (not frontend_fired and self._config is not None
+                       and self.slo_replan and self._slo_paging())
+        need = self._config is None or frontend_fired or alert_fired
+        trigger = ("cold" if self._config is None
+                   else "frontend" if frontend_fired
+                   else "slo_alert" if alert_fired else "")
         self.frontend.reset_bin()   # the runtime records this bin's outcome
         # dead_units shrinks each named pool's budget inside the planner
         # (Planner.pool_budgets); only the unattributed dead_chips path
@@ -286,7 +309,11 @@ class Controller:
             milp_nodes = self.planner.stats.nodes - nodes0
             self.milp_times_ms.append(milp_ms)
             if self.hooks is not None:
-                self.hooks.on_replan(milp_ms / 1e3, warm_replan)
+                self.hooks.on_replan(
+                    milp_ms / 1e3, warm_replan,
+                    now=bin_idx * self.frontend.bin_seconds,
+                    app=getattr(self.frontend, "app", ""),
+                    trigger=trigger, demand_rps=predicted)
 
         # live reconfiguration: diff the incumbent against the new plan
         # and charge the staged transition to this bin's serving window
@@ -514,6 +541,9 @@ class MultiAppController:
     fbar_ewma: float = 0.3
     # observability (DESIGN.md §14), shared with every bin's runtime
     hooks: Optional[object] = None
+    # SLO error-budget feedback (DESIGN.md §17): firing page-severity
+    # burn-rate alerts force a JOINT re-plan (mirrors Controller)
+    slo_replan: bool = False
 
     def __post_init__(self):
         if set(self.graphs) != set(self.profilers):
@@ -576,12 +606,22 @@ class MultiAppController:
 
         # ANY app's trigger forces a JOINT re-plan: the solve re-divides
         # the shared pools across all apps, not just the one that fired
-        need = (self._plan is None
-                or any(self.frontends[n].should_replan(
-                    self._planned_for.get(n, -1.0),
-                    threshold=self.replan_threshold,
-                    violation_trigger=self.violation_trigger,
-                    demand_rps=predicted[n]) for n in self.graphs))
+        frontend_fired = (self._plan is not None
+                          and any(self.frontends[n].should_replan(
+                              self._planned_for.get(n, -1.0),
+                              threshold=self.replan_threshold,
+                              violation_trigger=self.violation_trigger,
+                              demand_rps=predicted[n])
+                              for n in self.graphs))
+        slo = getattr(self.hooks, "slo", None) if self.hooks is not None \
+            else None
+        alert_fired = (not frontend_fired and self._plan is not None
+                       and self.slo_replan and slo is not None
+                       and any(slo.paging(n) for n in self.graphs))
+        need = self._plan is None or frontend_fired or alert_fired
+        trigger = ("cold" if self._plan is None
+                   else "frontend" if frontend_fired
+                   else "slo_alert" if alert_fired else "")
         for fe in self.frontends.values():
             fe.reset_bin()
         replanned = False
@@ -622,7 +662,14 @@ class MultiAppController:
             milp_nodes = self.planner.stats.nodes - nodes0
             self.milp_times_ms.append(milp_ms)
             if self.hooks is not None:
-                self.hooks.on_replan(milp_ms / 1e3, warm_replan)
+                bin_seconds = next(
+                    iter(self.frontends.values())).bin_seconds
+                self.hooks.on_replan(
+                    milp_ms / 1e3, warm_replan,
+                    now=bin_idx * bin_seconds,
+                    app=",".join(sorted(self.graphs)),
+                    trigger=trigger,
+                    demand_rps=sum(predicted.values()))
 
         transition: Optional["TransitionPlan"] = None
         if (self.reconfig is not None and replanned

@@ -20,7 +20,16 @@ Admission control literally reuses the chaos ladder's level-1 logic:
 a :class:`~repro.chaos.degrade.DegradationLadder` held at level >= 1
 gates every submit against the SLO-feasible entry-queue depth
 (``_entry_cap``), and the gateway duck-types the runtime attributes the
-ladder reads (``queues``, ``by_task``, ``_apps``, ``rng``).
+ladder reads (``queues``, ``by_task``, ``_apps``, ``rng``).  Two more
+door policies stack in front of it (DESIGN.md §17):
+
+* **Per-app rps quotas** — an optional token bucket per app
+  (``quotas=``) refuses arrivals beyond a contracted rate with reason
+  ``"quota"``, BEFORE the ladder's load-dependent gate: a noisy
+  neighbour's excess is refused even when the cluster has headroom.
+* **Retry-on-drop** — with ``retry_drops=True`` a queued hop that the
+  early-drop scan sheds (deadline still feasible) is resubmitted ONCE
+  at the back of its queue instead of failing the root request.
 """
 from __future__ import annotations
 
@@ -29,7 +38,7 @@ import itertools
 import math
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Mapping, Optional, Tuple
+from typing import Any, Dict, List, Mapping, Optional, Set, Tuple
 
 import numpy as np
 
@@ -51,12 +60,30 @@ _MIN_WAIT_S = 0.001
 
 
 class AdmissionRejected(Exception):
-    """Submit refused at the door (ladder admission / shed)."""
+    """Submit refused at the door (quota / ladder admission / shed)."""
 
-    def __init__(self, app: str, reason: str):
+    def __init__(self, app: str, reason: str) -> None:
         super().__init__(f"{app}: {reason}")
         self.app = app
         self.reason = reason
+
+
+@dataclass
+class _TokenBucket:
+    """Per-app rps quota: ``rate`` tokens/s, up to ``burst`` banked."""
+    rate: float
+    burst: float
+    tokens: float = 0.0
+    t_last: float = 0.0
+
+    def take(self, now: float) -> bool:
+        self.tokens = min(self.burst,
+                          self.tokens + (now - self.t_last) * self.rate)
+        self.t_last = now
+        if self.tokens < 1.0:
+            return False
+        self.tokens -= 1.0
+        return True
 
 
 @dataclass
@@ -71,6 +98,8 @@ class GatewayRequest:
     outstanding: int = 1
     completed: int = 0
     dropped: int = 0
+    retries: int = 0
+    retry_ok: int = 0
     finished_s: float = math.nan
     outcome: Optional[dict] = None
 
@@ -83,7 +112,8 @@ class GatewayRequest:
             "latency_ms": lat_ms,
             "deadline_met": (self.dropped == 0
                              and now <= self.deadline_s + 1e-9),
-            "completions": self.completed, "dropped": self.dropped}
+            "completions": self.completed, "dropped": self.dropped,
+            "retries": self.retries, "retry_ok": self.retry_ok}
         self.events.put_nowait(self.outcome)
         self.done.set()
         return self.outcome
@@ -95,8 +125,11 @@ class AsyncGateway:
     def __init__(self, apps: Mapping[str, Tuple[TaskGraph, PlanConfig]],
                  backend: Optional[ExecutionBackend] = None, *,
                  seed: int = 0, staleness_ms: float = 20.0,
-                 time_scale: float = 1.0, hooks=None,
-                 ladder: Optional[DegradationLadder] = None):
+                 time_scale: float = 1.0, hooks: Any = None,
+                 ladder: Optional[DegradationLadder] = None,
+                 quotas: Optional[Mapping[str, float]] = None,
+                 quota_burst: float = 10.0,
+                 retry_drops: bool = False) -> None:
         if not apps:
             raise ValueError("need at least one app")
         self._apps: Dict[str, _AppState] = {
@@ -111,6 +144,16 @@ class AsyncGateway:
         # level 1 it refuses arrivals beyond the SLO-feasible queue depth
         self.ladder = ladder if ladder is not None \
             else DegradationLadder(level=1)
+        unknown = set(quotas or ()) - set(self._apps)
+        if unknown:
+            raise ValueError(f"quota for unknown app(s) {sorted(unknown)}")
+        # per-app contracted rps: buckets start full (one burst banked)
+        self._quota: Dict[str, _TokenBucket] = {
+            name: _TokenBucket(rate=float(rps), burst=float(quota_burst),
+                               tokens=float(quota_burst))
+            for name, rps in (quotas or {}).items()}
+        self.retry_drops = bool(retry_drops)
+        self._retried: Set[int] = set()
         self.servers: List[Server] = []
         for name, st in self._apps.items():
             for tup, m in st.config.instances():
@@ -192,7 +235,7 @@ class AsyncGateway:
     # -- intake --------------------------------------------------------
     async def submit(self, app: str) -> GatewayRequest:
         """Admit one request for ``app``; raises
-        :class:`AdmissionRejected` when the ladder refuses it."""
+        :class:`AdmissionRejected` when the quota or ladder refuses it."""
         st = self._apps.get(app)
         if st is None:
             raise KeyError(f"unknown app {app!r} "
@@ -200,6 +243,13 @@ class AsyncGateway:
         now = self.now()
         entry = st.graph.entry
         qt = qualify(app, entry)
+        # contracted-rate quota FIRST: independent of cluster load, so a
+        # noisy neighbour is refused even when the ladder would admit it
+        bucket = self._quota.get(app)
+        if bucket is not None and not bucket.take(now):
+            if self.hooks is not None:
+                self.hooks.on_admission_reject(app, "quota", now)
+            raise AdmissionRejected(app, "quota")
         reason = self.ladder.gate(self, qt, now)
         if reason is not None:
             if self.hooks is not None:
@@ -262,7 +312,9 @@ class AsyncGateway:
             else:
                 rkey = ("deadline" if reason == "deadline_unreachable"
                         else reason)
-                self._drop(req, qt, rkey, now)
+                retry = self._drop(req, qt, rkey, now)
+                if retry is not None:
+                    keep.append(retry)
         self.queues[qt] = keep
 
     def _try_launch(self, qt: str, now: float) -> None:
@@ -290,7 +342,8 @@ class AsyncGateway:
             asyncio.get_running_loop().create_task(
                 self._serve(srv, qt, batch, service))
 
-    async def _serve(self, srv: Server, qt: str, batch, service: float):
+    async def _serve(self, srv: Server, qt: str,
+                     batch: List[QueuedRequest], service: float) -> None:
         await asyncio.sleep(service * self.time_scale)
         now = self.now()
         srv.busy_until = now
@@ -298,10 +351,17 @@ class AsyncGateway:
             self._complete_hop(req, srv, now)
         self._wake[qt].set()
 
-    def _complete_hop(self, req: QueuedRequest, srv: Server, now: float):
+    def _complete_hop(self, req: QueuedRequest, srv: Server,
+                      now: float) -> None:
         app, task = srv.app, srv.tup.task
         g = self._apps[app].graph
         gr = self._roots.get(req.root_id)
+        if req.req_id in self._retried:        # the second chance paid off
+            self._retried.discard(req.req_id)
+            if gr is not None:
+                gr.retry_ok += 1
+            if self.hooks is not None:
+                self.hooks.on_retry_success(app, now, root_id=req.root_id)
         if gr is not None:
             gr.events.put_nowait({
                 "event": "hop", "root_id": req.root_id, "task": task,
@@ -340,13 +400,32 @@ class AsyncGateway:
                 self._roots.pop(req.root_id, None)
 
     def _drop(self, req: QueuedRequest, qt: str, reason: str,
-              now: float) -> None:
+              now: float) -> Optional[QueuedRequest]:
+        """Shed one queued hop.  With ``retry_drops`` and deadline budget
+        left, the FIRST shed of a hop resubmits it instead (returned for
+        the caller's keep-list); admission refusals never reach here, so
+        only genuine queue drops are retried."""
         app, task = split_qualified(qt)
-        if self.hooks is not None:
-            self.hooks.on_drop(app, task, reason, 1, now)
         gr = self._roots.get(req.root_id)
+        if (self.retry_drops and gr is not None
+                and req.req_id not in self._retried
+                and now < req.deadline - 1e-9):
+            self._retried.add(req.req_id)
+            gr.retries += 1
+            if self.hooks is not None:
+                self.hooks.on_retry(app, now, root_id=req.root_id)
+            gr.events.put_nowait({
+                "event": "retry", "root_id": req.root_id, "task": task,
+                "reason": reason, "t": now})
+            # re-enqueue from 'now': staleness restarts, deadline keeps
+            return QueuedRequest(req.req_id, req.root_id, qt, now,
+                                 req.deadline, req.path_done)
+        self._retried.discard(req.req_id)
+        if self.hooks is not None:
+            self.hooks.on_drop(app, task, reason, 1, now,
+                               root_id=req.root_id)
         if gr is None:
-            return
+            return None
         gr.dropped += 1
         gr.outstanding -= 1
         gr.events.put_nowait({
@@ -355,6 +434,7 @@ class AsyncGateway:
         if gr.outstanding <= 0:
             gr._finalize(now)
             self._roots.pop(req.root_id, None)
+        return None
 
     # -- introspection -------------------------------------------------
     def stats(self) -> dict:

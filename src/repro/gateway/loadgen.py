@@ -25,7 +25,7 @@ import asyncio
 import json
 import time
 from dataclasses import dataclass, field
-from typing import Awaitable, Callable, Dict, List, Mapping
+from typing import Any, Awaitable, Callable, Dict, List, Mapping
 from urllib.parse import urlsplit
 
 import numpy as np
@@ -44,7 +44,11 @@ class _AppStats:
     rejected: int = 0
     errors: int = 0
     deadline_met: int = 0
-    latencies_ms: List[float] = field(default_factory=list)
+    retried: int = 0          # hops resubmitted by the gateway's
+    retry_ok: int = 0         # retry-on-drop door policy (informational:
+    latencies_ms: List[float] = field(default_factory=list)   # not in
+    # the ok+dropped+rejected == submitted invariant, which holds
+    # unchanged — a retried hop still resolves to exactly one outcome)
 
     def to_dict(self, wall_s: float) -> dict:
         lat = sorted(self.latencies_ms)
@@ -58,6 +62,7 @@ class _AppStats:
             "dropped": self.dropped, "rejected": self.rejected,
             "errors": self.errors,
             "deadline_met": self.deadline_met,
+            "retried": self.retried, "retry_ok": self.retry_ok,
             "attainment": self.deadline_met / done if done else 0.0,
             "p50_ms": pct(0.50), "p99_ms": pct(0.99),
             "achieved_rps": done / wall_s if wall_s > 0 else 0.0,
@@ -81,6 +86,8 @@ class LoadReport:
             tot.rejected += s.rejected
             tot.errors += s.errors
             tot.deadline_met += s.deadline_met
+            tot.retried += s.retried
+            tot.retry_ok += s.retry_ok
             tot.latencies_ms.extend(s.latencies_ms)
         return {"wall_s": self.wall_s, "apps": apps,
                 "total": tot.to_dict(self.wall_s)}
@@ -88,6 +95,8 @@ class LoadReport:
 
 def _account(st: _AppStats, outcome: dict) -> None:
     status = outcome.get("status")
+    st.retried += int(outcome.get("retries", 0) or 0)
+    st.retry_ok += int(outcome.get("retry_ok", 0) or 0)
     if status == "ok":
         st.ok += 1
         st.latencies_ms.append(float(outcome.get("latency_ms", 0.0)))
@@ -161,7 +170,7 @@ async def closed_loop(submit: Submit, workers: Mapping[str, int],
 
 
 # ----------------------------------------------------------------------
-def direct_submitter(gateway) -> Submit:
+def direct_submitter(gateway: Any) -> Submit:
     """Submit straight into an in-process AsyncGateway."""
     from repro.gateway.core import AdmissionRejected
 
@@ -171,7 +180,7 @@ def direct_submitter(gateway) -> Submit:
         except AdmissionRejected as e:
             return {"status": "rejected", "reason": e.reason}
         await gr.done.wait()
-        return gr.outcome
+        return dict(gr.outcome or {})
 
     return submit
 
@@ -210,7 +219,7 @@ def http_submitter(url: str) -> Submit:
 
 
 # ----------------------------------------------------------------------
-async def _amain(args) -> None:
+async def _amain(args: argparse.Namespace) -> None:
     apps = args.apps.split(",")
     submit = http_submitter(args.url)
     if args.closed > 0:

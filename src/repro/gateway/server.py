@@ -14,6 +14,11 @@ Routes:
   the gateway's :class:`~repro.obs.metrics.MetricsRegistry`.
 - ``GET /trace``                      — Chrome-trace JSON from the
   per-request :class:`~repro.obs.tracing.Tracer` (open in Perfetto).
+- ``GET /alerts``                     — the SLO error-budget plane's
+  burn-rate alert state as JSON (DESIGN.md §17).
+- ``GET /audit``                      — the control-plane flight
+  recorder as NDJSON; filter with ``?app=&kind=&root_id=&t0=&t1=``,
+  or ``?explain=<root_id>`` for one request's full decision chain.
 - ``GET /healthz``                    — liveness + fleet stats.
 
 ``python -m repro.gateway.server`` boots a demo two-app deployment
@@ -25,7 +30,7 @@ from __future__ import annotations
 import argparse
 import asyncio
 import json
-from typing import Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 from urllib.parse import parse_qs, urlsplit
 
 from repro.gateway.core import AdmissionRejected, AsyncGateway
@@ -37,7 +42,7 @@ _MAX_HEADER = 64 * 1024
 
 
 class _HTTPError(Exception):
-    def __init__(self, status: int, msg: str):
+    def __init__(self, status: int, msg: str) -> None:
         super().__init__(msg)
         self.status = status
         self.msg = msg
@@ -52,7 +57,7 @@ class GatewayHTTPServer:
     """One :class:`AsyncGateway` behind an asyncio socket server."""
 
     def __init__(self, gateway: AsyncGateway, hooks: Instrumentation,
-                 host: str = "127.0.0.1", port: int = 0):
+                 host: str = "127.0.0.1", port: int = 0) -> None:
         self.gateway = gateway
         self.hooks = hooks
         self.host = host
@@ -115,7 +120,7 @@ class GatewayHTTPServer:
             except (ConnectionError, OSError):
                 pass
 
-    async def _read_request(self, reader) -> Optional[
+    async def _read_request(self, reader: asyncio.StreamReader) -> Optional[
             Tuple[str, str, Dict[str, str], bytes]]:
         try:
             head = await reader.readuntil(b"\r\n\r\n")
@@ -128,7 +133,7 @@ class GatewayHTTPServer:
         if len(parts) != 3:
             raise _HTTPError(400, f"bad request line: {lines[0]!r}")
         method, target, _version = parts
-        headers = {}
+        headers: Dict[str, str] = {}
         for ln in lines[1:]:
             if not ln:
                 continue
@@ -140,7 +145,7 @@ class GatewayHTTPServer:
 
     # -- routing --------------------------------------------------------
     async def _route(self, method: str, target: str, body: bytes,
-                     writer, keep: bool) -> None:
+                     writer: asyncio.StreamWriter, keep: bool) -> None:
         url = urlsplit(target)
         path = url.path.rstrip("/") or "/"
         query = parse_qs(url.query)
@@ -156,6 +161,36 @@ class GatewayHTTPServer:
             if tr is None:
                 raise _HTTPError(404, "tracing disabled")
             self._respond(writer, 200, tr.chrome_trace(), keep)
+        elif path == "/alerts" and method == "GET":
+            slo = self.hooks.slo
+            if slo is None:
+                self._respond(writer, 200,
+                              {"alerts": [], "rules": [], "budgets": {}},
+                              keep)
+            else:
+                self._respond(writer, 200,
+                              slo.alerts_json(self.gateway.now()), keep)
+        elif path == "/audit" and method == "GET":
+            audit = self.hooks.audit
+            if audit is None:
+                raise _HTTPError(404, "audit log disabled")
+            explain = query.get("explain", [None])[0]
+            if explain is not None:
+                events = audit.explain(int(explain))
+            else:
+                t0 = query.get("t0", [None])[0]
+                t1 = query.get("t1", [None])[0]
+                rr = query.get("root_id", [None])[0]
+                events = audit.query(
+                    app=query.get("app", [None])[0],
+                    kind=query.get("kind", [None])[0],
+                    t0=float(t0) if t0 is not None else None,
+                    t1=float(t1) if t1 is not None else None,
+                    root_id=int(rr) if rr is not None else None)
+            text = "".join(json.dumps(e.to_dict(), sort_keys=True) + "\n"
+                           for e in events)
+            self._respond_text(writer, 200, text,
+                               "application/x-ndjson", keep)
         elif path.startswith("/v1/") and path.endswith("/submit"):
             if method != "POST":
                 raise _HTTPError(405, "submit is POST")
@@ -167,8 +202,8 @@ class GatewayHTTPServer:
         else:
             raise _HTTPError(404, f"no route {method} {path}")
 
-    async def _submit(self, app: str, stream: bool, writer,
-                      keep: bool) -> None:
+    async def _submit(self, app: str, stream: bool,
+                      writer: asyncio.StreamWriter, keep: bool) -> None:
         try:
             gr = await self.gateway.submit(app)
         except KeyError as e:
@@ -177,7 +212,7 @@ class GatewayHTTPServer:
             raise _HTTPError(429, e.reason)
         if not stream:
             await gr.done.wait()
-            self._respond(writer, 200, gr.outcome, keep)
+            self._respond(writer, 200, gr.outcome or {}, keep)
             return
         # chunked NDJSON: one line per hop/drop, closing with "done"
         writer.write(b"HTTP/1.1 200 OK\r\n"
@@ -193,12 +228,13 @@ class GatewayHTTPServer:
         writer.write(b"0\r\n\r\n")
 
     # -- response helpers ------------------------------------------------
-    def _respond(self, writer, status: int, obj: dict, keep: bool) -> None:
+    def _respond(self, writer: asyncio.StreamWriter, status: int,
+                 obj: dict, keep: bool) -> None:
         self._respond_text(writer, status, json.dumps(obj),
                            "application/json", keep)
 
-    def _respond_text(self, writer, status: int, text: str,
-                      ctype: str, keep: bool) -> None:
+    def _respond_text(self, writer: asyncio.StreamWriter, status: int,
+                      text: str, ctype: str, keep: bool) -> None:
         data = text.encode()
         conn = "keep-alive" if keep else "close"
         writer.write(
@@ -209,19 +245,27 @@ class GatewayHTTPServer:
 
 
 # ----------------------------------------------------------------------
-def build_demo_gateway(apps=("social_media", "traffic_analysis"), *,
+def build_demo_gateway(apps: Sequence[str] = ("social_media",
+                                              "traffic_analysis"), *,
                        plan_rps: float = 30.0, s_avail: int = 64,
                        time_scale: float = 1.0, seed: int = 0,
                        sample_every: int = 1,
-                       backend=None) -> Tuple[AsyncGateway, Instrumentation]:
+                       backend: Any = None,
+                       quotas: Optional[Dict[str, float]] = None,
+                       retry_drops: bool = False
+                       ) -> Tuple[AsyncGateway, Instrumentation]:
     """Plan each app with the MILP and wrap the deployment in an
     instrumented gateway — the shared entry point for the CLI, the smoke
-    job, the benchmarks, and the tests."""
+    job, the benchmarks, and the tests.  The instrumentation carries the
+    full observability plane: tracer, SLO error-budget ledgers with the
+    SRE burn-rate rules, and the control-plane flight recorder."""
     from repro.core.apps import get_app
     from repro.core.milp import Planner
     from repro.core.profiler import Profiler
+    from repro.obs import AuditLog, SloPlane
 
-    hooks = Instrumentation(tracer=Tracer(sample_every=sample_every))
+    hooks = Instrumentation(tracer=Tracer(sample_every=sample_every),
+                            slo=SloPlane(), audit=AuditLog())
     planned = {}
     for name in apps:
         g = get_app(name)
@@ -233,11 +277,12 @@ def build_demo_gateway(apps=("social_media", "traffic_analysis"), *,
                                f"at {plan_rps} rps / {s_avail} slices")
         planned[name] = (g, cfg)
     gw = AsyncGateway(planned, backend, seed=seed, hooks=hooks,
-                      time_scale=time_scale)
+                      time_scale=time_scale, quotas=quotas,
+                      retry_drops=retry_drops)
     return gw, hooks
 
 
-async def _amain(args) -> None:
+async def _amain(args: argparse.Namespace) -> None:
     gw, hooks = build_demo_gateway(
         tuple(args.apps.split(",")), plan_rps=args.plan_rps,
         s_avail=args.s_avail, time_scale=args.time_scale)

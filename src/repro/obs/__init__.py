@@ -1,12 +1,21 @@
-"""Observability plane (DESIGN.md §14): Prometheus-style metrics
-registry, per-request Chrome-trace tracer, and the instrumentation hook
+"""Observability plane (DESIGN.md §14, §17): Prometheus-style metrics
+registry, per-request Chrome-trace tracer, the instrumentation hook
 object threaded through the runtime / controller / gateway as
-``hooks=``."""
+``hooks=``, plus the SLO error-budget engine (burn-rate alerting), the
+control-plane flight recorder, and the push-based telemetry exporter."""
+from repro.obs.audit import AuditEvent, AuditLog
+from repro.obs.export import (ListTransport, MetricBatch, OtlpJsonSink,
+                              PushExporter, StatsdSink)
 from repro.obs.hooks import Instrumentation
 from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                                parse_exposition)
+from repro.obs.slo import (Alert, AlertRule, SloLedger, SloMonitor,
+                           SloPlane, sre_rules)
 from repro.obs.tracing import Span, Tracer, validate_chrome_trace
 
-__all__ = ["Counter", "Gauge", "Histogram", "Instrumentation",
-           "MetricsRegistry", "Span", "Tracer", "parse_exposition",
+__all__ = ["Alert", "AlertRule", "AuditEvent", "AuditLog", "Counter",
+           "Gauge", "Histogram", "Instrumentation", "ListTransport",
+           "MetricBatch", "MetricsRegistry", "OtlpJsonSink",
+           "PushExporter", "Span", "SloLedger", "SloMonitor", "SloPlane",
+           "StatsdSink", "Tracer", "parse_exposition", "sre_rules",
            "validate_chrome_trace"]

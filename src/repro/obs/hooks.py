@@ -25,7 +25,9 @@ from bisect import bisect_left
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Mapping, Optional, Sequence
 
+from repro.obs.audit import AuditLog
 from repro.obs.metrics import MetricsRegistry
+from repro.obs.slo import SloPlane
 from repro.obs.tracing import Tracer
 
 __all__ = ["Instrumentation"]
@@ -44,9 +46,19 @@ class Instrumentation:
 
     registry: MetricsRegistry = field(default_factory=MetricsRegistry)
     tracer: Optional[Tracer] = None
+    # SLO error-budget plane + control-plane flight recorder (DESIGN.md
+    # §17) — both optional: a bare Instrumentation() pays nothing for
+    # them, an attached plane costs one ledger bucket add per event
+    # (re-verified against the overhead pin in BENCH_slo.json)
+    slo: Optional[SloPlane] = None
+    audit: Optional[AuditLog] = None
 
     def __post_init__(self) -> None:
         r = self.registry
+        if self.slo is not None:
+            self.slo.bind(r)
+            if self.slo.audit is None:
+                self.slo.audit = self.audit
         self.arrivals = r.counter(
             f"{_PFX}_arrivals_total",
             "Root requests admitted to the entry queue", ("app",))
@@ -106,6 +118,17 @@ class Instrumentation:
         self.rejects = r.counter(
             f"{_PFX}_admission_rejects_total",
             "Gateway submissions rejected at admission", ("app",))
+        self.gw_retries = r.counter(
+            f"{_PFX}_gateway_retries_total",
+            "Dropped hops resubmitted by the gateway", ("app",))
+        self.gw_retry_ok = r.counter(
+            f"{_PFX}_gateway_retry_success_total",
+            "Resubmitted hops that went on to complete", ("app",))
+        # change-detection state for audited control-plane gauges (the
+        # monitor re-reports level/dead-units every tick; the flight
+        # recorder only wants transitions)
+        self._last_ladder: Optional[int] = None
+        self._last_dead: Dict[str, int] = {}
         # -- hot-path running state ------------------------------------
         # The data-plane hooks below fire once per runtime event; to
         # hold the >= 0.95x overhead pin, completions and dispatches
@@ -116,6 +139,14 @@ class Instrumentation:
         # never-scraped run holds one small tuple per event.
         self._arr: Dict[str, int] = {}            # app -> arrivals
         self._dropped: Dict[tuple, float] = {}    # (app, reason) -> n
+        # SLO ledger feeds are deferred the same way: the hot hooks
+        # append (app, now, good, bad) onto the ledgers' own pending
+        # logs (cached list refs — SloLedger drains in place on read)
+        slo = self.slo
+        self._lat_pending = slo.latency.pending if slo is not None \
+            else None
+        self._acc_pending = slo.accuracy.pending if slo is not None \
+            else None
         self._comp_log: List[tuple] = []   # (app, latency_ms, missed)
         self._disp_log: List[tuple] = []   # (app, task, cap, n, svc, qlen)
         # app -> [completions, missed, lat bucket rows, lat sum]
@@ -132,14 +163,39 @@ class Instrumentation:
         d[app] = d.get(app, 0) + 1
 
     def on_drop(self, app: str, task: str, reason: str, n: int,
-                now: float) -> None:
+                now: float, root_id: int = -1) -> None:
         d = self._dropped
         k = (app, reason)
         d[k] = d.get(k, 0.0) + n
+        lat = self._lat_pending
+        if lat is not None:
+            lat.append((app, now, 0.0, float(n)))
+        if self.audit is not None:
+            rid = root_id if root_id >= 0 else None
+            if reason in ("admission", "shed"):
+                # the ladder's deliberate load shedding is a decision,
+                # not an SLO miss
+                self.audit.record("shed", now, app=app, root_id=rid,
+                                  task=task, reason=reason, n=n)
+            else:
+                # deadline/stale/failed_capacity drops ARE latency-SLO
+                # violations (SimMetrics.violations = missed + dropped);
+                # the root_id anchors AuditLog.explain() for the request
+                self.audit.record("violation", now, app=app, root_id=rid,
+                                  task=task, reason=reason, n=n)
 
     def on_complete(self, app: str, root_id: int, latency_ms: float,
                     missed: bool, now: float) -> None:
         self._comp_log.append((app, latency_ms, missed))
+        lat = self._lat_pending
+        if lat is not None:
+            if missed:
+                lat.append((app, now, 0.0, 1.0))
+            else:
+                lat.append((app, now, 1.0, 0.0))
+        if missed and self.audit is not None:
+            self.audit.record("violation", now, app=app, root_id=root_id,
+                              latency_ms=round(latency_ms, 3))
 
     def on_dispatch(self, server: Any, batch: Sequence[Any], now: float,
                     service_s: float, queue_len: int) -> None:
@@ -149,8 +205,21 @@ class Instrumentation:
         ``server.tup`` on downshifts, so deferring the attribute reads
         to scrape time would misattribute batches)."""
         tup = server.tup
+        n = len(batch)
         self._disp_log.append((server.app, tup.task, tup.batch,
-                               len(batch), service_s, queue_len))
+                               n, service_s, queue_len))
+        acc = self._acc_pending
+        if acc is not None:
+            # accuracy-SLO proxy: sub-requests dispatched onto a ladder-
+            # downshifted stream run a cheaper variant than planned.
+            # Accounted at DISPATCH (flag read at launch) — SimMetrics'
+            # degraded_served reads the flag at batch completion, so the
+            # two can differ by in-flight ladder moves; the exact
+            # invariant is ledger total == served sub-requests
+            if server.degraded:
+                acc.append((server.app, now, 0.0, float(n)))
+            else:
+                acc.append((server.app, now, float(n), 0.0))
         tr = self.tracer
         if tr is None:
             return
@@ -246,23 +315,71 @@ class Instrumentation:
 
     # -- control plane -------------------------------------------------
     def on_transition(self, now: float, makespan_s: float,
-                      emergency: bool) -> None:
+                      emergency: bool, plan: Any = None) -> None:
         self.transitions.inc(1.0, "emergency" if emergency else "scheduled")
         self.transition_seconds.inc(max(makespan_s, 0.0))
+        if self.audit is not None:
+            detail: Dict[str, Any] = {
+                "makespan_s": round(makespan_s, 6), "emergency": emergency}
+            if plan is not None:
+                detail.update(plan.audit_detail())
+            self.audit.record("transition", now, **detail)
 
     def on_dead_units(self, units: Mapping[str, int]) -> None:
         for pool, n in units.items():
             self.dead_units_g.set(n, pool)
+        if self.audit is not None:
+            d = dict(units)
+            if d != self._last_dead:
+                self._last_dead = d
+                self.audit.record("dead_units", self._last_seen_now(),
+                                  units=d)
 
     def on_ladder_level(self, level: int) -> None:
         self.ladder_level.set(level)
+        if self.audit is not None and level != self._last_ladder:
+            prev = self._last_ladder
+            self._last_ladder = level
+            self.audit.record("ladder", self._last_seen_now(),
+                              level=level, previous=prev)
 
-    def on_replan(self, milp_s: float, warm: bool) -> None:
+    def on_replan(self, milp_s: float, warm: bool, *, now: float = 0.0,
+                  app: str = "", trigger: str = "",
+                  demand_rps: Optional[float] = None) -> None:
         self.replans.inc(1.0, "true" if warm else "false")
         self.replan_latency.observe(milp_s)
+        if self.audit is not None:
+            self.audit.record(
+                "replan", now, app=app, solve_ms=round(milp_s * 1e3, 3),
+                warm=warm, trigger=trigger,
+                **({} if demand_rps is None
+                   else {"demand_rps": round(demand_rps, 3)}))
 
     def on_spike(self, now: float) -> None:
         self.spikes.inc()
+        if self.audit is not None:
+            self.audit.record("spike", now)
+
+    def on_emergency_replan(self, now: float, *, app: str = "",
+                            dead: Optional[Mapping[str, int]] = None,
+                            plan: Any = None) -> None:
+        """An EmergencyReplanner solved mid-bin and handed the runtime a
+        rescue transition — record the why (observed dead capacity) and
+        the what (the plan diff)."""
+        if self.audit is not None:
+            detail: Dict[str, Any] = {"dead_units": dict(dead or {})}
+            if plan is not None:
+                detail.update(plan.audit_detail())
+            self.audit.record("emergency_replan", now, app=app, **detail)
+
+    def _last_seen_now(self) -> float:
+        """Best-effort timestamp for hooks that carry no ``now`` in
+        their (frozen, parity-tested) signatures: the SLO ledger's
+        high-water sim time when a plane is attached, else 0."""
+        if self.slo is not None:
+            return max(self.slo.latency.last_now,
+                       self.slo.accuracy.last_now)
+        return 0.0
 
     # -- gateway ---------------------------------------------------------
     def on_admission_reject(self, app: str, reason: str,
@@ -271,3 +388,17 @@ class Instrumentation:
         d = self._dropped
         k = (app, reason)
         d[k] = d.get(k, 0.0) + 1.0
+        if self.slo is not None:
+            self.slo.latency.record(app, now, 0.0, 1.0)
+        if self.audit is not None:
+            self.audit.record("admission", now, app=app, reason=reason)
+
+    def on_retry(self, app: str, now: float,
+                 root_id: Optional[int] = None) -> None:
+        self.gw_retries.inc(1.0, app)
+        if self.audit is not None:
+            self.audit.record("retry", now, app=app, root_id=root_id)
+
+    def on_retry_success(self, app: str, now: float,
+                         root_id: Optional[int] = None) -> None:
+        self.gw_retry_ok.inc(1.0, app)

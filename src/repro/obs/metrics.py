@@ -25,8 +25,12 @@ import threading
 from typing import (Any, Callable, Dict, Iterable, List, Mapping, Optional,
                     Sequence, Tuple)
 
-__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry", "Sample",
            "parse_exposition"]
+
+# flat structured sample: (name, kind, ((label, value), ...), value) —
+# what MetricsRegistry.snapshot() yields and the push exporter ships
+Sample = Tuple[str, str, Tuple[Tuple[str, str], ...], float]
 
 _DEF_BUCKETS = (0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0,
                 10.0)
@@ -233,6 +237,30 @@ class MetricsRegistry:
             for name in sorted(self._families):
                 lines.extend(self._families[name].render())
         return "\n".join(lines) + "\n"
+
+    def snapshot(self) -> List[Sample]:
+        """Structured twin of :meth:`render` for the push exporter:
+        collectors run first, so the snapshot equals what a scrape at
+        the same instant would expose.  Histograms flatten to their
+        ``_count`` / ``_sum`` series (the statsd/OTLP sinks have no
+        native bucket shape)."""
+        for fn in self._collectors:
+            fn()
+        out: List[Sample] = []
+        with self._lock:
+            for name in sorted(self._families):
+                fam = self._families[name]
+                for key in sorted(fam._samples):
+                    lbl = tuple(zip(fam.labelnames, key))
+                    if isinstance(fam, Histogram):
+                        out.append((f"{name}_count", "counter", lbl,
+                                    fam._samples[key]))
+                        out.append((f"{name}_sum", "counter", lbl,
+                                    fam._sum[key]))
+                    else:
+                        out.append((name, fam.kind, lbl,
+                                    fam._samples[key]))
+        return out
 
 
 def parse_exposition(text: str) -> Dict[str, Dict[Tuple[Tuple[str, str], ...],

@@ -94,6 +94,19 @@ class TransitionPlan:
                 f"carved={sum(a.count for a in self.loads if a.carved)} "
                 f"makespan={self.makespan_s:.2f}s")
 
+    def audit_detail(self) -> Dict[str, object]:
+        """Structured summary for the control-plane flight recorder
+        (:class:`repro.obs.audit.AuditLog`)."""
+        return {
+            "keep": sum(a.count for a in self.keeps),
+            "drain": sum(a.count for a in self.drains),
+            "load": sum(a.count for a in self.loads),
+            "carved": sum(a.count for a in self.loads if a.carved),
+            "actions": self.n_actions,
+            "apps": sorted(self.target),
+            "repartition_pools": sorted(self.repartition_pools),
+        }
+
 
 # ---------------------------------------------------------------------------
 @dataclass

@@ -719,7 +719,8 @@ class ClusterRuntime:
             if q:                   # leftover work from a prior run
                 push(0.0, "poll", qt)
 
-        def account_drop(app: str, task: str, g, rt0: float, reason: str):
+        def account_drop(app: str, task: str, g, rt0: float, reason: str,
+                         root_id: int = -1):
             """File one request's fan-weighted drop into every ledger it
             belongs to (aggregate, per-app, transition window, failed
             domains), attributed to ``reason``."""
@@ -736,7 +737,8 @@ class ClusterRuntime:
                 if app:
                     sub(app).count_drop(fan, reason)
                 if hooks is not None:
-                    hooks.on_drop(app, task, reason, fan, rt0)
+                    hooks.on_drop(app, task, reason, fan, rt0,
+                                  root_id=root_id)
             if in_win:
                 m.window.count_drop(fan, reason)
             for d in doms:
@@ -763,7 +765,8 @@ class ClusterRuntime:
                     rkey = ("failed_capacity" if lossy
                             else "deadline"
                             if reason == "deadline_unreachable" else reason)
-                    account_drop(app, task, g, root_t[req.root_id], rkey)
+                    account_drop(app, task, g, root_t[req.root_id], rkey,
+                                 root_id=req.root_id)
             self.queues[qt] = keep
 
         def try_dispatch(qt: str, now: float):
@@ -822,7 +825,8 @@ class ClusterRuntime:
                         app0, task0 = split_qualified(req.task)
                         account_drop(app0, task0,
                                      self._apps[app0].graph,
-                                     root_t[req.root_id], shed)
+                                     root_t[req.root_id], shed,
+                                     root_id=req.root_id)
                         continue
                 req.enqueue_t = now
                 self.queues[req.task].append(req)
@@ -844,7 +848,7 @@ class ClusterRuntime:
                         push(now + a.retire_s, "retire_sweep", None)
                     if hooks is not None:
                         hooks.on_transition(now, plan.makespan_s,
-                                            emergency=True)
+                                            emergency=True, plan=plan)
                 if hooks is not None:
                     if self._ladder is not None:
                         hooks.on_ladder_level(self._ladder.level)
@@ -865,7 +869,7 @@ class ClusterRuntime:
                         push(now + a.retire_s, "retire_sweep", None)
                     if hooks is not None:
                         hooks.on_transition(now, payload.makespan_s,
-                                            emergency=False)
+                                            emergency=False, plan=payload)
                 elif kind == "domain_fail":
                     self._apply_domain_failure(payload)
                     domain_open.setdefault(payload.domain, now)

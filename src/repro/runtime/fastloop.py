@@ -200,7 +200,8 @@ def run_fast(rt: "ClusterRuntime", scenario: "Scenario") -> SimMetrics:
     saved_queues = rt.queues
     rt.queues = queues          # type: ignore[assignment]
 
-    def account_drop(Q: _TaskQueue, rt0: float, reason: str):
+    def account_drop(Q: _TaskQueue, rt0: float, reason: str,
+                     root_id: int = -1):
         """Legacy ``account_drop`` with the shard's cached fan weight."""
         in_main = rt0 >= warmup_s
         win = m.window
@@ -214,7 +215,8 @@ def run_fast(rt: "ClusterRuntime", scenario: "Scenario") -> SimMetrics:
             if app:
                 sub(app).count_drop(fan, reason)
             if hooks is not None:
-                hooks.on_drop(app, Q.task, reason, fan, rt0)
+                hooks.on_drop(app, Q.task, reason, fan, rt0,
+                              root_id=root_id)
         if in_win:
             win.count_drop(fan, reason)
         for d, tf in domain_open.items():
@@ -249,7 +251,8 @@ def run_fast(rt: "ClusterRuntime", scenario: "Scenario") -> SimMetrics:
             rkey = ("failed_capacity" if lossy
                     else "deadline"
                     if reason == "deadline_unreachable" else reason)
-            account_drop(Q, root_t[req.root_id], rkey)
+            account_drop(Q, root_t[req.root_id], rkey,
+                         root_id=req.root_id)
         Q.rows = keep
         Q.head = 0
         Q.min_dl = mdl
@@ -576,7 +579,7 @@ def run_fast(rt: "ClusterRuntime", scenario: "Scenario") -> SimMetrics:
                 if ladder is not None:
                     shed = ladder.gate(rt, Q.qt, now, req=req)
                     if shed is not None:
-                        account_drop(Q, root_t[rid], shed)
+                        account_drop(Q, root_t[rid], shed, root_id=rid)
                         continue
                 rows = Q.rows
                 # express lane: on an empty all-batch-1 immortal shard
@@ -834,7 +837,7 @@ def run_fast(rt: "ClusterRuntime", scenario: "Scenario") -> SimMetrics:
                         push(now + a.retire_s, "retire_sweep", None)
                     if hooks is not None:
                         hooks.on_transition(now, plan.makespan_s,
-                                            emergency=True)
+                                            emergency=True, plan=plan)
                 if hooks is not None:
                     if ladder is not None:
                         hooks.on_ladder_level(ladder.level)
@@ -855,7 +858,7 @@ def run_fast(rt: "ClusterRuntime", scenario: "Scenario") -> SimMetrics:
                         push(now + a.retire_s, "retire_sweep", None)
                     if hooks is not None:
                         hooks.on_transition(now, payload.makespan_s,
-                                            emergency=False)
+                                            emergency=False, plan=payload)
                 elif kind == "domain_fail":
                     rt._apply_domain_failure(payload)
                     domain_open.setdefault(payload.domain, now)

@@ -238,6 +238,51 @@ def test_asyncio_cross_iteration_rmw_flagged(tmp_path):
     assert len(found) == 1 and "self.pending" in found[0].message
 
 
+def test_asyncio_lock_as_argument_clean(tmp_path):
+    # the lock arrives as an annotated parameter: the bare name 'guard'
+    # says nothing, the annotation marks it as a mutual exclusion
+    proj = make_project(tmp_path, {"gw/g.py": """\
+        import asyncio
+
+        class G:
+            async def bump(self, guard: asyncio.Lock):
+                async with guard:
+                    v = self.count
+                    await self.flush()
+                    self.count = v + 1
+        """})
+    assert run_passes(proj, make_config(), only=["asyncio_race"]) == []
+
+
+def test_asyncio_lock_bound_local_clean(tmp_path):
+    # a local bound from a lock-ish attribute counts as a lock too
+    proj = make_project(tmp_path, {"gw/g.py": """\
+        class G:
+            async def bump(self):
+                guard = self._mutex
+                async with guard:
+                    v = self.count
+                    await self.flush()
+                    self.count = v + 1
+        """})
+    assert run_passes(proj, make_config(), only=["asyncio_race"]) == []
+
+
+def test_asyncio_non_lock_name_still_flagged(tmp_path):
+    # an unannotated, un-lock-ish context manager must NOT suppress:
+    # dataflow only trusts provably lock-bound names
+    proj = make_project(tmp_path, {"gw/g.py": """\
+        class G:
+            async def bump(self, guard):
+                async with guard:
+                    v = self.count
+                    await self.flush()
+                    self.count = v + 1
+        """})
+    found = run_passes(proj, make_config(), only=["asyncio_race"])
+    assert len(found) == 1 and "self.count" in found[0].message
+
+
 def test_asyncio_blocking_calls_flagged(tmp_path):
     proj = make_project(tmp_path, {"gw/g.py": """\
         import time

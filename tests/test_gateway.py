@@ -123,6 +123,100 @@ def test_gateway_admission_rejects_on_full_queue(planned_apps):
         (("app", "social_media"), ("reason", "admission"))] == 1
 
 
+def test_gateway_quota_rejects_over_contracted_rate(planned_apps):
+    """The per-app token bucket refuses arrivals beyond the contracted
+    rps with reason 'quota' — BEFORE the ladder's load gate, and only
+    for the quota'd app."""
+    hooks = Instrumentation()
+
+    async def drive():
+        gw = AsyncGateway(planned_apps, seed=0, hooks=hooks,
+                          time_scale=1.0,
+                          quotas={"social_media": 0.01}, quota_burst=2.0)
+        # the bucket banks one burst at t=0: 2 admits, then refusal
+        await gw.submit("social_media")
+        await gw.submit("social_media")
+        with pytest.raises(AdmissionRejected) as ei:
+            await gw.submit("social_media")
+        assert ei.value.reason == "quota"
+        # the un-quota'd app's door stays open
+        gr = await gw.submit("traffic_analysis")
+        assert gr.root_id >= 0
+
+    asyncio.run(drive())
+    parsed = parse_exposition(hooks.registry.render())
+    assert parsed["jigsaw_admission_rejects_total"][
+        (("app", "social_media"),)] == 1
+    assert parsed["jigsaw_drops_total"][
+        (("app", "social_media"), ("reason", "quota"))] == 1
+
+
+def test_gateway_quota_unknown_app_fails_loud(planned_apps):
+    with pytest.raises(ValueError, match="quota for unknown app"):
+        AsyncGateway(planned_apps, seed=0, quotas={"nope": 1.0})
+
+
+def test_gateway_retry_on_drop(planned_apps):
+    """retry_drops resubmits the FIRST shed of a hop (deadline budget
+    left) instead of failing the root; the second shed is final, and a
+    completed retry is counted as a success."""
+    hooks = Instrumentation()
+
+    async def drive():
+        gw = AsyncGateway(planned_apps, seed=0, hooks=hooks,
+                          time_scale=1.0, retry_drops=True)
+        app = "social_media"
+        g, _ = planned_apps[app]
+        qt = f"{app}::{g.entry}"
+
+        # --- first drop: retried, root stays alive ------------------
+        gr = await gw.submit(app)
+        req = gw.queues[qt].pop()
+        now = gw.now()
+        retry = gw._drop(req, qt, "staleness", now)
+        assert retry is not None and retry.req_id == req.req_id
+        assert gr.retries == 1 and gr.dropped == 0
+        assert not gr.done.is_set()
+
+        # --- second drop of the same hop: final ---------------------
+        final = gw._drop(retry, qt, "staleness", gw.now())
+        assert final is None
+        assert gr.dropped == 1 and gr.done.is_set()
+        assert gr.outcome["status"] == "dropped"
+        assert gr.outcome["retries"] == 1 and gr.outcome["retry_ok"] == 0
+
+        # --- retried hop that completes counts a success ------------
+        gr2 = await gw.submit(app)
+        req2 = gw.queues[qt].pop()
+        retry2 = gw._drop(req2, qt, "staleness", gw.now())
+        assert retry2 is not None and gr2.retries == 1
+        leaf = next(t for t in g.tasks if not g.successors(t))
+        srv = gw.by_task[f"{app}::{leaf}"][0]
+        gw._complete_hop(retry2, srv, gw.now())
+        assert gr2.retry_ok == 1 and gr2.done.is_set()
+        assert gr2.outcome["status"] == "ok"
+        assert gr2.outcome["retry_ok"] == 1
+
+        # --- past the deadline there is nothing left to retry -------
+        gr3 = await gw.submit(app)
+        req3 = gw.queues[qt].pop()
+        dead = gw._drop(req3, qt, "deadline", req3.deadline + 1.0)
+        assert dead is None and gr3.outcome["status"] == "dropped"
+        assert gr3.retries == 0
+
+    asyncio.run(drive())
+    parsed = parse_exposition(hooks.registry.render())
+    assert parsed["jigsaw_gateway_retries_total"][
+        (("app", "social_media"),)] == 2
+    assert parsed["jigsaw_gateway_retry_success_total"][
+        (("app", "social_media"),)] == 1
+    # only FINAL sheds count as drops: 2 retried first-sheds excluded
+    assert parsed["jigsaw_drops_total"][
+        (("app", "social_media"), ("reason", "staleness"))] == 1
+    assert parsed["jigsaw_drops_total"][
+        (("app", "social_media"), ("reason", "deadline"))] == 1
+
+
 def test_gateway_unknown_app_fails_loud(planned_apps):
     async def drive():
         gw = AsyncGateway(planned_apps, seed=0)
@@ -135,8 +229,12 @@ def test_gateway_unknown_app_fails_loud(planned_apps):
 def test_http_server_smoke(planned_apps):
     """Boot the stdlib HTTP server on an ephemeral port and exercise
     every route over real sockets: healthz, submit (unary + streamed
-    NDJSON), /metrics exposition, /trace JSON, and 404 handling."""
-    hooks = Instrumentation(tracer=Tracer())
+    NDJSON), /metrics exposition, /trace JSON, /alerts, /audit NDJSON,
+    and 404 handling."""
+    from repro.obs import AuditLog, SloPlane
+
+    hooks = Instrumentation(tracer=Tracer(), slo=SloPlane(),
+                            audit=AuditLog())
 
     async def fetch(port, method, path, body=b""):
         reader, writer = await asyncio.open_connection("127.0.0.1", port)
@@ -190,6 +288,22 @@ def test_http_server_smoke(planned_apps):
             status, _, body = await fetch(port, "GET", "/trace")
             assert status == 200
             validate_chrome_trace(json.loads(body))
+
+            # SLO alert state: rules are listed even when nothing fires
+            status, _, body = await fetch(port, "GET", "/alerts")
+            assert status == 200
+            alerts = json.loads(body)
+            assert {r["name"] for r in alerts["rules"]} >= {
+                "latency_fast_burn", "latency_slow_burn"}
+            assert isinstance(alerts["alerts"], list)
+
+            # flight recorder: NDJSON, every line a well-formed event
+            status, head, body = await fetch(port, "GET", "/audit")
+            assert status == 200
+            assert b"ndjson" in head.lower()
+            for ln in body.decode().splitlines():
+                ev = json.loads(ln)
+                assert {"seq", "t_s", "kind"} <= set(ev)
 
             status, _, _ = await fetch(port, "GET", "/no/such/route")
             assert status == 404

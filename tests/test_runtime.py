@@ -303,7 +303,7 @@ class _Probe:
         self.arrivals += 1
         self.queue_depths.append(queue_len)
 
-    def on_drop(self, app, task, reason, n, rt0):
+    def on_drop(self, app, task, reason, n, rt0, root_id=-1):
         # rt0 is the ROOT arrival time, not the processing instant —
         # it does not join the ordering check
         self.drop_n += n
@@ -316,7 +316,7 @@ class _Probe:
         self.queue_depths.append(queue_len)
         self.dispatches.append((server.retire_at, now))
 
-    def on_transition(self, now, makespan_s, emergency=False):
+    def on_transition(self, now, makespan_s, emergency=False, plan=None):
         self.times.append(now)
 
     def on_dead_units(self, dead):

@@ -1,0 +1,490 @@
+"""SLO error-budget plane (DESIGN.md §17): ledger/window algebra, the
+burn == violation-rate/budget property against SimMetrics on hooked
+runs (fast AND legacy loops), multi-window alert fire/clear semantics,
+the SloMonitor mid-run evaluation path, exposition round-trip over the
+new families, PushExporter delivery guarantees under a failing sink,
+the AuditLog flight recorder, and the violated-request explain() chain
+through a chaos storm with mid-bin emergency re-planning."""
+import json
+
+import pytest
+
+from repro.chaos import DegradationLadder, EmergencyReplanner
+from repro.core.frontend import Frontend
+from repro.core.milp import Planner
+from repro.core.profiler import Profiler
+from repro.hwspec import chaos_cluster
+from repro.obs import (Alert, AlertRule, AuditLog, Instrumentation,
+                       ListTransport, MetricBatch, MetricsRegistry,
+                       OtlpJsonSink, PushExporter, SloLedger, SloMonitor,
+                       SloPlane, StatsdSink, parse_exposition, sre_rules)
+from repro.reconfig import TransitionPlanner
+from repro.runtime import (ClusterRuntime, DomainFailureEvent, Scenario,
+                           SimBackend)
+
+
+@pytest.fixture(scope="module")
+def planned_social(social_profiler):
+    g, prof = social_profiler
+    cfg = Planner(g, prof, s_avail=64, max_tuples_per_task=32,
+                  bb_nodes=4, bb_time_s=1.0).plan(15.0)
+    assert cfg is not None
+    return g, cfg
+
+
+# ---------------------------------------------------------------------------
+# ledger algebra
+# ---------------------------------------------------------------------------
+def test_ledger_buckets_windows_and_pruning():
+    led = SloLedger(bucket_s=0.5, horizon_s=4.0)
+    led.record("a", 0.1, 1.0, 0.0)
+    led.record("a", 0.4, 1.0, 1.0)     # same bucket folds
+    led.record("a", 1.2, 0.0, 2.0)
+    assert led.window_counts("a", 10.0, 1.2) == (2.0, 3.0)
+    # a narrow window only sees the tail bucket
+    assert led.window_counts("a", 0.5, 1.4) == (0.0, 2.0)
+    assert led.error_rate("a", 10.0, 1.2) == pytest.approx(3.0 / 5.0)
+    # records far in the future prune everything past the horizon
+    led.record("a", 100.0, 1.0, 0.0)
+    assert led.totals("a") == (1.0, 0.0)
+    assert led.apps() == ["a"]
+    with pytest.raises(ValueError):
+        SloLedger(bucket_s=0.0)
+    with pytest.raises(ValueError):
+        SloLedger(bucket_s=1.0, horizon_s=0.5)
+
+
+def test_sre_rules_shape():
+    fast, slow = sre_rules(1.0)
+    assert fast.name == "latency_fast_burn" and fast.burn_factor == 14.4
+    assert fast.short_window_s == pytest.approx(1.0 / 12.0)
+    assert slow.long_window_s == pytest.approx(6.0)
+    acc = sre_rules(2.0, slo="accuracy")
+    assert all(r.slo == "accuracy" for r in acc)
+    assert acc[0].name == "accuracy_fast_burn"
+    with pytest.raises(ValueError):
+        sre_rules(0.0)
+
+
+# ---------------------------------------------------------------------------
+# the §17 property: burn-rate over the whole run == violation_rate /
+# budget from the SAME replay's SimMetrics — on BOTH event loops
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fast", [True, False],
+                         ids=["fastloop", "legacy"])
+def test_burn_equals_simmetrics_violation_rate(planned_social, fast):
+    g, cfg = planned_social
+    plane = SloPlane(latency_budget=0.05)
+    hooks = Instrumentation(slo=plane)
+    rt = ClusterRuntime(g, cfg, SimBackend(), seed=3, hooks=hooks,
+                        fast=fast)
+    m = rt.run(Scenario.poisson(60.0, duration_s=8.0, warmup_s=2.0))
+    assert m.completions > 0 and m.dropped > 0
+    good, bad = plane.latency.totals("")
+    # ledger total == SimMetrics total (completions + fan-weighted
+    # drops), bad == violations (missed + dropped) — exact counts
+    assert good + bad == m.total_requests
+    assert bad == m.violations
+    now = plane.latency.last_now
+    err = plane.latency.error_rate("", 1e4, now)
+    assert err == pytest.approx(m.violation_rate)
+    # burn over the full-run window is exactly error/budget
+    rule = AlertRule("full_run", long_window_s=1e4, short_window_s=1e4,
+                     burn_factor=1e9)
+    p2 = SloPlane(latency_budget=0.05, rules=(rule,))
+    p2.latency = plane.latency
+    p2.evaluate(now)
+    reg = MetricsRegistry()
+    p2.bind(reg)
+    parsed = parse_exposition(reg.render())
+    burn = parsed["jigsaw_slo_burn_rate"][
+        (("app", ""), ("rule", "full_run"), ("window", "long"))]
+    assert burn == pytest.approx(m.violation_rate / 0.05)
+    # and 1 - window attainment == violation rate (same replay)
+    att = parsed["jigsaw_slo_window_attainment"][
+        (("app", ""), ("slo", "latency"))]
+    assert 1.0 - att == pytest.approx(m.violation_rate)
+
+
+def test_accuracy_ledger_tracks_degraded_dispatch(planned_social,
+                                                  social_profiler):
+    """The accuracy-SLO proxy books every dispatched sub-request exactly
+    once (ledger total == jigsaw_served_total), splitting on the
+    server's degraded flag AT DISPATCH.  SimMetrics.degraded_served
+    reads the flag at batch completion, so the two counts track each
+    other but can differ by in-flight ladder moves — the exact parity
+    claim lives on the total, not the split."""
+    g, cfg = planned_social
+    _, prof = social_profiler
+    plane = SloPlane()
+    hooks = Instrumentation(slo=plane)
+    mon = EmergencyReplanner(Frontend(g), planned_for_rps=15.0,
+                             hooks=hooks)
+    m = ClusterRuntime(
+        g, cfg, SimBackend(), seed=0, hooks=hooks, monitor=mon,
+        ladder=DegradationLadder(profiler=prof),
+    ).run(Scenario.poisson(60.0, duration_s=10.0, warmup_s=1.0))
+    assert m.degraded_served > 0, "surge must downshift some streams"
+    good, bad = plane.accuracy.totals("")
+    assert bad > 0, "downshifted dispatches must land in the bad bucket"
+    served = parse_exposition(hooks.registry.render())[
+        "jigsaw_served_total"]
+    assert good + bad == sum(served.values())
+    # dispatch-time vs completion-time attribution differ only by
+    # batches whose server the ladder toggled while they were in flight
+    assert bad == pytest.approx(m.degraded_served, rel=0.25)
+
+
+# ---------------------------------------------------------------------------
+# alert semantics
+# ---------------------------------------------------------------------------
+def test_multiwindow_alert_fires_and_clears():
+    rule = AlertRule("r", long_window_s=4.0, short_window_s=1.0,
+                     burn_factor=6.0, min_requests=5)
+    plane = SloPlane(latency_budget=0.05, rules=(rule,), bucket_s=0.25)
+    reg = MetricsRegistry()
+    plane.bind(reg)
+    # healthy traffic: no alert
+    for i in range(20):
+        plane.record_latency("a", 0.1 * i, missed=False)
+    assert plane.evaluate(2.0) == []
+    assert not plane.paging("a")
+    # sustained 100% errors (burn 20x > 6x) in BOTH windows -> fires
+    for i in range(20):
+        plane.record_latency("a", 2.0 + 0.1 * i, missed=True)
+    firing = plane.evaluate(4.0)
+    assert [a.rule for a in firing] == ["r"]
+    assert firing[0].burn_short >= 6.0 and firing[0].page
+    assert plane.paging("a") and plane.paging() and not plane.paging("b")
+    assert plane.first_fired[("r", "a")] == pytest.approx(4.0)
+    # good traffic drains the SHORT window -> stops paging, but the
+    # first-fired time (the lead-time measurement) is retained
+    for i in range(40):
+        plane.record_latency("a", 4.0 + 0.05 * i, missed=False)
+    assert plane.evaluate(6.0) == []
+    assert not plane.paging("a")
+    assert plane.first_fired[("r", "a")] == pytest.approx(4.0)
+    parsed = parse_exposition(reg.render())
+    assert parsed["jigsaw_slo_alerts_fired_total"][
+        (("rule", "r"), ("app", "a"))] == 1
+    assert parsed["jigsaw_slo_alert_firing"][
+        (("rule", "r"), ("app", "a"))] == 0
+
+
+def test_alert_needs_min_requests_and_both_windows():
+    rule = AlertRule("r", long_window_s=4.0, short_window_s=1.0,
+                     burn_factor=6.0, min_requests=50)
+    plane = SloPlane(latency_budget=0.05, rules=(rule,))
+    for i in range(10):       # 100% bad, but only 10 requests
+        plane.record_latency("a", 0.1 * i, missed=True)
+    assert plane.evaluate(1.0) == []
+    # an OLD burst outside the short window must not page (sustained
+    # long-window burn alone is not "still happening")
+    plane2 = SloPlane(latency_budget=0.05,
+                      rules=(AlertRule("r", long_window_s=8.0,
+                                       short_window_s=0.5,
+                                       burn_factor=6.0, min_requests=5),))
+    for i in range(100):
+        plane2.record_latency("a", 0.01 * i, missed=True)
+    for i in range(10):
+        plane2.record_latency("a", 4.0 + 0.1 * i, missed=False)
+    assert plane2.evaluate(5.0) == []
+
+
+def test_alerts_json_and_audit_episode():
+    audit = AuditLog()
+    plane = SloPlane(rules=(AlertRule("r", long_window_s=2.0,
+                                      short_window_s=0.5,
+                                      burn_factor=2.0, min_requests=2),),
+                     audit=audit)
+    for i in range(10):
+        plane.record_latency("a", 0.1 * i, missed=True)
+    doc = plane.alerts_json(1.0)
+    assert doc["alerts"] and doc["alerts"][0]["rule"] == "r"
+    assert {r["name"] for r in doc["rules"]} == {"r"}
+    assert doc["budgets"]["latency"] == pytest.approx(0.05)
+    kinds = [e.kind for e in audit.events]
+    assert kinds.count("alert") == 1     # one episode, not per-eval
+    plane.alerts_json(1.1)
+    assert [e.kind for e in audit.events].count("alert") == 1
+
+
+def test_slo_monitor_evaluates_midrun_and_delegates(planned_social):
+    g, cfg = planned_social
+
+    class _Inner:
+        interval_s = 0.5
+
+        def __init__(self):
+            self.begun = 0
+            self.checks = 0
+
+        def begin_run(self, runtime):
+            self.begun += 1
+
+        def check(self, runtime, now, metrics):
+            self.checks += 1
+            return None
+
+    # default SRE rules on a 1 s base window; a 2% budget makes the
+    # sustained ~25% overdrive error rate an unambiguous 6x slow burn
+    plane = SloPlane(latency_budget=0.02)
+    hooks = Instrumentation(slo=plane)
+    inner = _Inner()
+    mon = SloMonitor(plane, interval_s=0.5, inner=inner)
+    m = ClusterRuntime(g, cfg, SimBackend(), seed=3, hooks=hooks,
+                       monitor=mon).run(
+        Scenario.poisson(60.0, duration_s=8.0, warmup_s=1.0))
+    assert inner.begun == 1 and inner.checks >= 5
+    assert m.violation_rate > 6 * 0.02, "overdrive must burn the budget"
+    # the monitor cadence caught the burn DURING the run, well before
+    # the end-of-bin report
+    key = ("latency_slow_burn", "")
+    assert key in plane.first_fired
+    assert plane.first_fired[key] < 8.0
+
+
+# ---------------------------------------------------------------------------
+# exposition round-trip over the new families
+# ---------------------------------------------------------------------------
+def test_slo_families_exposition_roundtrip():
+    plane = SloPlane()
+    hooks = Instrumentation(slo=plane)
+    for i in range(30):
+        hooks.on_complete("app1", i, 100.0, i % 2 == 0, 0.1 * i)
+    text = hooks.registry.render()     # collector evaluates the plane
+    parsed = parse_exposition(text)
+    for fam in ("jigsaw_slo_burn_rate", "jigsaw_slo_budget_remaining",
+                "jigsaw_slo_window_attainment"):
+        assert any(dict(k).get("app") == "app1" for k in parsed[fam])
+    err = plane.latency.error_rate("app1", 6.0, plane.latency.last_now)
+    assert parsed["jigsaw_slo_window_attainment"][
+        (("app", "app1"), ("slo", "latency"))] == pytest.approx(1 - err)
+    assert parsed["jigsaw_slo_budget_remaining"][
+        (("app", "app1"), ("slo", "latency"))] == pytest.approx(
+            1 - err / 0.05)
+
+
+def test_registry_snapshot_matches_exposition():
+    plane = SloPlane()
+    hooks = Instrumentation(slo=plane)
+    for i in range(10):
+        hooks.on_complete("a", i, 50.0, False, 0.1 * i)
+        hooks.on_drop("a", "t", "staleness", 2, 0.1 * i)
+    snap = {(n, labels): v for n, _k, labels, v
+            in hooks.registry.snapshot()}
+    parsed = parse_exposition(hooks.registry.render())
+    assert snap[("jigsaw_completions_total", (("app", "a"),))] == \
+        parsed["jigsaw_completions_total"][(("app", "a"),)]
+    assert snap[("jigsaw_drops_total",
+                 (("app", "a"), ("reason", "staleness")))] == 20.0
+    # histograms flatten to _count/_sum in the snapshot
+    assert ("jigsaw_request_latency_seconds_count",
+            (("app", "a"),)) in snap
+
+
+# ---------------------------------------------------------------------------
+# push exporter delivery guarantees
+# ---------------------------------------------------------------------------
+class _FlakySink:
+    """Fails the first ``fail_n`` emit attempts, then succeeds."""
+
+    def __init__(self, fail_n):
+        self.fail_n = fail_n
+        self.attempts = 0
+        self.batches = []
+
+    def emit(self, batch):
+        self.attempts += 1
+        if self.attempts <= self.fail_n:
+            raise ConnectionError("sink down")
+        self.batches.append(batch)
+
+
+def _exporter(sink, **kw):
+    reg = MetricsRegistry()
+    reg.counter("t_total", "t", ("app",)).inc(3, "a")
+    kw.setdefault("sleep", lambda s: None)
+    return reg, PushExporter(reg, sink, **kw)
+
+
+def test_push_exporter_retries_with_backoff_then_delivers():
+    sink = _FlakySink(2)
+    delays = []
+    reg, exp = _exporter(sink, max_retries=3, backoff_s=0.05,
+                         backoff_mult=2.0, sleep=delays.append)
+    exp.scrape(now=1.0)
+    assert exp.pump() == 1
+    assert sink.batches and sink.batches[0].t_s == 1.0
+    assert delays == [0.05, 0.1]       # exponential, one per retry
+    st = exp.stats()
+    assert st["delivered"] == 1 and st["retries"] == 2
+    assert st["dropped_failed"] == 0
+
+
+def test_push_exporter_drops_after_max_retries_and_accounts():
+    sink = _FlakySink(10 ** 9)         # never recovers
+    reg, exp = _exporter(sink, max_retries=2)
+    exp.scrape()
+    exp.scrape()
+    assert exp.pump() == 0
+    st = exp.stats()
+    assert st["dropped_failed"] == 2 and st["delivered"] == 0
+    assert st["retries"] == 4          # 2 retries per batch
+    assert st["enqueued"] == st["delivered"] + st["dropped_overflow"] + \
+        st["dropped_failed"] + st["pending"]
+
+
+def test_push_exporter_bounded_queue_drops_oldest():
+    sink = _FlakySink(0)
+    reg, exp = _exporter(sink, queue_max=3)
+    for i in range(7):
+        exp.scrape(now=float(i))
+    assert exp.pending() == 3
+    st = exp.stats()
+    assert st["dropped_overflow"] == 4
+    exp.pump()
+    # freshest-wins: the delivered batches are the LAST three scrapes
+    assert [b.t_s for b in sink.batches] == [4.0, 5.0, 6.0]
+    st = exp.stats()
+    assert st["enqueued"] == 7 == st["delivered"] + \
+        st["dropped_overflow"] + st["dropped_failed"] + st["pending"]
+
+
+def test_push_sinks_render_registry_snapshot():
+    reg = MetricsRegistry()
+    reg.counter("t_reqs_total", "t", ("app",)).inc(2, "a")
+    reg.gauge("t_depth", "t").set(5)
+    batch = MetricBatch(0, 1.5, tuple(reg.snapshot()))
+    tr = ListTransport()
+    StatsdSink(tr).emit(batch)
+    lines = tr.payloads[0].splitlines()
+    assert "t_reqs_total:2|c|#app:a" in lines
+    assert "t_depth:5|g" in lines
+    tr2 = ListTransport()
+    OtlpJsonSink(tr2, service_name="svc").emit(batch)
+    doc = json.loads(tr2.payloads[0])
+    rm = doc["resourceMetrics"][0]
+    assert rm["resource"]["attributes"][0]["value"]["stringValue"] == \
+        "svc"
+    metrics = {m["name"]: m
+               for m in rm["scopeMetrics"][0]["metrics"]}
+    assert metrics["t_reqs_total"]["sum"]["isMonotonic"] is True
+    pt = metrics["t_reqs_total"]["sum"]["dataPoints"][0]
+    assert pt["asDouble"] == 2.0
+    assert pt["attributes"] == [
+        {"key": "app", "value": {"stringValue": "a"}}]
+    assert metrics["t_depth"]["gauge"]["dataPoints"][0]["asDouble"] == 5.0
+
+
+def test_push_exporter_thread_never_blocks_hot_path():
+    """The background pump against a dead sink must not stall scrape()
+    callers (bounded queue + drop-oldest)."""
+    sink = _FlakySink(10 ** 9)
+    reg, exp = _exporter(sink, queue_max=2, max_retries=1,
+                         backoff_s=0.001, interval_s=0.01,
+                         sleep=lambda s: None)
+    exp.start()
+    try:
+        for _ in range(50):
+            exp.scrape()
+    finally:
+        exp.stop(flush=True)
+    st = exp.stats()
+    assert st["pending"] == 0
+    assert st["enqueued"] == st["delivered"] + st["dropped_overflow"] + \
+        st["dropped_failed"]
+
+
+# ---------------------------------------------------------------------------
+# flight recorder
+# ---------------------------------------------------------------------------
+def test_audit_log_bounded_query_and_ndjson_roundtrip():
+    log = AuditLog(maxlen=8)
+    for i in range(12):
+        log.record("replan", float(i), app="a" if i % 2 else "b",
+                   trigger="frontend", solve_ms=1.5)
+    assert len(log) == 8 and log.evicted == 4
+    assert log.events[0].seq == 4      # oldest evicted first
+    assert len(log.query(app="a")) == 4
+    assert len(log.query(kind="replan", t0=6.0, t1=9.0)) == 4
+    assert log.query(kind="nope") == []
+    text = log.to_ndjson()
+    back = AuditLog.from_ndjson(text)
+    assert [e.to_dict() for e in back.events] == \
+        [e.to_dict() for e in log.events]
+    assert back.to_ndjson() == text
+    with pytest.raises(ValueError):
+        AuditLog(maxlen=0)
+
+
+def test_audit_explain_builds_decision_chain():
+    log = AuditLog()
+    log.record("replan", 1.0, trigger="cold")
+    log.record("ladder", 2.0, level=1, previous=0)
+    log.record("violation", 3.0, app="a", root_id=7, latency_ms=900.0)
+    log.record("replan", 9.0, trigger="frontend")   # AFTER: excluded
+    chain = log.explain(7)
+    assert [e.kind for e in chain] == ["replan", "ladder", "violation"]
+    assert log.explain(12345) == []
+
+
+def test_violated_request_explains_chaos_decision_chain(social_profiler):
+    """End-to-end §17 acceptance: in a domain-kill storm with the
+    emergency replanner attached, a violated request's root_id resolves
+    through the flight recorder to the decisions that preceded it
+    (spike -> emergency_replan -> transition)."""
+    g, prof0 = social_profiler
+    cluster = chaos_cluster()
+    prof = Profiler(g, cluster=cluster)
+    kw = dict(max_tuples_per_task=32, bb_nodes=8, bb_time_s=3.0)
+    pl = Planner(g, prof, s_avail=cluster.total_units, **kw)
+    cfg = pl.plan(30.0)
+    assert cfg is not None
+    # 40 rps over a 30-rps plan: the kill + overdrive sustain enough
+    # drop pressure that the slow-burn rule fires during the run
+    storm = Scenario.poisson(40.0, duration_s=16.0,
+                             warmup_s=1.0).with_chaos(
+        DomainFailureEvent(at_s=3.0, domain="r0"))
+    audit = AuditLog(maxlen=1 << 14)
+    hooks = Instrumentation(slo=SloPlane(), audit=audit)
+    epl = Planner(g, prof, s_avail=cluster.total_units,
+                  stickiness=0.05, **kw)
+    mon = EmergencyReplanner(Frontend(g), planner=epl,
+                             reconfig=TransitionPlanner(cluster, g),
+                             planned_for_rps=30.0, hooks=hooks)
+    # ONE monitor slot: the SloMonitor evaluates the burn-rate rules on
+    # the cadence, then delegates to the emergency replanner
+    m = ClusterRuntime(g, cfg, SimBackend(), seed=0, cluster=cluster,
+                       monitor=SloMonitor(hooks.slo, interval_s=0.5,
+                                          inner=mon),
+                       hooks=hooks).run(storm)
+    # deadline-driven early drops ARE the violation mode of this
+    # simulator (violations = missed + dropped; late completions are
+    # pre-empted by the §3.3 early-drop pass)
+    assert mon.replans >= 1 and m.dropped > 0
+    kinds = {e.kind for e in audit.events}
+    assert {"spike", "emergency_replan", "transition",
+            "violation"} <= kinds
+    # every fan-weighted drop is audited as a violation, root-signed
+    viols = [e for e in audit.events if e.kind == "violation"]
+    assert sum(e.detail["n"] for e in viols) == m.dropped
+    # the emergency replan carries its why (dead capacity) + what (diff)
+    er = next(e for e in audit.events if e.kind == "emergency_replan")
+    assert er.detail["dead_units"], "rescue must name the dead pools"
+    assert er.detail["actions"] >= 1
+    # pick a violation AFTER the rescue: its chain contains the rescue
+    viol = next(e for e in audit.events
+                if e.kind == "violation" and e.t_s > er.t_s)
+    assert viol.root_id is not None
+    chain = audit.explain(viol.root_id)
+    chain_kinds = [e.kind for e in chain]
+    assert "emergency_replan" in chain_kinds
+    assert "violation" in chain_kinds
+    assert all(e.t_s <= viol.t_s + 1e-9 for e in chain)
+    # the NDJSON download round-trips the full chain
+    back = AuditLog.from_ndjson(audit.to_ndjson())
+    assert [e.to_dict() for e in back.explain(viol.root_id)] == \
+        [e.to_dict() for e in chain]
+    # the storm also lights the burn-rate alert DURING the run
+    assert ("latency_slow_burn", "") in hooks.slo.first_fired

@@ -7,7 +7,12 @@ Two findings inside the async packages (``layers.toml [asyncio]``):
   task interleaves at the suspension point and the write clobbers its
   update.  Events are linearized in execution order (loop bodies are
   replayed twice so a cross-iteration read→await→write is seen);
-  anything under an ``async with <...lock...>`` is suppressed.
+  anything under an ``async with <...lock...>`` is suppressed.  The
+  lock test is name-based (``lock``/``mutex``/``semaphore`` in the
+  context expression) PLUS a per-function dataflow step: a parameter
+  with a lock-ish annotation or a local bound from a lock-ish
+  expression (``guard = self._mutex``) counts even when the bare name
+  itself says nothing (``async with guard:``).
 * **blocking call in async def** — ``time.sleep``, sync ``socket`` /
   ``subprocess`` / ``requests`` / ``urllib`` calls, or builtin
   ``open``: these stall the whole event loop, not just the caller.
@@ -15,7 +20,7 @@ Two findings inside the async packages (``layers.toml [asyncio]``):
 from __future__ import annotations
 
 import ast
-from typing import List, Optional, Tuple
+from typing import List, Optional, Set, Tuple
 
 from tools.analyze.core import (Finding, ImportMap, Project, qualname_at,
                                 register)
@@ -25,12 +30,43 @@ PASS = "asyncio_race"
 _BLOCKING_ORIGINS = ("time.sleep", "socket.", "subprocess.",
                      "requests.", "urllib.request.")
 
+# substrings that mark an expression/annotation as a mutual-exclusion
+# primitive for the suppression test below
+_LOCKISH = ("lock", "mutex", "semaphore")
+
 # event kinds in the linearized trace of an async function body
 _AWAIT, _READ, _WRITE = "await", "read", "write"
 
 
-def _is_lock_ctx(item: ast.withitem) -> bool:
-    return "lock" in ast.unparse(item.context_expr).lower()
+def _lockish(text: str) -> bool:
+    low = text.lower()
+    return any(w in low for w in _LOCKISH)
+
+
+def _is_lock_ctx(item: ast.withitem, lock_names: Set[str]) -> bool:
+    expr = item.context_expr
+    if isinstance(expr, ast.Name) and expr.id in lock_names:
+        return True
+    return _lockish(ast.unparse(expr))
+
+
+def _lock_bound_names(func: ast.AsyncFunctionDef) -> Set[str]:
+    """Names inside ``func`` that demonstrably hold a lock: parameters
+    with a lock-ish annotation, and locals assigned from a lock-ish
+    expression (``guard = self._mutex``, ``sem = asyncio.Semaphore(4)``).
+    """
+    names: Set[str] = set()
+    a = func.args
+    for arg in (*a.posonlyargs, *a.args, *a.kwonlyargs):
+        if arg.annotation is not None and \
+                _lockish(ast.unparse(arg.annotation)):
+            names.add(arg.arg)
+    for sub in ast.walk(func):
+        if isinstance(sub, ast.Assign) and len(sub.targets) == 1 and \
+                isinstance(sub.targets[0], ast.Name) and \
+                _lockish(ast.unparse(sub.value)):
+            names.add(sub.targets[0].id)
+    return names
 
 
 def _self_attr(node: ast.AST) -> Optional[str]:
@@ -44,10 +80,10 @@ def _self_attr(node: ast.AST) -> Optional[str]:
 
 
 def _linearize(body, events: List[Tuple[str, Optional[str], int]],
-               locked: bool) -> None:
+               locked: bool, lock_names: Set[str]) -> None:
     """Append (kind, attr, line) events for ``body`` in execution order."""
     for stmt in body:
-        _linearize_stmt(stmt, events, locked)
+        _linearize_stmt(stmt, events, locked, lock_names)
 
 
 def _expr_events(node: ast.AST, events, locked: bool) -> None:
@@ -78,7 +114,8 @@ def _expr_events(node: ast.AST, events, locked: bool) -> None:
             _expr_events(child, events, locked)
 
 
-def _linearize_stmt(stmt: ast.stmt, events, locked: bool) -> None:
+def _linearize_stmt(stmt: ast.stmt, events, locked: bool,
+                    lock_names: Set[str]) -> None:
     if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
                          ast.ClassDef)):
         return                      # nested defs run on their own
@@ -89,26 +126,27 @@ def _linearize_stmt(stmt: ast.stmt, events, locked: bool) -> None:
         # replay the body twice: catches read (iter N) -> await ->
         # write (iter N+1) interleavings
         for _ in range(2):
-            _linearize(stmt.body, events, locked)
-        _linearize(stmt.orelse, events, locked)
+            _linearize(stmt.body, events, locked, lock_names)
+        _linearize(stmt.orelse, events, locked, lock_names)
         return
     if isinstance(stmt, (ast.With, ast.AsyncWith)):
-        now_locked = locked or any(_is_lock_ctx(i) for i in stmt.items)
+        now_locked = locked or any(_is_lock_ctx(i, lock_names)
+                                   for i in stmt.items)
         for i in stmt.items:
             _expr_events(i.context_expr, events, locked)
-        _linearize(stmt.body, events, now_locked)
+        _linearize(stmt.body, events, now_locked, lock_names)
         return
     if isinstance(stmt, ast.If):
         _expr_events(stmt.test, events, locked)
-        _linearize(stmt.body, events, locked)
-        _linearize(stmt.orelse, events, locked)
+        _linearize(stmt.body, events, locked, lock_names)
+        _linearize(stmt.orelse, events, locked, lock_names)
         return
     if isinstance(stmt, ast.Try):
-        _linearize(stmt.body, events, locked)
+        _linearize(stmt.body, events, locked, lock_names)
         for h in stmt.handlers:
-            _linearize(h.body, events, locked)
-        _linearize(stmt.orelse, events, locked)
-        _linearize(stmt.finalbody, events, locked)
+            _linearize(h.body, events, locked, lock_names)
+        _linearize(stmt.orelse, events, locked, lock_names)
+        _linearize(stmt.finalbody, events, locked, lock_names)
         return
     # assignments: evaluate RHS (reads/awaits) before target writes
     if isinstance(stmt, ast.Assign):
@@ -162,7 +200,7 @@ def run(project: Project, config) -> List[Finding]:
                         "sleep / to_thread / non-blocking I/O)"))
             # ---- await-spanning read-modify-write -------------------
             events: List[Tuple[str, Optional[str], int]] = []
-            _linearize(node.body, events, False)
+            _linearize(node.body, events, False, _lock_bound_names(node))
             reported = set()
             seen_read: dict = {}          # attr -> line of earliest read
             awaited_after_read: set = set()

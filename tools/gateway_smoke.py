@@ -17,6 +17,14 @@ What it asserts, end to end (no mocks — real sockets, real event loop):
 4. ``/trace`` is valid Chrome-trace JSON whose span names cover the
    queue/service/hop triple, and the file written to ``--trace-out``
    round-trips through ``json.load``.
+5. ``/alerts`` serves the SLO error-budget plane and its latency
+   ledger balances EXACTLY against the load report's accounting
+   (good + bad == completions + all drops, admission included).
+6. ``/audit`` serves the control-plane flight recorder as JSON and as
+   NDJSON, with one admission event per rejected submission.
+7. An in-process :class:`PushExporter` scrape through a statsd sink
+   delivers one batch whose ``jigsaw_arrivals_total`` lines equal the
+   load report's accepted submissions per app.
 """
 from __future__ import annotations
 
@@ -31,6 +39,8 @@ sys.path.insert(0, "src")
 from repro.gateway import http_submitter, open_loop  # noqa: E402
 from repro.gateway.server import (GatewayHTTPServer,  # noqa: E402
                                   build_demo_gateway)
+from repro.obs import (ListTransport, PushExporter,  # noqa: E402
+                       StatsdSink)
 from repro.obs.metrics import parse_exposition  # noqa: E402
 
 FAILURES: list = []
@@ -119,6 +129,60 @@ async def smoke(args) -> None:
         with open(args.trace_out) as f:
             check(len(json.load(f)["traceEvents"]) == len(events),
                   f"trace file round-trips ({args.trace_out})")
+
+        # --- /alerts: the SLO error-budget plane over the live ledger
+        status, text = await _fetch(srv.host, srv.port, "GET", "/alerts")
+        check(status == 200, "/alerts answers 200")
+        alerts = json.loads(text)
+        check(len(alerts["rules"]) >= 4,
+              f"/alerts lists burn-rate rules ({len(alerts['rules'])})")
+        check(set(alerts["budgets"]) == {"latency", "accuracy"},
+              "/alerts reports latency+accuracy budgets")
+        drops = fams.get("jigsaw_drops_total", {})
+        for app, st in rep["apps"].items():
+            g_led, b_led = hooks.slo.latency.totals(app)
+            c = comp.get((("app", app),), 0.0)
+            d = sum(v for k, v in drops.items() if ("app", app) in k)
+            check(g_led + b_led == c + d,
+                  f"{app}: latency ledger balances: good {g_led:.0f} + "
+                  f"bad {b_led:.0f} == completions {c:.0f} + drops "
+                  f"{d:.0f}")
+
+        # --- /audit: the flight recorder, NDJSON over HTTP ----------
+        status, text = await _fetch(srv.host, srv.port, "GET", "/audit")
+        check(status == 200, "/audit answers 200")
+        events = [json.loads(ln) for ln in text.splitlines()]
+        n_adm = sum(1 for ev in events if ev["kind"] == "admission")
+        check(n_adm == tot["rejected"],
+              f"audit admission events {n_adm} == rejected "
+              f"{tot['rejected']}")
+        status, text = await _fetch(srv.host, srv.port, "GET",
+                                    "/audit?kind=admission")
+        check(status == 200 and all(
+                  json.loads(ln)["kind"] == "admission"
+                  for ln in text.splitlines()),
+              "/audit?kind= filters the flight recorder")
+
+        # --- push path: same registry, statsd sink, in-process ------
+        transport = ListTransport()
+        exporter = PushExporter(hooks.registry, StatsdSink(transport))
+        exporter.scrape()
+        exporter.pump()
+        stats = exporter.stats()
+        check(stats["delivered"] == 1 and len(transport.payloads) == 1,
+              f"push exporter delivered one batch ({stats})")
+        arr_push = {}
+        for ln in transport.payloads[0].splitlines():
+            if ln.startswith("jigsaw_arrivals_total:"):
+                head, _, tags = ln.partition("|#")
+                val = float(head.split(":")[1].split("|")[0])
+                labels = dict(t.split(":", 1) for t in tags.split(","))
+                arr_push[labels["app"]] = val
+        for app, st in rep["apps"].items():
+            accepted = st["submitted"] - st["rejected"]
+            check(arr_push.get(app) == accepted,
+                  f"{app}: pushed arrivals {arr_push.get(app)} == "
+                  f"accepted {accepted}")
 
         status, _ = await _fetch(srv.host, srv.port, "GET", "/nope")
         check(status == 404, "unknown route answers 404")
